@@ -1,0 +1,49 @@
+"""§IV-C complexity analysis — allocator wall-time vs device count K.
+
+Derived: solver time per call for the SCA-based Algorithm 1 vs the
+low-complexity §IV-D barrier method (paper: O(K^3.5) vs O(K m)).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from common import emit
+
+import jax
+from repro.configs.base import FLConfig
+from repro.core import allocation as AL
+from repro.core import channel as CH
+
+
+def _problem(k, seed=0):
+    fl = FLConfig(tx_power_dbm=-25.0)
+    key = jax.random.PRNGKey(seed)
+    d = CH.sample_distances(key, k, 500.0)
+    gains = CH.path_gain(np.asarray(d), fl.path_loss_exp)
+    p_w = np.full(k, fl.tx_power_w)
+    rng = np.random.RandomState(seed)
+    g2 = np.abs(rng.randn(k)) + 0.2
+    gb2 = np.abs(rng.randn(k)) * 0.4 + 0.05
+    v = np.sqrt(g2 * gb2) * rng.uniform(0, 1, k)
+    d2 = np.abs(rng.randn(k)) * 0.05
+    return AL.problem_from_stats(g2, gb2, v, d2, gains, p_w, 60000, fl)
+
+
+def main() -> None:
+    for k in (10, 20, 40, 80):
+        prob = _problem(k)
+        for method in ('alternating', 'barrier'):
+            reps = 1 if method == 'alternating' else 3
+            t0 = time.time()
+            for _ in range(reps):
+                sol = AL.solve(prob, method,
+                               max_iters=2 if method == 'alternating' else 6)
+            dt = (time.time() - t0) / reps
+            emit(f'alloc_K{k}_{method}', 1e6 * dt,
+                 f'objective={sol.objective:.4f}')
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,26 @@
+"""Fig. 10 — test accuracy vs quantization bits b at two power levels.
+
+The paper's claim: accuracy peaks at an optimal b (more bits = better
+fidelity but longer modulus packets = more transmission errors), and the
+peak shifts right with more power.
+"""
+from __future__ import annotations
+
+from common import emit, final_acc, run_fl
+
+BITS = (1, 2, 3, 5, 8)
+POWERS = (-36.0, -28.0)
+
+
+def main() -> None:
+    for p in POWERS:
+        for b in BITS:
+            name = f'fig10_P{p:g}_b{b}'
+            h, row = run_fl(name, transport='spfl', quant_bits=b,
+                            tx_power_dbm=p)
+            emit(row['name'], row['us_per_call'],
+                 f'final_acc={final_acc(h):.4f}')
+
+
+if __name__ == '__main__':
+    main()

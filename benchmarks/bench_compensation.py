@@ -1,0 +1,20 @@
+"""Fig. 5 — compensation designs: historical global vs historical local
+gradient modulus (vs zeros/seeded-random ablations)."""
+from __future__ import annotations
+
+from common import emit, final_acc, run_fl
+
+POWER = -34.0
+
+
+def main() -> None:
+    for comp in ('last_global', 'last_local', 'zeros', 'seeded_random'):
+        name = f'fig5_comp_{comp}'
+        h, row = run_fl(name, transport='spfl', compensation=comp,
+                        tx_power_dbm=POWER)
+        emit(row['name'], row['us_per_call'],
+             f'final_acc={final_acc(h):.4f};final_loss={h.loss[-1]:.4f}')
+
+
+if __name__ == '__main__':
+    main()

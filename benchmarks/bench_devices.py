@@ -1,0 +1,23 @@
+"""Fig. 9 — test accuracy vs the number of participating devices K
+(fixed total bandwidth -> per-device band shrinks as K grows)."""
+from __future__ import annotations
+
+from common import PER_DEVICE, emit, final_acc, run_fl
+
+KS = (5, 10, 20, 30)
+METHODS = ('spfl', 'dds', 'scheduling')
+POWER = -30.0
+
+
+def main() -> None:
+    for k in KS:
+        for kind in METHODS:
+            name = f'fig9_K{k}_{kind}'
+            h, row = run_fl(name, n_devices=k, transport=kind,
+                            tx_power_dbm=POWER)
+            emit(row['name'], row['us_per_call'],
+                 f'final_acc={final_acc(h):.4f}')
+
+
+if __name__ == '__main__':
+    main()

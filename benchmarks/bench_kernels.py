@@ -1,0 +1,68 @@
+"""Kernel throughput: Pallas (interpret on CPU / compiled on TPU) vs the
+pure-jnp reference, plus the fused-roundtrip HBM-traffic model.
+
+On CPU the interesting derived numbers are the modeled TPU HBM bytes per
+element (the §Perf fusion argument); wall-times are interpret-mode and not
+TPU-representative.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from common import emit
+
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, reps=5):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / reps
+
+
+def main() -> None:
+    n = 1 << 20
+    key = jax.random.PRNGKey(0)
+    g = jax.random.normal(key, (n,)) * 0.01
+    rand = jax.random.uniform(jax.random.fold_in(key, 1), (n,))
+    gbar = jnp.abs(jax.random.normal(jax.random.fold_in(key, 2), (n,)))
+    gmin = float(jnp.min(jnp.abs(g)))
+    gmax = float(jnp.max(jnp.abs(g)))
+
+    ref_q = jax.jit(lambda g, r: ref.quantize_ref(g, r, gmin, gmax, 3))
+    t = _time(ref_q, g, rand)
+    emit('kernel_quantize_ref_jnp', 1e6 * t, f'elems={n}')
+
+    t = _time(lambda g, r: ops.stochastic_quantize_flat(
+        g, r, gmin, gmax, 3), g, rand)
+    emit('kernel_quantize_pallas_interpret', 1e6 * t, f'elems={n}')
+
+    ref_rt = jax.jit(lambda g, r, b: ref.roundtrip_ref(
+        g, r, b, gmin, gmax, 1.0, 1.0, 3))
+    t = _time(ref_rt, g, rand, gbar)
+    emit('kernel_roundtrip_ref_jnp', 1e6 * t, f'elems={n}')
+
+    t = _time(lambda g, r, b: ops.spfl_roundtrip_flat(
+        g, r, b, gmin, gmax, 1.0, 1.0, 3), g, rand, gbar)
+    emit('kernel_roundtrip_pallas_interpret', 1e6 * t, f'elems={n}')
+
+    # modeled TPU HBM bytes/element (the fusion win in §Perf):
+    # two-stage: quantize (read f32 g + f32 rand, write i8 + i32)
+    #          + dequant (read i8 + i32 + f32 gbar, write f32)
+    two_stage = (4 + 4 + 1 + 4) + (1 + 4 + 4 + 4)
+    fused = (4 + 4 + 4 + 4)       # read g, rand, gbar; write f32 out
+    emit('kernel_hbm_bytes_two_stage', 0.0, f'bytes_per_elem={two_stage}')
+    emit('kernel_hbm_bytes_fused', 0.0,
+         f'bytes_per_elem={fused};reduction={two_stage / fused:.2f}x')
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,22 @@
+"""Fig. 8 — test accuracy vs the transmission latency threshold tau."""
+from __future__ import annotations
+
+from common import emit, final_acc, run_fl
+
+TAUS = (0.05, 0.1, 0.25, 0.5)
+METHODS = ('spfl', 'dds', 'onebit')
+POWER = -30.0
+
+
+def main() -> None:
+    for tau in TAUS:
+        for kind in METHODS:
+            name = f'fig8_tau{tau:g}_{kind}'
+            h, row = run_fl(name, transport=kind, latency_s=tau,
+                            tx_power_dbm=POWER)
+            emit(row['name'], row['us_per_call'],
+                 f'final_acc={final_acc(h):.4f}')
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,29 @@
+"""Fig. 4 — SCA-based vs low-complexity (§IV-D) allocation, K=20 and K=30.
+
+Derived: final accuracy + mean allocator wall-time per round (the paper's
+point: the barrier method matches accuracy at a fraction of the cost for
+large K).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from common import emit, final_acc, run_fl
+
+POWER = -30.0
+
+
+def main() -> None:
+    for k in (20, 30):
+        for alloc in ('alternating', 'barrier'):
+            name = f'fig4_K{k}_{alloc}'
+            h, row = run_fl(name, n_devices=k, allocator=alloc,
+                            transport='spfl', tx_power_dbm=POWER,
+                            rounds=max(6, int(0.5 * __import__("common").ROUNDS)))
+            alloc_ms = 1e3 * float(np.mean(h.alloc_time_s[1:]))
+            emit(row['name'], row['us_per_call'],
+                 f'final_acc={final_acc(h):.4f};alloc_ms={alloc_ms:.1f}')
+
+
+if __name__ == '__main__':
+    main()

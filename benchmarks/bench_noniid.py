@@ -1,0 +1,27 @@
+"""Fig. 3 — convergence under varying non-IID levels (Dirichlet 0.1/0.01).
+
+Derived: final test accuracy per method; the paper's headline is SP-FL
+closest to error-free and above Scheduling/DDS/One-bit.
+"""
+from __future__ import annotations
+
+from common import emit, final_acc, run_fl
+
+METHODS = ('error_free', 'spfl', 'dds', 'onebit', 'scheduling')
+# the paper's §V default transmit power (its Figs 3-6 operating point);
+# the full power sweep lives in bench_power
+POWER = -4.0
+
+
+def main() -> None:
+    for alpha in (0.1, 0.01):
+        for kind in METHODS:
+            name = f'fig3_alpha{alpha}_{kind}'
+            h, row = run_fl(name, transport=kind, dirichlet_alpha=alpha,
+                            tx_power_dbm=POWER)
+            emit(row['name'], row['us_per_call'],
+                 f'final_acc={final_acc(h):.4f}')
+
+
+if __name__ == '__main__':
+    main()

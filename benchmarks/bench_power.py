@@ -1,0 +1,25 @@
+"""Fig. 7 — test accuracy vs per-device transmit power.
+
+The paper's key figure: SP-FL degrades gracefully as power shrinks
+(sign-prioritization), one-bit is competitive at very low power, DDS needs
+abundant power, error-free is the ceiling.
+"""
+from __future__ import annotations
+
+from common import emit, final_acc, run_fl
+
+POWERS = (-44.0, -38.0, -32.0, -24.0, -4.0)
+METHODS = ('error_free', 'spfl', 'dds', 'onebit', 'scheduling')
+
+
+def main() -> None:
+    for p in POWERS:
+        for kind in METHODS:
+            name = f'fig7_P{p:g}_{kind}'
+            h, row = run_fl(name, transport=kind, tx_power_dbm=p)
+            emit(row['name'], row['us_per_call'],
+                 f'final_acc={final_acc(h):.4f}')
+
+
+if __name__ == '__main__':
+    main()

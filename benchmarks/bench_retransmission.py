@@ -1,0 +1,22 @@
+"""Fig. 6 — sign-packet retransmission: SP-FL vs SP-FL+retx vs baselines
+under a constrained uplink."""
+from __future__ import annotations
+
+import numpy as np
+
+from common import emit, final_acc, run_fl
+
+POWER = -36.0
+
+
+def main() -> None:
+    for kind in ('spfl', 'spfl_retx', 'dds'):
+        name = f'fig6_{kind}'
+        h, row = run_fl(name, transport=kind, tx_power_dbm=POWER)
+        sign_rate = float(np.mean(h.sign_ok_frac[1:]))
+        emit(row['name'], row['us_per_call'],
+             f'final_acc={final_acc(h):.4f};sign_ok={sign_rate:.3f}')
+
+
+if __name__ == '__main__':
+    main()

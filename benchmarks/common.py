@@ -1,0 +1,54 @@
+"""Shared benchmark harness.
+
+Every paper figure gets one module with a ``main()`` that prints CSV rows
+``name,us_per_call,derived`` (us_per_call = mean wall-time per FL round in
+microseconds; derived = the figure's headline metric).
+
+Scale via env:
+  BENCH_ROUNDS (default 24), BENCH_DEVICES (8), BENCH_PER_DEVICE (80),
+  BENCH_FULL=1 -> the paper's §V constants (K=20, 2000 samples/device,
+  many rounds) for offline full reproductions.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), '..', 'src'))
+
+from repro.configs.base import FLConfig  # noqa: E402
+from repro.training.fl_loop import build_simulator  # noqa: E402
+
+FULL = os.environ.get('BENCH_FULL', '0') == '1'
+ROUNDS = int(os.environ.get('BENCH_ROUNDS', '150' if FULL else '24'))
+DEVICES = int(os.environ.get('BENCH_DEVICES', '20' if FULL else '8'))
+PER_DEVICE = int(os.environ.get('BENCH_PER_DEVICE',
+                                '2000' if FULL else '80'))
+N_TEST = int(os.environ.get('BENCH_TEST', '4000' if FULL else '400'))
+
+
+def run_fl(name: str, rounds: int = None, compute_bound: bool = False,
+           **fl_kwargs):
+    """Build + run one FL configuration; returns (history, row)."""
+    base = dict(n_devices=DEVICES, allocator='barrier', seed=0)
+    base.update(fl_kwargs)
+    iid = base.pop('_iid', False)
+    fl = FLConfig(**base)
+    sim = build_simulator(fl, per_device=PER_DEVICE, n_test=N_TEST,
+                          iid=iid)
+    t0 = time.time()
+    h = sim.run(rounds or ROUNDS, compute_bound=compute_bound)
+    dt = time.time() - t0
+    n = rounds or ROUNDS
+    return h, dict(name=name, us_per_call=1e6 * dt / n)
+
+
+def emit(name: str, us_per_call: float, derived):
+    print(f'{name},{us_per_call:.1f},{derived}', flush=True)
+
+
+def final_acc(h) -> float:
+    return float(np.mean(h.test_acc[-3:]))

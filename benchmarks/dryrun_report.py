@@ -1,0 +1,76 @@
+"""Render EXPERIMENTS.md §Dry-run from the dry-run artifacts.
+
+  PYTHONPATH=src python benchmarks/dryrun_report.py > experiments/dryrun.md
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), '..', 'src'))
+
+from repro.configs.registry import ARCHITECTURES  # noqa: E402
+from repro.configs.base import INPUT_SHAPES  # noqa: E402
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), '..', 'experiments',
+                          'dryrun')
+
+
+def fmt_bytes(n):
+    if n is None:
+        return '—'
+    for unit in ('B', 'KB', 'MB', 'GB', 'TB'):
+        if abs(n) < 1024:
+            return f'{n:.1f}{unit}'
+        n /= 1024
+    return f'{n:.1f}PB'
+
+
+def main() -> None:
+    records = {}
+    for path in glob.glob(os.path.join(DRYRUN_DIR, '*.json')):
+        with open(path) as f:
+            rec = json.load(f)
+        records[(rec['arch'], rec['shape'], rec['mesh'])] = rec
+
+    print('### §Dry-run — lower+compile status per '
+          '(arch x shape x mesh)\n')
+    print('| arch | shape | mesh | status | step | params/dev | temp/dev |'
+          ' collectives (per-dev bytes, full graph) |')
+    print('|---|---|---|---|---|---|---|---|')
+    n_ok = n_skip = n_missing = 0
+    for arch in ARCHITECTURES:
+        for shape in INPUT_SHAPES:
+            for mesh in ('pod16x16', 'pod2x16x16'):
+                rec = records.get((arch, shape, mesh))
+                if rec is None:
+                    n_missing += 1
+                    print(f'| {arch} | {shape} | {mesh} | MISSING | | | | |')
+                    continue
+                if not rec.get('applicable'):
+                    n_skip += 1
+                    print(f'| {arch} | {shape} | {mesh} | SKIP '
+                          f'(sub-quadratic rule) | | | | |')
+                    continue
+                n_ok += 1
+                mem = rec.get('memory_analysis') or {}
+                arg = mem.get('argument_size_in_bytes') \
+                    if isinstance(mem, dict) else None
+                tmp = mem.get('temp_size_in_bytes') \
+                    if isinstance(mem, dict) else None
+                coll = rec.get('collectives', {})
+                cstr = ' '.join(
+                    f'{k.split("-")[-1] if False else k}:{fmt_bytes(v["bytes"])}'
+                    for k, v in coll.items() if v['count'])
+                print(f'| {arch} | {shape} | {mesh} | OK '
+                      f'({rec.get("compile_s", 0):.0f}s) | '
+                      f'{rec.get("step", "")} | {fmt_bytes(arg)} | '
+                      f'{fmt_bytes(tmp)} | {cstr or "—"} |')
+    print(f'\nOK: {n_ok}, skipped (long_500k rule): {n_skip}, '
+          f'missing: {n_missing}')
+
+
+if __name__ == '__main__':
+    main()

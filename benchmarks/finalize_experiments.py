@@ -1,0 +1,45 @@
+"""Patch EXPERIMENTS.md placeholders with the generated tables.
+
+  PYTHONPATH=src python benchmarks/finalize_experiments.py
+"""
+from __future__ import annotations
+
+import io
+import os
+import subprocess
+import sys
+
+ROOT = os.path.join(os.path.dirname(__file__), '..')
+
+
+def capture(script: str) -> str:
+    env = dict(os.environ)
+    env['PYTHONPATH'] = os.path.join(ROOT, 'src')
+    out = subprocess.run(
+        [sys.executable, os.path.join(ROOT, 'benchmarks', script)],
+        capture_output=True, text=True, env=env)
+    if out.returncode != 0:
+        raise RuntimeError(f'{script} failed:\n{out.stderr[-2000:]}')
+    return out.stdout
+
+
+def main() -> None:
+    path = os.path.join(ROOT, 'EXPERIMENTS.md')
+    with open(path) as f:
+        text = f.read()
+
+    dr = capture('dryrun_report.py')
+    text = text.replace('<!-- DRYRUN_TABLE -->', dr)
+
+    capture('roofline.py')   # writes experiments/roofline.md
+    with open(os.path.join(ROOT, 'experiments', 'roofline.md')) as f:
+        rl = f.read()
+    text = text.replace('<!-- ROOFLINE_TABLE -->', rl)
+
+    with open(path, 'w') as f:
+        f.write(text)
+    print('EXPERIMENTS.md updated')
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,149 @@
+"""Roofline analysis — deliverable (g).
+
+Reads the dry-run artifacts (experiments/dryrun/*.json) and derives, per
+(arch x shape) on the single-pod mesh:
+
+  compute term    = HLO_FLOPs_per_chip / peak_FLOP/s
+  memory term     = HLO_bytes_per_chip / HBM_bw
+  collective term = collective_bytes_per_chip / link_bw
+
+(cost_analysis and the SPMD HLO are per-partition, so dividing the
+per-chip quantity by the per-chip rate equals total/(chips * rate).)
+
+Also reports MODEL_FLOPS = 6*N(active)*D for training (2*N*D for a decode
+token / prefill), the MODEL/HLO utilization ratio, the dominant term, and
+one sentence on what would move it.
+
+Writes experiments/roofline.md and prints a CSV summary.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), '..', 'src'))
+
+from repro.configs.registry import ARCHITECTURES, get_arch, get_shape  # noqa: E402
+from repro.configs.base import INPUT_SHAPES  # noqa: E402
+
+# TPU v5e hardware constants (per harness spec)
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # B/s per chip
+LINK_BW = 50e9               # B/s per ICI link
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), '..', 'experiments',
+                          'dryrun')
+OUT_MD = os.path.join(os.path.dirname(__file__), '..', 'experiments',
+                      'roofline.md')
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    cfg = get_arch(arch)
+    shape = get_shape(shape_name)
+    n_active = cfg.active_param_count()
+    if shape.kind == 'train':
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == 'prefill':
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch
+
+
+def suggestion(dom: str, arch: str, shape: str) -> str:
+    if dom == 'collective':
+        return ('reduce cross-client all-reduce payload (quantized/int8 '
+                'uplink aggregation; SP-FL packets are already 1+b bits/dim)')
+    if dom == 'memory':
+        return ('raise arithmetic intensity: larger per-chip tiles, fused '
+                'elementwise transport (kernels/roundtrip), bf16 '
+                'activations, fewer remat passes')
+    return ('reduce redundant compute: cheaper remat policy, avoid padded '
+            'heads, larger per-device batch to amortize collectives')
+
+
+def analyze(record: dict) -> dict | None:
+    if not record.get('applicable'):
+        return None
+    est = record.get('hlo_estimate')
+    if not est:
+        return None
+    cost = est['cost_analysis']
+    flops = float(cost.get('flops', 0.0))
+    mem_bytes = float(cost.get('bytes accessed', 0.0))
+    coll = est['collectives']
+    coll_bytes = sum(v['bytes'] for v in coll.values())
+    t_c = flops / PEAK_FLOPS
+    t_m = mem_bytes / HBM_BW
+    t_l = coll_bytes / LINK_BW
+    dom = max((('compute', t_c), ('memory', t_m), ('collective', t_l)),
+              key=lambda kv: kv[1])[0]
+    n_dev = record.get('n_devices', 256)
+    mf = model_flops(record['arch'], record['shape'])
+    hlo_total = flops * n_dev
+    return {
+        'arch': record['arch'], 'shape': record['shape'],
+        'compute_s': t_c, 'memory_s': t_m, 'collective_s': t_l,
+        'dominant': dom,
+        'model_flops': mf,
+        'hlo_flops_total': hlo_total,
+        'useful_ratio': mf / hlo_total if hlo_total else float('nan'),
+        'coll_bytes_per_chip': coll_bytes,
+        'coll_detail': {k: v['bytes'] for k, v in coll.items()
+                        if v['bytes']},
+        'suggestion': suggestion(dom, record['arch'], record['shape']),
+    }
+
+
+def main() -> None:
+    rows = []
+    skips = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR,
+                                              '*__pod16x16.json'))):
+        with open(path) as f:
+            rec = json.load(f)
+        if not rec.get('applicable'):
+            skips.append((rec['arch'], rec['shape'], rec['skip_reason']))
+            continue
+        row = analyze(rec)
+        if row:
+            rows.append(row)
+
+    order = {n: i for i, n in enumerate(ARCHITECTURES)}
+    sorder = {n: i for i, n in enumerate(INPUT_SHAPES)}
+    rows.sort(key=lambda r: (order.get(r['arch'], 99),
+                             sorder.get(r['shape'], 9)))
+
+    lines = ['# Roofline — single-pod (16x16 = 256 chips, TPU v5e terms)',
+             '',
+             '| arch | shape | compute s | memory s | collective s | '
+             'dominant | MODEL/HLO | next move |',
+             '|---|---|---|---|---|---|---|---|']
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} | "
+            f"{r['memory_s']:.3e} | {r['collective_s']:.3e} | "
+            f"**{r['dominant']}** | {r['useful_ratio']:.3f} | "
+            f"{r['suggestion']} |")
+    lines.append('')
+    lines.append('## Skipped pairs')
+    for a, s, why in skips:
+        lines.append(f'* {a} x {s}: {why}')
+    with open(OUT_MD, 'w') as f:
+        f.write('\n'.join(lines) + '\n')
+
+    for r in rows:
+        print(f"roofline_{r['arch']}_{r['shape']},0.0,"
+              f"dom={r['dominant']};compute_s={r['compute_s']:.3e};"
+              f"memory_s={r['memory_s']:.3e};"
+              f"collective_s={r['collective_s']:.3e};"
+              f"useful={r['useful_ratio']:.3f}", flush=True)
+    print(f'# wrote {OUT_MD} ({len(rows)} rows, {len(skips)} skips)',
+          flush=True)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,57 @@
+"""Benchmark suite entry point — one module per paper figure/table.
+
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.py).
+
+  PYTHONPATH=src python -m benchmarks.run            # everything
+  PYTHONPATH=src python -m benchmarks.run fig7 bound # substring filter
+Scale via BENCH_ROUNDS / BENCH_DEVICES / BENCH_PER_DEVICE / BENCH_FULL=1.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+import traceback
+
+sys.path.insert(0, os.path.dirname(__file__))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), '..', 'src'))
+
+SUITES = [
+    ('bound', 'bench_bound'),                # Fig 2
+    ('noniid', 'bench_noniid'),              # Fig 3
+    ('lowcomplexity', 'bench_lowcomplexity'),  # Fig 4
+    ('compensation', 'bench_compensation'),  # Fig 5
+    ('retransmission', 'bench_retransmission'),  # Fig 6
+    ('power', 'bench_power'),                # Fig 7
+    ('latency', 'bench_latency'),            # Fig 8
+    ('devices', 'bench_devices'),            # Fig 9
+    ('bits', 'bench_bits'),                  # Fig 10
+    ('allocation', 'bench_allocation'),      # §IV-C complexity
+    ('kernels', 'bench_kernels'),            # Pallas hot path
+    ('roofline', 'roofline'),                # deliverable (g)
+]
+
+
+def main() -> None:
+    filters = [a for a in sys.argv[1:] if not a.startswith('-')]
+    print('name,us_per_call,derived')
+    failures = 0
+    for tag, module in SUITES:
+        if filters and not any(f in tag for f in filters):
+            continue
+        t0 = time.time()
+        print(f'# --- {tag} ({module}) ---', flush=True)
+        try:
+            mod = __import__(module)
+            mod.main()
+        except Exception as e:
+            failures += 1
+            print(f'# {tag} FAILED: {e}', flush=True)
+            traceback.print_exc()
+        print(f'# {tag} done in {time.time() - t0:.1f}s', flush=True)
+    if failures:
+        raise SystemExit(f'{failures} benchmark suites failed')
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,47 @@
+"""Resource-allocation anatomy: how the hierarchical allocator (Algorithm
+1) splits power between sign/modulus packets and bandwidth across devices
+as the power budget shrinks — Remarks 1 & 2 made visible.
+
+  PYTHONPATH=src python examples/allocation_demo.py
+"""
+import dataclasses
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), '..', 'src'))
+
+import jax
+import numpy as np
+
+from repro.configs.base import FLConfig
+from repro.core import allocation as AL
+from repro.core import channel as CH
+
+
+def main():
+    k = 8
+    key = jax.random.PRNGKey(0)
+    dist = CH.sample_distances(key, k, 500.0)
+    gains = CH.path_gain(np.asarray(dist), 3.0)
+    rng = np.random.RandomState(0)
+    g2 = np.linspace(0.2, 4.0, k)               # client importance ramp
+    gb2 = np.full(k, 0.4)
+    v = np.sqrt(g2 * gb2) * 0.5
+    d2 = np.full(k, 0.05)
+
+    print(f'{"P(dBm)":>8} {"mean a*":>8} {"mean q":>8} {"mean p":>8} '
+          f'{"corr(g2,beta)":>14}')
+    for power in (-4.0, -20.0, -28.0, -34.0, -40.0):
+        fl = dataclasses.replace(FLConfig(), tx_power_dbm=power)
+        p_w = np.full(k, fl.tx_power_w)
+        prob = AL.problem_from_stats(g2, gb2, v, d2, gains, p_w, 60000, fl)
+        sol = AL.solve(prob, 'alternating', max_iters=2)
+        corr = np.corrcoef(g2, sol.beta)[0, 1]
+        print(f'{power:8.1f} {sol.alpha.mean():8.3f} {sol.q.mean():8.4f} '
+              f'{sol.p.mean():8.4f} {corr:14.3f}')
+    print('\nNote: as power shrinks, q (sign) is held above p (modulus) — '
+          'Remark 2 — and bandwidth correlates with ||g_k||^2 — Remark 1.')
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,35 @@
+"""Quickstart: 15 rounds of SP-FL (Algorithm 2) on the paper's CNN setting.
+
+  PYTHONPATH=src python examples/quickstart.py
+
+Shows every moving part: Dirichlet non-IID partition, Rayleigh uplink,
+hierarchical resource allocation, sign/modulus packets with compensation,
+and the resulting accuracy curve vs an error-free run.
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), '..', 'src'))
+
+from repro.configs.base import FLConfig
+from repro.training.fl_loop import build_simulator
+
+
+def main():
+    rounds = int(os.environ.get('ROUNDS', '15'))
+    for kind in ('spfl', 'error_free'):
+        fl = FLConfig(n_devices=8, transport=kind, allocator='barrier',
+                      tx_power_dbm=-30.0)
+        sim = build_simulator(fl, per_device=150, n_test=500)
+        hist = sim.run(rounds)
+        print(f'\n== transport={kind} ==')
+        for i, (l, a) in enumerate(zip(hist.loss, hist.test_acc)):
+            print(f'round {i:3d}  loss {l:.4f}  acc {a:.3f}')
+        print(f'mean sign-packet success: '
+              f'{sum(hist.sign_ok_frac)/len(hist.sign_ok_frac):.3f}')
+        print(f'mean modulus-packet success: '
+              f'{sum(hist.mod_ok_frac)/len(hist.mod_ok_frac):.3f}')
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,29 @@
+"""Batched serving example over the model zoo: prefill a batch of prompts
+and decode continuations with the same primitives the multi-pod dry-run
+lowers.
+
+  PYTHONPATH=src python examples/serve_batched.py --arch mamba2-130m-reduced
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), '..', 'src'))
+
+from repro.launch.serve import run
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument('--arch', default='smollm-135m-reduced')
+    ap.add_argument('--batch', type=int, default=4)
+    ap.add_argument('--prompt-len', type=int, default=32)
+    ap.add_argument('--new-tokens', type=int, default=16)
+    ap.add_argument('--temperature', type=float, default=0.8)
+    args = ap.parse_args()
+    run(args.arch, args.batch, args.prompt_len, args.new_tokens,
+        args.temperature)
+
+
+if __name__ == '__main__':
+    main()

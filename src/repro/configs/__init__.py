@@ -1,0 +1,3 @@
+from repro.configs.base import (  # noqa: F401
+    FLConfig, INPUT_SHAPES, ModelConfig, ShapeConfig,
+)

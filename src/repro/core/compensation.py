@@ -1,0 +1,82 @@
+"""Compensatory modulus vectors gbar — paper §II-C2, eq. (15) and Fig. 5.
+
+When a modulus packet is lost but the sign packet arrives, the PS rebuilds
+the update as s(g_k) ⊙ gbar.  Strategies (all from the paper / its refs):
+
+* ``last_global``  — modulus of the previous round's aggregated gradient
+                     [34] (the paper's default, §V).
+* ``last_local``   — per-client modulus of that client's previous local
+                     gradient (paper Fig. 5: slightly better; needs the PS
+                     to remember the last successfully decoded modulus).
+* ``seeded_random``— generated from a seed shared by PS and devices [35].
+* ``zeros``        — degenerate baseline: lost modulus => dropped update.
+
+State is a pytree so the whole thing jits inside the training round.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+KINDS = ('last_global', 'last_local', 'zeros', 'seeded_random')
+
+
+class CompensationState(NamedTuple):
+    kind_id: int
+    gbar: jax.Array | dict        # (l,) or per-client (K, l) / pytrees
+    round_idx: Array              # scalar int32 (drives seeded_random)
+
+
+_KIND_IDS = {k: i for i, k in enumerate(KINDS)}
+
+
+def init_state(kind: str, template, n_clients: int) -> CompensationState:
+    """template: a zeros-like of the flat gradient (l,) or gradient pytree."""
+    if kind not in _KIND_IDS:
+        raise ValueError(f'unknown compensation kind {kind!r}')
+    if kind == 'last_local':
+        gbar = jax.tree.map(
+            lambda a: jnp.zeros((n_clients,) + a.shape, a.dtype), template)
+    else:
+        gbar = jax.tree.map(jnp.zeros_like, template)
+    return CompensationState(_KIND_IDS[kind], gbar,
+                             jnp.zeros((), jnp.int32))
+
+
+def per_client(kind: str) -> bool:
+    return kind == 'last_local'
+
+
+def current_gbar(kind: str, state: CompensationState, seed: int = 1234):
+    """The modulus vector(s) to use this round (always >= 0)."""
+    if kind == 'seeded_random':
+        def rand_like(path_leaf):
+            key = jax.random.fold_in(jax.random.PRNGKey(seed),
+                                     state.round_idx)
+            return jnp.abs(jax.random.normal(
+                key, path_leaf.shape, jnp.float32)) * 0.01
+        return jax.tree.map(rand_like, state.gbar)
+    return state.gbar
+
+
+def update_state(kind: str, state: CompensationState, aggregated,
+                 per_client_grads=None) -> CompensationState:
+    """Roll the state after a round.
+
+    aggregated: the aggregated global gradient (pytree / flat);
+    per_client_grads: stacked per-client grads (leading K) for last_local.
+    """
+    if kind == 'last_global':
+        gbar = jax.tree.map(lambda a: jnp.abs(a.astype(jnp.float32)),
+                            aggregated)
+    elif kind == 'last_local':
+        assert per_client_grads is not None
+        gbar = jax.tree.map(lambda a: jnp.abs(a.astype(jnp.float32)),
+                            per_client_grads)
+    else:
+        gbar = state.gbar
+    return CompensationState(state.kind_id, gbar, state.round_idx + 1)

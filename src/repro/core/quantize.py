@@ -1,0 +1,107 @@
+"""Stochastic gradient quantization — paper §II-B, eq. (7)–(8), Lemma 2.
+
+The modulus |g_i| of every gradient coordinate is stochastically rounded to
+one of 2^b knobs uniformly spaced on [g_min, g_max] (the per-client min/max
+modulus), such that the quantized value is an unbiased estimate of |g_i|.
+The sign is kept exact and packetized separately (§II-C1).
+
+This module is the pure-jnp reference; ``repro.kernels`` provides the
+Pallas TPU kernels for the same ops (validated against these functions).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+class QuantizedGradient(NamedTuple):
+    """Sign/modulus-decoupled quantized gradient (the two packets)."""
+    sign: Array        # int8, in {-1, 0, +1}; the sign packet (1 bit/dim)
+    qidx: Array        # int32 knob index in [0, 2^b - 1]; the modulus packet
+    g_min: Array       # scalar (or per-client) min |g|
+    g_max: Array       # scalar (or per-client) max |g|
+    bits: int          # b
+
+
+def quant_range(g: Array, axis=None) -> Tuple[Array, Array]:
+    """(g_min, g_max) = (min|g|, max|g|) — the paper's quantizer range."""
+    a = jnp.abs(g)
+    return jnp.min(a, axis=axis), jnp.max(a, axis=axis)
+
+
+def knob_step(g_min: Array, g_max: Array, bits: int) -> Array:
+    return (g_max - g_min) / (2 ** bits - 1)
+
+
+def stochastic_quantize(g: Array, bits: int, key,
+                        g_min: Array | None = None,
+                        g_max: Array | None = None) -> QuantizedGradient:
+    """Quantize per eq. (8).  Unbiased: E[dequantize(Q)] = g (Lemma 2)."""
+    if g_min is None or g_max is None:
+        g_min, g_max = quant_range(g)
+    step = knob_step(g_min, g_max, bits)
+    a = jnp.abs(g).astype(jnp.float32)
+    # u = fractional knob coordinate in [0, 2^b - 1]
+    u = jnp.where(step > 0, (a - g_min) / jnp.where(step > 0, step, 1.0), 0.0)
+    lower = jnp.clip(jnp.floor(u), 0, 2 ** bits - 1)
+    frac = u - lower                        # P(round up), eq. (8)
+    rnd = jax.random.uniform(key, g.shape, jnp.float32)
+    qidx = (lower + (rnd < frac)).astype(jnp.int32)
+    qidx = jnp.clip(qidx, 0, 2 ** bits - 1)
+    sign = jnp.sign(g).astype(jnp.int8)
+    return QuantizedGradient(sign, qidx, g_min, g_max, bits)
+
+
+def dequantize_modulus(qg: QuantizedGradient) -> Array:
+    """Recover the (nonnegative) modulus vector Q_v(g)."""
+    step = knob_step(qg.g_min, qg.g_max, qg.bits)
+    return qg.g_min + qg.qidx.astype(jnp.float32) * step
+
+
+def dequantize(qg: QuantizedGradient) -> Array:
+    """Full Q(g) = s(g) * Q_v(g)."""
+    return qg.sign.astype(jnp.float32) * dequantize_modulus(qg)
+
+
+def quantization_error_bound(g_min: Array, g_max: Array, dim: int,
+                             bits: int) -> Array:
+    """delta^2 from Lemma 2, eq. (25): l (g_max - g_min)^2 / (4 (2^b - 1)).
+
+    Computed exactly from quantities the client already has (the paper
+    notes these are fed back to the server as one scalar).
+    """
+    return dim * (g_max - g_min) ** 2 / (4.0 * (2 ** bits - 1))
+
+
+def expected_quant_mse(g: Array, bits: int,
+                       g_min: Array | None = None,
+                       g_max: Array | None = None,
+                       axis=None) -> Array:
+    """EXACT E||Q(g) - g||^2 of the stochastic quantizer:
+    sum_i step^2 * frac_i * (1 - frac_i).
+
+    The paper estimates delta^2 "by simulation experiments" (§V) because the
+    Lemma-2 bound (25) is loose by a factor ~(2^b - 1); this closed form is
+    the exact expectation and is what the allocator uses by default.
+    """
+    if g_min is None or g_max is None:
+        g_min, g_max = quant_range(g, axis=axis)
+        if axis is not None:
+            g_min = jnp.expand_dims(g_min, axis)
+            g_max = jnp.expand_dims(g_max, axis)
+    step = knob_step(g_min, g_max, bits)
+    safe = jnp.where(step > 0, step, 1.0)
+    u = jnp.where(step > 0,
+                  (jnp.abs(g).astype(jnp.float32) - g_min) / safe, 0.0)
+    frac = u - jnp.floor(u)
+    return jnp.sum(step ** 2 * frac * (1.0 - frac), axis=axis)
+
+
+def packet_bits(dim: int, bits: int, b0: int) -> Tuple[int, int]:
+    """(sign packet bits, modulus packet bits) — §II-C1: the sign packet is
+    l bits; the modulus packet is l*b + b0 bits (b0 encodes g_min/g_max)."""
+    return dim, dim * bits + b0

@@ -1,0 +1,305 @@
+"""Gradient transports — the uplink of one FL round, as infrastructure.
+
+This is the paper's contribution recast as a composable abstraction: a
+*transport* consumes per-client gradients and produces the aggregated
+global gradient the PS would have decoded, simulating the wireless uplink
+(packetization, fading outcomes, compensation, inverse-probability
+scaling).  It is a drop-in replacement for the all-reduce of data-parallel
+training, which is how the same code serves both the paper-scale CNN
+simulator and the LLM-scale distributed step (DESIGN.md §3).
+
+Implemented transports (paper §V baselines):
+
+* ``spfl``        — sign/modulus decoupled packets + sign-packet reuse with
+                    compensation + 1/q unbiasing, eq. (15)–(17).
+* ``spfl_retx``   — SP-FL with one sign-packet retransmission (Fig. 6).
+* ``dds``         — single packet per client, uniform bandwidth, erroneous
+                    gradients discarded [29].
+* ``onebit``      — sign-only uplink, errors discarded [28].
+* ``scheduling``  — top channel-gain subset (75%) scheduled, others idle
+                    [46].
+* ``error_free``  — quantized but lossless uplink (upper bound).
+
+Flat (K, l) versions power the paper-scale simulator and tests; the
+``*_tree`` variants apply the identical math leaf-wise over per-client
+gradient pytrees with *shared per-client* quantizer ranges and packet
+outcomes — exactly one "radio" per client per round, regardless of how the
+model is sharded.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FLConfig
+from repro.core import channel
+from repro.core.quantize import (
+    QuantizedGradient, dequantize_modulus, knob_step, packet_bits,
+    quantization_error_bound, stochastic_quantize,
+)
+
+Array = jax.Array
+
+KINDS = ('spfl', 'spfl_retx', 'dds', 'onebit', 'scheduling', 'error_free')
+_Q_FLOOR = 1e-8        # below this, 1/q unbiasing is switched off (q ~ 0)
+
+
+class TransportDiagnostics(NamedTuple):
+    sign_ok: Array          # (K,) bool — sign packet decoded
+    mod_ok: Array           # (K,) bool — modulus packet decoded
+    accepted: Array         # (K,) bool — client contributed to the update
+    payload_bits: Array     # scalar — total uplink payload this round
+    retransmissions: Array  # scalar
+
+
+def _zero_diag(k: int) -> TransportDiagnostics:
+    f = jnp.zeros((k,), bool)
+    return TransportDiagnostics(f, f, f, jnp.zeros(()), jnp.zeros(()))
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+def single_packet_success_prob(beta, p_w, gain, n_bits, fl: FLConfig):
+    """Success probability for baselines that send ONE packet over the
+    client's whole band at full power.  Uses the paper's H convention
+    (channel.h_term) with the band-split factor removed, i.e. exponent
+    n_bits/(beta*B*tau) instead of 2*n_bits/(beta*B*tau)."""
+    h = channel.h_term(beta, p_w, gain, n_bits / 2.0, fl)
+    return jnp.exp(h)
+
+
+def _per_client_quantize(grads: Array, bits: int, key) -> QuantizedGradient:
+    """grads: (K, l) -> per-client-range quantization."""
+    a = jnp.abs(grads)
+    g_min = jnp.min(a, axis=1, keepdims=True)
+    g_max = jnp.max(a, axis=1, keepdims=True)
+    return stochastic_quantize(grads, bits, key, g_min, g_max)
+
+
+def _inverse_prob(accept: Array, q: Array) -> Array:
+    """accept/q with the q->0 guard (accept ~ Bernoulli(q))."""
+    safe = jnp.maximum(q, _Q_FLOOR)
+    return jnp.where(q > _Q_FLOOR, accept.astype(jnp.float32) / safe, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# SP-FL (flat)
+# ---------------------------------------------------------------------------
+
+def spfl_aggregate(grads: Array, gbar: Array, q: Array, p: Array,
+                   bits: int, b0: int, key, n_retx: int = 0
+                   ) -> Tuple[Array, TransportDiagnostics]:
+    """Eq. (15)-(17).  grads: (K, l); gbar: (l,) or (K, l); q, p: (K,)."""
+    K, l = grads.shape
+    kq, ko = jax.random.split(key)
+    qg = _per_client_quantize(grads, bits, kq)
+
+    q_eff = 1.0 - (1.0 - q) ** (n_retx + 1)      # sign retransmission(s)
+    sign_ok, mod_ok = channel.simulate_outcomes(ko, q_eff, p)
+
+    modulus = dequantize_modulus(qg)                       # (K, l)
+    gbar_k = jnp.broadcast_to(gbar, grads.shape) if gbar.ndim == 1 else gbar
+    modulus = jnp.where(mod_ok[:, None], modulus, gbar_k)
+    signed = qg.sign.astype(jnp.float32) * modulus
+
+    w = _inverse_prob(sign_ok, q_eff)[:, None]             # (K, 1)
+    ghat = jnp.mean(w * signed, axis=0)
+
+    sign_bits, mod_bits = packet_bits(l, bits, b0)
+    retx = jnp.sum((~sign_ok).astype(jnp.float32)) * min(n_retx, 1)
+    payload = (K * (sign_bits + mod_bits)
+               + retx * sign_bits)
+    return ghat, TransportDiagnostics(sign_ok, mod_ok, sign_ok,
+                                      jnp.asarray(payload, jnp.float32),
+                                      retx)
+
+
+# ---------------------------------------------------------------------------
+# baselines (flat)
+# ---------------------------------------------------------------------------
+
+def dds_aggregate(grads: Array, beta: Array, gains: Array, p_w: Array,
+                  fl: FLConfig, key) -> Tuple[Array, TransportDiagnostics]:
+    """[29]: one packet of l(b+1)+b0 bits; failures discarded; mean over
+    the received set."""
+    K, l = grads.shape
+    kq, ko = jax.random.split(key)
+    qg = _per_client_quantize(grads, fl.quant_bits, kq)
+    n_bits = l * (fl.quant_bits + 1) + fl.b0_bits
+    q = single_packet_success_prob(beta, p_w, gains, n_bits, fl)
+    ok = jax.random.uniform(ko, (K,)) < q
+    vals = qg.sign.astype(jnp.float32) * dequantize_modulus(qg)
+    denom = jnp.maximum(jnp.sum(ok.astype(jnp.float32)), 1.0)
+    ghat = jnp.sum(jnp.where(ok[:, None], vals, 0.0), axis=0) / denom
+    payload = jnp.asarray(K * n_bits, jnp.float32)
+    return ghat, TransportDiagnostics(ok, ok, ok, payload, jnp.zeros(()))
+
+
+def onebit_aggregate(grads: Array, beta: Array, gains: Array, p_w: Array,
+                     fl: FLConfig, key) -> Tuple[Array, TransportDiagnostics]:
+    """[28]: sign-only uplink.  The aggregate is the mean received sign
+    scaled by the mean client modulus (one extra scalar per client,
+    analogous to the b0 side-channel) so the step magnitude is comparable
+    with modulus-carrying schemes."""
+    K, l = grads.shape
+    q = single_packet_success_prob(beta, p_w, gains, float(l), fl)
+    ok = jax.random.uniform(key, (K,)) < q
+    scale = jnp.mean(jnp.abs(grads), axis=1, keepdims=True)    # (K, 1)
+    vals = jnp.sign(grads) * scale
+    denom = jnp.maximum(jnp.sum(ok.astype(jnp.float32)), 1.0)
+    ghat = jnp.sum(jnp.where(ok[:, None], vals, 0.0), axis=0) / denom
+    payload = jnp.asarray(K * l, jnp.float32)
+    return ghat, TransportDiagnostics(ok, jnp.zeros_like(ok), ok, payload,
+                                      jnp.zeros(()))
+
+
+def scheduling_aggregate(grads: Array, gains: Array, p_w: Array,
+                         fl: FLConfig, key,
+                         ratio: Optional[float] = None
+                         ) -> Tuple[Array, TransportDiagnostics]:
+    """[46]: PS schedules the ceil(ratio*K) devices with the largest
+    instantaneous channel gain; each gets an equal share of the band."""
+    K, l = grads.shape
+    ratio = fl.scheduling_ratio if ratio is None else ratio
+    m = max(1, math.ceil(ratio * K))
+    kh, ko, kq = jax.random.split(key, 3)
+    h2 = jax.random.exponential(kh, (K,))           # Rayleigh |h|^2
+    inst = h2 * gains
+    thresh = jnp.sort(inst)[K - m]
+    sched = inst >= thresh
+    beta = jnp.where(sched, 1.0 / m, 1e-9)
+    qg = _per_client_quantize(grads, fl.quant_bits, kq)
+    n_bits = l * (fl.quant_bits + 1) + fl.b0_bits
+    q = single_packet_success_prob(beta, p_w, gains, n_bits, fl)
+    ok = (jax.random.uniform(ko, (K,)) < q) & sched
+    vals = qg.sign.astype(jnp.float32) * dequantize_modulus(qg)
+    denom = jnp.maximum(jnp.sum(ok.astype(jnp.float32)), 1.0)
+    ghat = jnp.sum(jnp.where(ok[:, None], vals, 0.0), axis=0) / denom
+    payload = jnp.asarray(m * n_bits, jnp.float32)
+    return ghat, TransportDiagnostics(ok, ok, ok, payload, jnp.zeros(()))
+
+
+def error_free_aggregate(grads: Array, fl: FLConfig, key
+                         ) -> Tuple[Array, TransportDiagnostics]:
+    K, l = grads.shape
+    qg = _per_client_quantize(grads, fl.quant_bits, key)
+    ghat = jnp.mean(qg.sign.astype(jnp.float32) * dequantize_modulus(qg),
+                    axis=0)
+    ok = jnp.ones((K,), bool)
+    payload = jnp.asarray(K * (l * (fl.quant_bits + 1) + fl.b0_bits),
+                          jnp.float32)
+    return ghat, TransportDiagnostics(ok, ok, ok, payload, jnp.zeros(()))
+
+
+# ---------------------------------------------------------------------------
+# pytree variants (LLM-scale): one radio per client, leaf-wise math
+# ---------------------------------------------------------------------------
+
+def tree_client_stats(grads_tree) -> dict:
+    """Per-client (leading-K) scalars across the whole gradient pytree:
+    ||g_k||^2, min|g|, max|g|, dim."""
+    leaves = jax.tree.leaves(grads_tree)
+    K = leaves[0].shape[0]
+    g2 = sum(jnp.sum(lf.astype(jnp.float32).reshape(K, -1) ** 2, axis=1)
+             for lf in leaves)
+    g_min = jnp.full((K,), jnp.inf)
+    g_max = jnp.zeros((K,))
+    for lf in leaves:
+        a = jnp.abs(lf.astype(jnp.float32)).reshape(K, -1)
+        g_min = jnp.minimum(g_min, jnp.min(a, axis=1))
+        g_max = jnp.maximum(g_max, jnp.max(a, axis=1))
+    dim = sum(int(lf.size) // K for lf in leaves)
+    return {'g2': g2, 'g_min': g_min, 'g_max': g_max, 'dim': dim}
+
+
+def spfl_aggregate_tree(grads_tree, gbar_tree, q: Array, p: Array,
+                        fl: FLConfig, key, stats: Optional[dict] = None,
+                        n_retx: int = 0):
+    """SP-FL over per-client gradient pytrees (leaves (K, ...)).
+
+    The quantizer range, the packet outcomes and the 1/q weights are
+    per-client and shared across leaves; everything else is the flat math
+    applied leaf-wise.  Returns (ghat_tree, stats, diagnostics).
+    """
+    if stats is None:
+        stats = tree_client_stats(grads_tree)
+    K = q.shape[0]
+    kq, ko = jax.random.split(key)
+    q_eff = 1.0 - (1.0 - q) ** (n_retx + 1)
+    sign_ok, mod_ok = channel.simulate_outcomes(ko, q_eff, p)
+    w = _inverse_prob(sign_ok, q_eff)
+
+    g_min, g_max = stats['g_min'], stats['g_max']
+    bits = fl.quant_bits
+    # beyond-paper §Perf: the payload is already b-bit quantized, so the
+    # cross-client reduction can run in bf16, halving uplink bytes
+    rdt = jnp.bfloat16 if fl.uplink_reduce_dtype == 'bfloat16' \
+        else jnp.float32
+
+    def leaf(gleaf, gbar_leaf, lkey):
+        Kd = gleaf.shape[0]
+        shape = gleaf.shape
+        flat = gleaf.astype(jnp.float32).reshape(Kd, -1)
+        qg = stochastic_quantize(flat, bits, lkey,
+                                 g_min[:, None], g_max[:, None])
+        modulus = dequantize_modulus(qg)
+        gb = gbar_leaf.astype(jnp.float32)
+        if gb.shape == shape:                       # per-client (last_local)
+            gb = gb.reshape(Kd, -1)
+        else:                                       # shared (last_global...)
+            gb = jnp.broadcast_to(gb.reshape(1, -1), flat.shape)
+        modulus = jnp.where(mod_ok[:, None], modulus, gb)
+        signed = qg.sign.astype(jnp.float32) * modulus
+        contrib = (w[:, None] * signed).astype(rdt)
+        # keep the reduction itself (-> cross-client all-reduce) in rdt
+        return (jnp.sum(contrib, axis=0) / Kd).astype(
+            jnp.float32).reshape(shape[1:])
+
+    leaves, treedef = jax.tree.flatten(grads_tree)
+    gbar_leaves = jax.tree.leaves(gbar_tree)
+    keys = jax.random.split(kq, len(leaves))
+    out = [leaf(lf, gb, k) for lf, gb, k in zip(leaves, gbar_leaves, keys)]
+    ghat = jax.tree.unflatten(treedef, out)
+
+    l = stats['dim']
+    sign_bits, mod_bits = packet_bits(l, bits, fl.b0_bits)
+    diag = TransportDiagnostics(
+        sign_ok, mod_ok, sign_ok,
+        jnp.asarray(K * (sign_bits + mod_bits), jnp.float32),
+        jnp.sum((~sign_ok).astype(jnp.float32)) * min(n_retx, 1))
+    return ghat, stats, diag
+
+
+def error_free_aggregate_tree(grads_tree, fl: FLConfig, key,
+                              stats: Optional[dict] = None):
+    """Quantized-but-lossless tree aggregation (arctic-480b fallback and
+    the error-free baseline at LLM scale)."""
+    if stats is None:
+        stats = tree_client_stats(grads_tree)
+    g_min, g_max = stats['g_min'], stats['g_max']
+    bits = fl.quant_bits
+    leaves, treedef = jax.tree.flatten(grads_tree)
+    keys = jax.random.split(key, len(leaves))
+
+    def leaf(gleaf, lkey):
+        Kd = gleaf.shape[0]
+        flat = gleaf.astype(jnp.float32).reshape(Kd, -1)
+        qg = stochastic_quantize(flat, bits, lkey,
+                                 g_min[:, None], g_max[:, None])
+        signed = qg.sign.astype(jnp.float32) * dequantize_modulus(qg)
+        return jnp.mean(signed, axis=0).reshape(gleaf.shape[1:])
+
+    out = [leaf(lf, k) for lf, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, out), stats, _zero_diag(
+        jax.tree.leaves(grads_tree)[0].shape[0])
+
+
+def delta_sq_tree(stats: dict, bits: int) -> Array:
+    """Per-client quantization error bound delta^2 (Lemma 2) from stats."""
+    return quantization_error_bound(stats['g_min'], stats['g_max'],
+                                    stats['dim'], bits)

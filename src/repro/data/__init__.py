@@ -1,0 +1,6 @@
+from repro.data.partition import (  # noqa: F401
+    dirichlet_partition, iid_partition, stack_client_data,
+)
+from repro.data.synthetic import (  # noqa: F401
+    load_image_dataset, synth_cifar, synth_tokens,
+)

@@ -1,0 +1,52 @@
+"""Federated dataset partitioning — paper §V.
+
+IID: shuffle and split into equal shards (2000 samples/device in §V).
+Non-IID: per-device class mixture drawn from Dirichlet(alpha_dir)
+(paper Figs. 2–3 use alpha ∈ {0.5, 0.1, 0.01}).
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import numpy as np
+
+
+def iid_partition(labels: np.ndarray, k: int, per_device: int,
+                  seed: int = 0) -> List[np.ndarray]:
+    rng = np.random.RandomState(seed)
+    idx = rng.permutation(len(labels))
+    need = k * per_device
+    if need > len(idx):
+        idx = np.concatenate([idx] * (-(-need // len(idx))))
+    return [idx[i * per_device:(i + 1) * per_device] for i in range(k)]
+
+
+def dirichlet_partition(labels: np.ndarray, k: int, per_device: int,
+                        alpha: float, seed: int = 0,
+                        n_classes: int = 10) -> List[np.ndarray]:
+    """Each device draws its class mixture from Dirichlet(alpha); samples
+    are then drawn (with replacement if a class runs short) to give every
+    device exactly ``per_device`` samples — matching the paper's equal
+    |D_k| assumption."""
+    rng = np.random.RandomState(seed)
+    by_class = [np.nonzero(labels == c)[0] for c in range(n_classes)]
+    parts = []
+    for _ in range(k):
+        mix = rng.dirichlet(np.full(n_classes, alpha))
+        counts = rng.multinomial(per_device, mix)
+        take = []
+        for c, m in enumerate(counts):
+            if m == 0:
+                continue
+            pool = by_class[c]
+            take.append(rng.choice(pool, size=m, replace=m > len(pool)))
+        parts.append(np.concatenate(take) if take else np.array([], np.int64))
+    return parts
+
+
+def stack_client_data(x: np.ndarray, y: np.ndarray,
+                      parts: List[np.ndarray]) -> Tuple[np.ndarray, np.ndarray]:
+    """-> (K, per_device, ...) stacked arrays for vmapped FL training."""
+    xs = np.stack([x[p] for p in parts])
+    ys = np.stack([y[p] for p in parts])
+    return xs, ys

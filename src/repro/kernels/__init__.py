@@ -1,0 +1,3 @@
+# SP-FL uplink hot path as Pallas TPU kernels (quantize / dequant /
+# fused roundtrip), with jnp oracles in ref.py and jit wrappers in ops.py.
+from repro.kernels import ops, ref  # noqa: F401

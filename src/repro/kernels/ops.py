@@ -1,0 +1,71 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Handle arbitrary flat/ND inputs: pad to the (BLOCK_ROWS, BLOCK_COLS) tile
+grid, run the kernel, unpad.  ``interpret`` defaults to True off-TPU so the
+same call sites work on CPU (validation) and TPU (deployment).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import quantize_kernel as qk
+
+Array = jax.Array
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != 'tpu'
+
+
+def _to_tiles(flat: Array) -> Tuple[Array, int]:
+    """1-D -> tile-aligned 2-D (pad with zeros), returning original size."""
+    n = flat.shape[0]
+    cols = qk.BLOCK_COLS
+    rows = -(-n // cols)
+    rows_pad = -(-rows // qk.BLOCK_ROWS) * qk.BLOCK_ROWS
+    total = rows_pad * cols
+    padded = jnp.pad(flat, (0, total - n))
+    return padded.reshape(rows_pad, cols), n
+
+
+def _s(x) -> Array:
+    return jnp.asarray(x, jnp.float32).reshape(1, 1)
+
+
+def stochastic_quantize_flat(g: Array, rand: Array, gmin, gmax, bits: int,
+                             interpret: bool | None = None):
+    """Flat (l,) stochastic quantization -> (sign i8 (l,), qidx i32 (l,))."""
+    interpret = default_interpret() if interpret is None else interpret
+    g2, n = _to_tiles(g.astype(jnp.float32))
+    r2, _ = _to_tiles(rand.astype(jnp.float32))
+    sign, qidx = qk.quantize_2d(g2, r2, _s(gmin), _s(gmax), bits=bits,
+                                interpret=interpret)
+    return sign.reshape(-1)[:n], qidx.reshape(-1)[:n]
+
+
+def dequant_compensate_flat(sign: Array, qidx: Array, gbar: Array,
+                            gmin, gmax, mod_ok, weight, bits: int,
+                            interpret: bool | None = None) -> Array:
+    interpret = default_interpret() if interpret is None else interpret
+    s2, n = _to_tiles(sign.astype(jnp.int8))
+    q2, _ = _to_tiles(qidx.astype(jnp.int32))
+    b2, _ = _to_tiles(gbar.astype(jnp.float32))
+    out = qk.dequant_2d(s2, q2, b2, _s(gmin), _s(gmax), _s(mod_ok),
+                        _s(weight), bits=bits, interpret=interpret)
+    return out.reshape(-1)[:n]
+
+
+def spfl_roundtrip_flat(g: Array, rand: Array, gbar: Array, gmin, gmax,
+                        mod_ok, weight, bits: int,
+                        interpret: bool | None = None) -> Array:
+    """Fused client+PS pass: one weighted, compensated contribution."""
+    interpret = default_interpret() if interpret is None else interpret
+    g2, n = _to_tiles(g.astype(jnp.float32))
+    r2, _ = _to_tiles(rand.astype(jnp.float32))
+    b2, _ = _to_tiles(gbar.astype(jnp.float32))
+    out = qk.roundtrip_2d(g2, r2, b2, _s(gmin), _s(gmax), _s(mod_ok),
+                          _s(weight), bits=bits, interpret=interpret)
+    return out.reshape(-1)[:n]

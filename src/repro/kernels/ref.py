@@ -1,0 +1,33 @@
+"""Pure-jnp oracles for the Pallas kernels (the ground truth every kernel
+sweep in tests/test_kernels.py asserts against)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def quantize_ref(g, rand, gmin, gmax, bits: int):
+    g = g.astype(jnp.float32)
+    nk = float(2 ** bits - 1)
+    step = (gmax - gmin) / nk
+    safe = jnp.where(step > 0.0, step, 1.0)
+    a = jnp.abs(g)
+    u = jnp.where(step > 0.0, (a - gmin) / safe, 0.0)
+    lower = jnp.clip(jnp.floor(u), 0.0, nk)
+    frac = u - lower
+    up = (rand.astype(jnp.float32) < frac).astype(jnp.float32)
+    qidx = jnp.clip(lower + up, 0.0, nk).astype(jnp.int32)
+    sign = jnp.sign(g).astype(jnp.int8)
+    return sign, qidx
+
+
+def dequant_ref(sign, qidx, gbar, gmin, gmax, mod_ok, weight, bits: int):
+    nk = float(2 ** bits - 1)
+    step = (gmax - gmin) / nk
+    modulus = gmin + qidx.astype(jnp.float32) * step
+    modulus = jnp.where(mod_ok > 0.0, modulus, gbar.astype(jnp.float32))
+    return weight * sign.astype(jnp.float32) * modulus
+
+
+def roundtrip_ref(g, rand, gbar, gmin, gmax, mod_ok, weight, bits: int):
+    sign, qidx = quantize_ref(g, rand, gmin, gmax, bits)
+    return dequant_ref(sign, qidx, gbar, gmin, gmax, mod_ok, weight, bits)

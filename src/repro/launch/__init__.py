@@ -1,0 +1,5 @@
+# Launchers: mesh construction, sharding rules, multi-pod dry-run,
+# train/serve drivers.  NOTE: repro.launch.dryrun must be imported FIRST
+# in a fresh process (it sets XLA_FLAGS before jax init); don't import it
+# here.
+from repro.launch.mesh import make_production_mesh  # noqa: F401

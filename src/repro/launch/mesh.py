@@ -1,0 +1,43 @@
+"""Production meshes.
+
+Single pod: 256 chips as (data=16, model=16).
+Multi-pod:  2 pods x 256 chips as (pod=2, data=16, model=16) — the 'pod'
+axis extends the FL client axis across pods (32 clients) and carries the
+cross-pod (DCN-ish) legs of the uplink all-reduce.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (the dry-run sets XLA_FLAGS before any jax import; everything else
+sees the real device count).
+"""
+from __future__ import annotations
+
+import jax
+
+SINGLE_POD_SHAPE = (16, 16)
+SINGLE_POD_AXES = ('data', 'model')
+MULTI_POD_SHAPE = (2, 16, 16)
+MULTI_POD_AXES = ('pod', 'data', 'model')
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = MULTI_POD_SHAPE if multi_pod else SINGLE_POD_SHAPE
+    axes = MULTI_POD_AXES if multi_pod else SINGLE_POD_AXES
+    return jax.make_mesh(shape, axes)
+
+
+def client_axes(mesh: jax.sharding.Mesh) -> tuple:
+    """Mesh axes that enumerate FL clients."""
+    return ('pod', 'data') if 'pod' in mesh.axis_names else ('data',)
+
+
+def n_clients(mesh: jax.sharding.Mesh) -> int:
+    out = 1
+    for a in client_axes(mesh):
+        out *= mesh.shape[a]
+    return out
+
+
+def make_host_mesh() -> jax.sharding.Mesh:
+    """Whatever devices exist locally, as a 1-D 'data' mesh (CPU tests)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n,), ('data',))

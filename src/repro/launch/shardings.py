@@ -1,0 +1,204 @@
+"""Sharding rules: parameter, batch, cache and per-client-gradient layouts
+for every (architecture x input shape) on the production meshes.
+
+Conventions (DESIGN.md §3):
+* 'model'  — tensor parallelism inside a client: attention heads / FFN
+             hidden / vocab rows.
+* 'data'   — FL client axis (with 'pod' prepended on the multi-pod mesh):
+             the leading K axis of batches and per-client gradients.
+* arctic-480b additionally shards its expert axis over the client axes
+  (expert parallelism) — which is exactly why classic per-client FL
+  gradients cannot exist for it (DESIGN.md §Arch-applicability).
+* long_500k shards KV caches along the *sequence* axis over
+  ('data','model') — GSPMD then lowers attention softmax/PV into
+  flash-decoding style partial reductions.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.launch.mesh import client_axes
+
+# ---------------------------------------------------------------------------
+# parameter shardings
+# ---------------------------------------------------------------------------
+
+
+def _param_spec(path: tuple, leaf, cfg: ModelConfig, expert_axes,
+                mesh: Mesh) -> P:
+    names = [getattr(p, 'key', getattr(p, 'name', str(p))) for p in path]
+    name = names[-1]
+    grouped = names[0] == 'groups'          # leading (n_groups,) axis
+
+    def g(*spec):
+        return P(None, *spec) if grouped else P(*spec)
+
+    if name in ('embed',):
+        # vocab-sharded when divisible (mamba2's 50280 is not: shard d)
+        if leaf.shape[0] % mesh.shape['model'] == 0:
+            return P('model', None)
+        return P(None, 'model')
+    if name == 'lm_head':
+        return P(None, 'model')
+    if name in ('final_norm', 'frontend_proj'):
+        return P()
+    # attention
+    if name in ('wq', 'wk', 'wv'):
+        return g(None, 'model')
+    if name == 'wo':
+        return g('model', None)
+    if name in ('bq', 'bk', 'bv'):
+        return g('model')
+    # dense mlp
+    if name in ('w_gate', 'w_up', 'w_down'):
+        ndim = leaf.ndim - (1 if grouped else 0)
+        if ndim == 3:                        # MoE expert stacks (E, d, f)
+            if name == 'w_down':
+                return g(expert_axes, 'model', None)
+            return g(expert_axes, None, 'model')
+        if name == 'w_down':
+            return g('model', None)
+        return g(None, 'model')
+    if name == 'router':
+        return g(None, None)
+    # mamba
+    if name == 'in_proj':
+        return g(None, 'model')
+    if name == 'out_proj':
+        return g('model', None)
+    if name == 'conv_w':
+        return g(None, 'model')
+    if name == 'conv_b':
+        return g('model')
+    if name == 'norm_scale':
+        return g('model')
+    if name in ('A_log', 'D', 'dt_bias'):
+        return g(None)
+    # norms and anything residual-dim shaped
+    return g(*([None] * (leaf.ndim - (1 if grouped else 0))))
+
+
+def sanitize_spec(spec: P, shape, mesh: Mesh) -> P:
+    """Drop sharding on any dim the mesh axes don't divide — jit
+    in_shardings require exact divisibility (unlike GSPMD constraints,
+    which pad).  E.g. smollm's kv=3 heads or mamba2's vocab=50280 cannot
+    shard over model=16."""
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, entry in zip(shape, entries):
+        if entry is None:
+            out.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        total = 1
+        for a in axes:
+            total *= mesh.shape[a]
+        out.append(entry if dim % total == 0 else None)
+    return P(*out)
+
+
+def param_specs(cfg: ModelConfig, mesh: Mesh, params_shape) -> Any:
+    """PartitionSpec tree matching the params tree structure."""
+    # arctic experts spread over the client axes (EP); others replicate E
+    expert_axes = None
+    if cfg.is_moe and cfg.n_experts > mesh.shape['model']:
+        ca = client_axes(mesh)
+        expert_axes = ca if len(ca) > 1 else ca[0]
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: sanitize_spec(
+            _param_spec(path, leaf, cfg, expert_axes, mesh),
+            leaf.shape, mesh),
+        params_shape)
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh, params_shape) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(cfg, mesh, params_shape))
+
+
+# ---------------------------------------------------------------------------
+# batch / cache shardings
+# ---------------------------------------------------------------------------
+
+def train_batch_specs(cfg: ModelConfig, mesh: Mesh, per_client: bool) -> Any:
+    ca = client_axes(mesh)
+    lead = ca if len(ca) > 1 else ca[0]
+    spec = {'tokens': P(lead, None, None) if per_client
+            else P(lead, None)}
+    if cfg.frontend == 'vision' and cfg.n_prefix_tokens:
+        spec['prefix'] = (P(lead, None, None, None) if per_client
+                          else P(lead, None, None))
+    return spec
+
+
+def prefill_batch_spec(cfg: ModelConfig, mesh: Mesh) -> Any:
+    ca = client_axes(mesh)
+    lead = ca if len(ca) > 1 else ca[0]
+    spec = {'tokens': P(lead, None)}
+    if cfg.frontend == 'vision' and cfg.n_prefix_tokens:
+        spec['prefix'] = P(lead, None, None)
+    return spec
+
+
+def _cache_leaf_spec(path: tuple, leaf, cfg: ModelConfig, mesh: Mesh,
+                     seq_shard: bool) -> P:
+    names = [getattr(p, 'key', getattr(p, 'name', str(p))) for p in path]
+    name = names[-1]
+    ca = client_axes(mesh)
+    batch_axes = ca if len(ca) > 1 else ca[0]
+    if name in ('k', 'v'):
+        # (G, B, S, kv, hd) — shard head_dim (divisible for every assigned
+        # arch; kv head counts mostly aren't) + batch or sequence.
+        # decode_cache_layout='batch' (§Perf): shard batch ONLY so the
+        # whole attention read stays device-local (no cache gathers).
+        if seq_shard:
+            return P(None, None, ('data', 'model'), None, None)
+        if cfg.decode_cache_layout == 'batch':
+            return P(None, batch_axes, None, None, None)
+        return P(None, batch_axes, None, None, 'model')
+    if name == 'conv':
+        # (G, B, W-1, conv_dim) — tiny at batch=1: replicate when seq-sharded
+        if seq_shard:
+            return P(None, None, None, None)
+        return P(None, batch_axes, None, 'model')
+    if name == 'ssm':
+        # (G, B, nh, P, S) — shard the SSM head_dim (nh often indivisible);
+        # O(1) state: replicate when batch can't shard
+        if seq_shard:
+            return P(None, None, None, None, None)
+        return P(None, batch_axes, None, 'model', None)
+    return P(*([None] * leaf.ndim))
+
+
+def cache_specs(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig,
+                cache_shape) -> Any:
+    """shape.name == 'long_500k' -> sequence sharding (batch=1)."""
+    seq_shard = shape.global_batch < mesh.shape['data']
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: sanitize_spec(
+            _cache_leaf_spec(path, leaf, cfg, mesh, seq_shard),
+            leaf.shape, mesh),
+        cache_shape)
+
+
+def decode_token_spec(cfg: ModelConfig, mesh: Mesh,
+                      shape: ShapeConfig) -> P:
+    if shape.global_batch < mesh.shape['data']:
+        return P(None, None)                 # batch too small to shard
+    ca = client_axes(mesh)
+    return P(ca if len(ca) > 1 else ca[0], None)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())
+
+
+def to_shardings(mesh: Mesh, spec_tree: Any) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))

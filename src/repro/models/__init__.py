@@ -1,0 +1,2 @@
+from repro.models import transformer  # noqa: F401
+from repro.models.cnn import cnn_accuracy, cnn_forward, cnn_loss, init_cnn  # noqa: F401

@@ -1,0 +1,65 @@
+"""The paper's CIFAR-10 CNN (§V): two conv layers + three fully-connected
+layers, max-pooling after each conv, ReLU activations, ~60k parameters
+(LeNet-5 sizing on 32x32x3 inputs -> 62,006 params)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+def init_cnn(key, n_classes: int = 10) -> dict:
+    ks = jax.random.split(key, 5)
+
+    def conv_init(k, shape):  # (H, W, Cin, Cout)
+        fan_in = shape[0] * shape[1] * shape[2]
+        return jax.random.normal(k, shape, jnp.float32) / np.sqrt(fan_in)
+
+    def fc_init(k, i, o):
+        return jax.random.normal(k, (i, o), jnp.float32) / np.sqrt(i)
+
+    return {
+        'conv1_w': conv_init(ks[0], (5, 5, 3, 6)),
+        'conv1_b': jnp.zeros((6,)),
+        'conv2_w': conv_init(ks[1], (5, 5, 6, 16)),
+        'conv2_b': jnp.zeros((16,)),
+        'fc1_w': fc_init(ks[2], 400, 120), 'fc1_b': jnp.zeros((120,)),
+        'fc2_w': fc_init(ks[3], 120, 84), 'fc2_b': jnp.zeros((84,)),
+        'fc3_w': fc_init(ks[4], 84, n_classes), 'fc3_b': jnp.zeros((n_classes,)),
+    }
+
+
+def _max_pool(x: Array) -> Array:
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), 'VALID')
+
+
+def cnn_forward(params, images: Array) -> Array:
+    """images: (B, 32, 32, 3) -> logits (B, n_classes)."""
+    x = jax.lax.conv_general_dilated(
+        images, params['conv1_w'], (1, 1), 'VALID',
+        dimension_numbers=('NHWC', 'HWIO', 'NHWC')) + params['conv1_b']
+    x = _max_pool(jax.nn.relu(x))          # (B, 14, 14, 6)
+    x = jax.lax.conv_general_dilated(
+        x, params['conv2_w'], (1, 1), 'VALID',
+        dimension_numbers=('NHWC', 'HWIO', 'NHWC')) + params['conv2_b']
+    x = _max_pool(jax.nn.relu(x))          # (B, 5, 5, 16)
+    x = x.reshape(x.shape[0], -1)          # (B, 400)
+    x = jax.nn.relu(x @ params['fc1_w'] + params['fc1_b'])
+    x = jax.nn.relu(x @ params['fc2_w'] + params['fc2_b'])
+    return x @ params['fc3_w'] + params['fc3_b']
+
+
+def cnn_loss(params, images: Array, labels: Array) -> Array:
+    logits = cnn_forward(params, images)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(logz - gold)
+
+
+def cnn_accuracy(params, images: Array, labels: Array) -> Array:
+    return jnp.mean(
+        (jnp.argmax(cnn_forward(params, images), -1) == labels)
+        .astype(jnp.float32))

@@ -1,0 +1,21 @@
+"""Gated MLP (llama/gemma-style) — dense FFN used by every non-MoE block."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init
+
+
+def init_mlp(key, d_model: int, d_ff: int, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        'w_gate': dense_init(k1, d_model, d_ff, dtype),
+        'w_up': dense_init(k2, d_model, d_ff, dtype),
+        'w_down': dense_init(k3, d_ff, d_model, dtype),
+    }
+
+
+def mlp_forward(params, x):
+    h = jax.nn.silu(x @ params['w_gate']) * (x @ params['w_up'])
+    return h @ params['w_down']

@@ -1,0 +1,186 @@
+"""Top-k mixture-of-experts with sort-based capacity dispatch.
+
+Scalable (no O(tokens × experts × capacity) one-hot tensors): assignments
+are argsorted by expert id, positions-within-expert derived from segment
+starts, and tokens scattered into an (E, C, D) buffer with drop semantics.
+Expert FFNs run batched over E with einsum so the expert axis shards
+cleanly (expert parallelism — Arctic shards E over the mesh 'data' axis;
+see launch/shardings.py).  The dispatch/combine rescatter is what GSPMD
+lowers to the all-to-all the roofline analysis tracks for MoE archs.
+
+Includes the switch-style load-balance auxiliary loss (router
+load-balancing is a first-class concern for the MoE archs per the harness).
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common
+from repro.models.common import dense_init
+from repro.models.mlp import init_mlp, mlp_forward
+
+Array = jax.Array
+
+
+def init_moe(key, cfg: ModelConfig, dtype) -> dict:
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 5)
+    scale = 1.0 / math.sqrt(d)
+    fscale = 1.0 / math.sqrt(f)
+    p = {
+        'router': dense_init(ks[0], d, E, jnp.float32),
+        'w_gate': (jax.random.normal(ks[1], (E, d, f), jnp.float32)
+                   * scale).astype(dtype),
+        'w_up': (jax.random.normal(ks[2], (E, d, f), jnp.float32)
+                 * scale).astype(dtype),
+        'w_down': (jax.random.normal(ks[3], (E, f, d), jnp.float32)
+                   * fscale).astype(dtype),
+    }
+    if cfg.dense_residual:
+        p['dense'] = init_mlp(ks[4], d, f, dtype)
+    return p
+
+
+def expert_capacity(n_tokens: int, cfg: ModelConfig) -> int:
+    c = math.ceil(cfg.capacity_factor * n_tokens * cfg.topk / cfg.n_experts)
+    return max(8, ((c + 7) // 8) * 8)   # lane-aligned
+
+
+def moe_forward_grouped(params, cfg: ModelConfig, x: Array
+                        ) -> Tuple[Array, dict]:
+    """Per-batch-row dispatch (§Perf): the argsort/scatter/gather all stay
+    within each (sharded) batch row, so SPMD never has to replicate the
+    token stream — the only cross-device movement is the (B, E, C, D)
+    buffer resharding from batch-major to expert-major, which GSPMD lowers
+    to the canonical expert-parallel all-to-all.  Capacity is per row
+    (standard practice).  Identical math to the flat path modulo which
+    tokens are dropped at capacity."""
+    B, T, D = x.shape
+    E, k = cfg.n_experts, cfg.topk
+    n = T * k
+    logits = (x.astype(jnp.float32) @ params['router'])        # (B, T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)                     # (B, T, k)
+    top_p = top_p / jnp.maximum(jnp.sum(top_p, -1, keepdims=True), 1e-9)
+
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(top_e[..., 0], E, dtype=jnp.float32), axis=(0, 1))
+    lb_loss = E * jnp.sum(frac_tokens * jnp.mean(probs, axis=(0, 1)))
+
+    flat_e = top_e.reshape(B, n)
+    flat_g = top_p.reshape(B, n)
+    flat_t = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(T, dtype=jnp.int32), k)[None], (B, n))
+
+    order = jnp.argsort(flat_e, axis=-1, stable=True)
+    se = jnp.take_along_axis(flat_e, order, axis=-1)
+    st = jnp.take_along_axis(flat_t, order, axis=-1)
+    sg = jnp.take_along_axis(flat_g, order, axis=-1)
+    starts = jax.vmap(
+        lambda row: jnp.searchsorted(row, jnp.arange(E, dtype=row.dtype))
+    )(se)                                                      # (B, E)
+    pos = (jnp.arange(n, dtype=jnp.int32)[None]
+           - jnp.take_along_axis(starts, se, axis=-1).astype(jnp.int32))
+
+    C = max(8, ((math.ceil(cfg.capacity_factor * n / E) + 7) // 8) * 8)
+    bidx = jnp.arange(B, dtype=jnp.int32)[:, None]
+    # Gather-based dispatch: scatter only the tiny int32 slot->token index
+    # map, then gather the hidden states.  A direct scatter of the (B, E,
+    # C, D) buffer makes GSPMD replicate the whole thing (§Perf: 60 GB
+    # all-gathers on arctic); the gather formulation stays batch-local.
+    slot_tok = jnp.full((B, E, C), T, jnp.int32)       # T = OOB sentinel
+    slot_tok = slot_tok.at[bidx, se, pos].set(st, mode='drop')
+    x_pad = jnp.concatenate([x, jnp.zeros((B, 1, D), x.dtype)], axis=1)
+    buf = jnp.take_along_axis(
+        x_pad, slot_tok.reshape(B, E * C)[..., None], axis=1
+    ).reshape(B, E, C, D)
+
+    # explicit batch-major -> expert-major resharding: GSPMD lowers the
+    # adjacent constraint pair to the canonical EP all-to-all instead of
+    # replicating the whole buffer (§Perf: 60 GB gather -> ~2 GB a2a per
+    # device on arctic-480b).  Only active when the expert count actually
+    # shards over the client axes (expert parallelism, e.g. arctic); the
+    # vmapped per-client FL path (mixtral) keeps experts replicated.
+    ca = common.client_mesh_axes()
+    names, mesh_shape = common.current_mesh_axes()
+    extent = 1
+    if ca is not None and mesh_shape:
+        for a in (ca if isinstance(ca, tuple) else (ca,)):
+            extent *= mesh_shape[a]
+    ep = ca is not None and extent > 1 and E % extent == 0
+    if ep:
+        buf = common.maybe_constrain(buf, (ca, None, None, None))
+        buf = common.maybe_constrain(buf, (None, ca, None, None))
+
+    h = jax.nn.silu(jnp.einsum('becd,edf->becf', buf, params['w_gate']))
+    h = h * jnp.einsum('becd,edf->becf', buf, params['w_up'])
+    out_buf = jnp.einsum('becf,efd->becd', h, params['w_down'])
+
+    if ep:
+        out_buf = common.maybe_constrain(out_buf, (None, ca, None, None))
+        out_buf = common.maybe_constrain(out_buf, (ca, None, None, None))
+
+    y_sorted = out_buf.at[bidx, se, pos].get(mode='fill', fill_value=0)
+    kept = (pos >= 0) & (pos < C)
+    drop_frac = 1.0 - jnp.mean(kept.astype(jnp.float32))
+    w = (sg * kept.astype(jnp.float32)).astype(x.dtype)
+    y = jnp.zeros((B, T, D), x.dtype).at[bidx, st].add(
+        y_sorted * w[..., None])
+
+    if cfg.dense_residual:
+        y = y + mlp_forward(params['dense'], x)
+    return y, {'lb_loss': lb_loss, 'drop_frac': drop_frac}
+
+
+def moe_forward(params, cfg: ModelConfig, x: Array) -> Tuple[Array, dict]:
+    """x: (B, T, D) -> (y, aux) with aux = {'lb_loss', 'drop_frac'}."""
+    if cfg.moe_dispatch == 'grouped' and x.shape[1] > 1:
+        return moe_forward_grouped(params, cfg, x)
+    B, T, D = x.shape
+    E, k = cfg.n_experts, cfg.topk
+    N = B * T
+    xf = x.reshape(N, D)
+
+    logits = (xf.astype(jnp.float32) @ params['router'])       # (N, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)                     # (N, k)
+    top_p = top_p / jnp.maximum(jnp.sum(top_p, -1, keepdims=True), 1e-9)
+
+    # switch-style load-balance loss
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(top_e[:, 0], E, dtype=jnp.float32), axis=0)
+    mean_probs = jnp.mean(probs, axis=0)
+    lb_loss = E * jnp.sum(frac_tokens * mean_probs)
+
+    flat_e = top_e.reshape(N * k)
+    flat_g = top_p.reshape(N * k)
+    flat_t = jnp.repeat(jnp.arange(N, dtype=jnp.int32), k)
+
+    order = jnp.argsort(flat_e, stable=True)
+    se, st, sg = flat_e[order], flat_t[order], flat_g[order]
+    starts = jnp.searchsorted(se, jnp.arange(E, dtype=se.dtype))
+    pos = jnp.arange(N * k, dtype=jnp.int32) - starts[se].astype(jnp.int32)
+
+    C = expert_capacity(N, cfg)
+    buf = jnp.zeros((E, C, D), x.dtype)
+    buf = buf.at[se, pos].set(xf[st], mode='drop')             # pos >= C drop
+
+    h = jax.nn.silu(jnp.einsum('ecd,edf->ecf', buf, params['w_gate']))
+    h = h * jnp.einsum('ecd,edf->ecf', buf, params['w_up'])
+    out_buf = jnp.einsum('ecf,efd->ecd', h, params['w_down'])
+
+    y_sorted = out_buf.at[se, pos].get(mode='fill', fill_value=0)
+    kept = (pos < C).astype(jnp.float32)
+    drop_frac = 1.0 - jnp.mean(kept)
+    y = jnp.zeros((N, D), x.dtype).at[st].add(
+        y_sorted * (sg * kept).astype(x.dtype)[:, None])
+    y = y.reshape(B, T, D)
+
+    if cfg.dense_residual:
+        y = y + mlp_forward(params['dense'], x)
+    return y, {'lb_loss': lb_loss, 'drop_frac': drop_frac}

@@ -1,0 +1,218 @@
+"""Mamba2 block via the SSD (state-space duality) chunked algorithm
+[arXiv:2405.21060].
+
+Training/prefill use the chunked formulation: within-chunk quadratic
+("attention-like") terms plus an inter-chunk recurrence carried by
+``lax.scan`` — O(T·Q) work with chunk Q, instead of the naive O(T²).
+Decode is the exact SSM recurrence: h ← exp(dt·A)·h + dt·B⊗x, y = C·h,
+with O(1) state per token — this is what makes the 500k-context decode
+shape trivially sub-quadratic for the SSM/hybrid architectures.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import dense_init, gated_rms_norm
+
+Array = jax.Array
+
+
+def _dims(cfg: ModelConfig):
+    inner = cfg.ssm_inner
+    nh = cfg.ssm_heads
+    s = cfg.ssm_state
+    conv_dim = inner + 2 * s
+    return inner, nh, s, conv_dim
+
+
+def init_mamba(key, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    inner, nh, s, conv_dim = _dims(cfg)
+    ks = jax.random.split(key, 4)
+    proj_out = 2 * inner + 2 * s + nh           # z, xBC, dt
+    dt = jnp.exp(jax.random.uniform(ks[2], (nh,), jnp.float32,
+                                    jnp.log(1e-3), jnp.log(1e-1)))
+    return {
+        'in_proj': dense_init(ks[0], d, proj_out, dtype),
+        'conv_w': (jax.random.normal(ks[1], (cfg.conv_width, conv_dim),
+                                     jnp.float32) * 0.1).astype(dtype),
+        'conv_b': jnp.zeros((conv_dim,), dtype),
+        'A_log': jnp.log(jnp.arange(1, nh + 1, dtype=jnp.float32)),
+        'D': jnp.ones((nh,), jnp.float32),
+        'dt_bias': dt + jnp.log(-jnp.expm1(-dt)),   # inverse-softplus init
+        'norm_scale': jnp.zeros((inner,), dtype),
+        'out_proj': dense_init(ks[3], inner, d, dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# chunked SSD scan (training / prefill)
+# ---------------------------------------------------------------------------
+
+def _segsum_decay(cum: Array) -> Array:
+    """cum: (..., Q, H) within-chunk cumulative log-decay ->
+    lower-triangular decay matrix L[t, j] = exp(cum_t - cum_j), j <= t,
+    shape (..., H, Q, Q)."""
+    diff = cum[..., :, None, :] - cum[..., None, :, :]      # (..., Q, Q, H)
+    Q = cum.shape[-2]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    diff = jnp.where(mask[..., None], diff, -jnp.inf)
+    return jnp.exp(diff).swapaxes(-1, -3).swapaxes(-1, -2)  # (..., H, Q, Q)
+
+
+def ssd_chunked(x_dt: Array, dA: Array, Bm: Array, Cm: Array,
+                chunk: int = 256,
+                initial_state: Optional[Array] = None
+                ) -> Tuple[Array, Array]:
+    """SSD scan.
+
+    x_dt: (B, T, H, P) inputs pre-multiplied by dt
+    dA:   (B, T, H)    per-step log decay (dt * A, A < 0)
+    Bm:   (B, T, S)    input projection (single group, broadcast over heads)
+    Cm:   (B, T, S)    output projection
+    Returns y: (B, T, H, P) and final state (B, H, P, S).
+    """
+    B, T, H, P = x_dt.shape
+    S = Bm.shape[-1]
+    Q = min(chunk, T)
+    assert T % Q == 0, f'seq {T} not divisible by chunk {Q}'
+    nc = T // Q
+
+    xc = x_dt.reshape(B, nc, Q, H, P)
+    dAc = dA.reshape(B, nc, Q, H).astype(jnp.float32)
+    Bc = Bm.reshape(B, nc, Q, S)
+    Cc = Cm.reshape(B, nc, Q, S)
+
+    cum = jnp.cumsum(dAc, axis=2)                       # (B, nc, Q, H)
+    L = _segsum_decay(cum)                              # (B, nc, H, Q, Q)
+    CB = jnp.einsum('bcqs,bcjs->bcqj', Cc, Bc)          # (B, nc, Q, Q)
+    y_diag = jnp.einsum('bchqj,bcqj,bcjhp->bcqhp',
+                        L.astype(x_dt.dtype),
+                        CB.astype(x_dt.dtype), xc)
+
+    total = cum[:, :, -1]                               # (B, nc, H)
+    decay_states = jnp.exp(total[:, :, None] - cum)     # (B, nc, Q, H)
+    states = jnp.einsum('bcqh,bcqs,bcqhp->bchps',
+                        decay_states.astype(x_dt.dtype), Bc, xc)
+    chunk_decay = jnp.exp(total)                        # (B, nc, H)
+    out_decay = jnp.exp(cum)                            # (B, nc, Q, H)
+
+    h0 = (initial_state if initial_state is not None
+          else jnp.zeros((B, H, P, S), x_dt.dtype))
+
+    def body(h, inp):
+        st, cd, od, c = inp                 # state, chunk decay, out decay, C
+        y_off = jnp.einsum('bqs,bhps,bqh->bqhp',
+                           c, h, od.astype(x_dt.dtype))
+        h_next = h * cd.astype(x_dt.dtype)[:, :, None, None] + st
+        return h_next, y_off
+
+    xs = (states.swapaxes(0, 1), chunk_decay.swapaxes(0, 1),
+          out_decay.swapaxes(0, 1), Cc.swapaxes(0, 1))
+    h_final, y_off = jax.lax.scan(body, h0, xs)
+    y = y_diag + y_off.swapaxes(0, 1)
+    return y.reshape(B, T, H, P), h_final
+
+
+# ---------------------------------------------------------------------------
+# block-level forward / decode
+# ---------------------------------------------------------------------------
+
+def _split_proj(cfg: ModelConfig, zxbcdt: Array):
+    inner, nh, s, _ = _dims(cfg)
+    z = zxbcdt[..., :inner]
+    xBC = zxbcdt[..., inner:inner + inner + 2 * s]
+    dt = zxbcdt[..., inner + inner + 2 * s:]
+    return z, xBC, dt
+
+
+def _causal_conv(xBC: Array, w: Array, b: Array) -> Array:
+    """Depthwise causal conv, width W: y_t = sum_i w[i] * x_{t-W+1+i}."""
+    W = w.shape[0]
+    pads = [xBC]
+    for i in range(1, W):
+        pads.append(jnp.pad(xBC, ((0, 0), (i, 0), (0, 0)))[:, :-i])
+    stack = jnp.stack(pads[::-1], axis=2)     # (B, T, W, C) oldest..newest
+    y = jnp.einsum('btwc,wc->btc', stack, w.astype(xBC.dtype))
+    return jax.nn.silu(y + b.astype(xBC.dtype))
+
+
+def mamba_forward(params, cfg: ModelConfig, u: Array,
+                  initial: Optional[dict] = None,
+                  return_cache: bool = False):
+    """u: (B, T, D) -> y (B, T, D) [, cache]."""
+    B, T, _ = u.shape
+    inner, nh, s, conv_dim = _dims(cfg)
+    P = cfg.ssm_headdim
+
+    zxbcdt = u @ params['in_proj']
+    z, xBC_raw, dt_raw = _split_proj(cfg, zxbcdt)
+    xBC = _causal_conv(xBC_raw, params['conv_w'], params['conv_b'])
+    x = xBC[..., :inner].reshape(B, T, nh, P)
+    Bm = xBC[..., inner:inner + s]
+    Cm = xBC[..., inner + s:]
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params['dt_bias'])
+    A = -jnp.exp(params['A_log'])                     # (nh,)
+    dA = dt * A                                       # (B, T, nh)
+    x_dt = x * dt.astype(x.dtype)[..., None]
+
+    y, h_final = ssd_chunked(x_dt, dA, Bm, Cm)
+    y = y + x * params['D'].astype(x.dtype)[:, None]
+    y = y.reshape(B, T, inner)
+    y = gated_rms_norm(y, z, params['norm_scale'], cfg.norm_eps)
+    out = y @ params['out_proj']
+    if not return_cache:
+        return out
+    # conv window must contain the *pre-activation* conv inputs
+    Wd = cfg.conv_width
+    if T >= Wd - 1:
+        conv_state = xBC_raw[:, T - (Wd - 1):]
+    else:
+        conv_state = jnp.pad(xBC_raw, ((0, 0), (Wd - 1 - T, 0), (0, 0)))
+    return out, {'conv': conv_state, 'ssm': h_final}
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype) -> dict:
+    inner, nh, s, conv_dim = _dims(cfg)
+    return {
+        'conv': jnp.zeros((batch, cfg.conv_width - 1, conv_dim), dtype),
+        'ssm': jnp.zeros((batch, nh, cfg.ssm_headdim, s), dtype),
+    }
+
+
+def mamba_decode(params, cfg: ModelConfig, u: Array, cache: dict):
+    """u: (B, 1, D); exact recurrent step. Returns (y, new_cache)."""
+    B = u.shape[0]
+    inner, nh, s, conv_dim = _dims(cfg)
+    P = cfg.ssm_headdim
+
+    zxbcdt = u @ params['in_proj']
+    z, xBC_new, dt_raw = _split_proj(cfg, zxbcdt)     # (B, 1, ·)
+
+    window = jnp.concatenate([cache['conv'], xBC_new], axis=1)  # (B, W, C)
+    y_conv = jnp.einsum('bwc,wc->bc', window,
+                        params['conv_w'].astype(window.dtype))
+    xBC = jax.nn.silu(y_conv + params['conv_b'].astype(window.dtype))
+    new_conv = window[:, 1:]
+
+    x = xBC[..., :inner].reshape(B, nh, P)
+    Bm = xBC[..., inner:inner + s]                    # (B, S)
+    Cm = xBC[..., inner + s:]
+
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32)
+                         + params['dt_bias'])         # (B, nh)
+    A = -jnp.exp(params['A_log'])
+    decay = jnp.exp(dt * A).astype(x.dtype)           # (B, nh)
+    h = cache['ssm']                                  # (B, nh, P, S)
+    add = jnp.einsum('bhp,bs,bh->bhps', x, Bm, dt.astype(x.dtype))
+    h = h * decay[..., None, None] + add
+    y = jnp.einsum('bs,bhps->bhp', Cm, h)
+    y = y + x * params['D'].astype(x.dtype)[:, None]
+    y = y.reshape(B, 1, inner)
+    y = gated_rms_norm(y, z, params['norm_scale'], cfg.norm_eps)
+    return y @ params['out_proj'], {'conv': new_conv, 'ssm': h}

@@ -1,0 +1,391 @@
+"""Decoder-only model assembly for every assigned architecture.
+
+Layers are organised into *groups* — one period of ``cfg.layer_pattern`` —
+and the forward pass is a ``lax.scan`` over groups with ``jax.checkpoint``
+remat, so the HLO stays O(one group) regardless of depth (this is what
+keeps the 480B-param dry-run compile tractable).  Zamba2's shared
+transformer block lives outside the scanned stack and is closed over as a
+loop-invariant, giving genuine weight sharing.
+
+Modality frontends (SigLIP vision / EnCodec audio) are STUBS per the
+harness carve-out: callers pass precomputed prefix embeddings and the model
+projects + prepends them.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models.common import dense_init, dtype_of, embed_init, rms_norm, softcap
+from repro.models.common import chunked_softmax_xent
+from repro.models.mlp import init_mlp, mlp_forward
+from repro.models.moe import init_moe, moe_forward
+from repro.models.ssm import (
+    init_mamba, init_mamba_cache, mamba_decode, mamba_forward,
+)
+
+Array = jax.Array
+AUX_LOSS_WEIGHT = 0.01   # switch-style load-balance loss weight
+
+
+def n_groups(cfg: ModelConfig) -> int:
+    pat = len(cfg.layer_pattern)
+    assert cfg.n_layers % pat == 0, (cfg.name, cfg.n_layers, pat)
+    return cfg.n_layers // pat
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_attn_block(key, cfg: ModelConfig, dtype) -> dict:
+    k1, k2 = jax.random.split(key)
+    p = {
+        'ln': jnp.zeros((cfg.d_model,), dtype),
+        'attn': attn_mod.init_attention(k1, cfg, dtype),
+        'ln2': jnp.zeros((cfg.d_model,), dtype),
+    }
+    if cfg.is_moe:
+        p['moe'] = init_moe(k2, cfg, dtype)
+    else:
+        p['mlp'] = init_mlp(k2, cfg.d_model, cfg.d_ff, dtype)
+    if cfg.post_norm:
+        p['pln'] = jnp.zeros((cfg.d_model,), dtype)
+        p['pln2'] = jnp.zeros((cfg.d_model,), dtype)
+    return p
+
+
+def _init_mamba_block(key, cfg: ModelConfig, dtype) -> dict:
+    return {
+        'ln': jnp.zeros((cfg.d_model,), dtype),
+        'mamba': init_mamba(key, cfg, dtype),
+    }
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    dtype = dtype_of(cfg.param_dtype)
+    keys = jax.random.split(key, 4)
+    params = {
+        'embed': embed_init(keys[0], cfg.vocab_size, cfg.d_model, dtype),
+        'final_norm': jnp.zeros((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params['lm_head'] = dense_init(
+            keys[1], cfg.d_model, cfg.vocab_size, dtype)
+    if cfg.frontend != 'none' and cfg.frontend_embed_dim:
+        params['frontend_proj'] = dense_init(
+            keys[2], cfg.frontend_embed_dim, cfg.d_model, dtype)
+    if 'shared_attn' in cfg.layer_pattern:
+        params['shared'] = _init_attn_block(
+            jax.random.fold_in(keys[3], 7), cfg, dtype)
+
+    def init_group(gkey):
+        entries = {}
+        for i, kind in enumerate(cfg.layer_pattern):
+            if kind == 'shared_attn':
+                continue
+            bkey = jax.random.fold_in(gkey, i)
+            if kind == 'mamba':
+                entries[f'b{i}'] = _init_mamba_block(bkey, cfg, dtype)
+            else:
+                entries[f'b{i}'] = _init_attn_block(bkey, cfg, dtype)
+        return entries
+
+    gkeys = jax.random.split(jax.random.fold_in(keys[3], 13), n_groups(cfg))
+    params['groups'] = jax.vmap(init_group)(gkeys)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# block application (full-sequence)
+# ---------------------------------------------------------------------------
+
+def _apply_attn_block(p, cfg: ModelConfig, x: Array, positions: Array,
+                      window: int) -> Tuple[Array, Array]:
+    aux = jnp.zeros((), jnp.float32)
+    a = attn_mod.attention_forward(
+        p['attn'], cfg, rms_norm(x, p['ln'], cfg.norm_eps), positions, window)
+    if cfg.post_norm:
+        a = rms_norm(a, p['pln'], cfg.norm_eps)
+    x = x + a
+    h = rms_norm(x, p['ln2'], cfg.norm_eps)
+    if cfg.is_moe:
+        f, moe_aux = moe_forward(p['moe'], cfg, h)
+        aux = aux + moe_aux['lb_loss']
+    else:
+        f = mlp_forward(p['mlp'], h)
+    if cfg.post_norm:
+        f = rms_norm(f, p['pln2'], cfg.norm_eps)
+    return x + f, aux
+
+
+def _apply_block(kind: str, bparams, shared, cfg: ModelConfig, x: Array,
+                 positions: Array) -> Tuple[Array, Array]:
+    if kind == 'mamba':
+        h = mamba_forward(bparams['mamba'], cfg,
+                          rms_norm(x, bparams['ln'], cfg.norm_eps))
+        return x + h, jnp.zeros((), jnp.float32)
+    p = shared if kind == 'shared_attn' else bparams
+    window = cfg.sliding_window if kind == 'swa' else 0
+    return _apply_attn_block(p, cfg, x, positions, window)
+
+
+# ---------------------------------------------------------------------------
+# forward / loss
+# ---------------------------------------------------------------------------
+
+def embed_tokens(params, cfg: ModelConfig, tokens: Array,
+                 prefix_embeds: Optional[Array] = None) -> Array:
+    x = jnp.take(params['embed'], tokens, axis=0)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    if prefix_embeds is not None:
+        prefix = prefix_embeds.astype(x.dtype)
+        if 'frontend_proj' in params:
+            prefix = prefix @ params['frontend_proj']
+        x = jnp.concatenate([prefix, x], axis=1)
+    return x
+
+
+def group_slice(params, g: int):
+    return jax.tree.map(lambda a: a[g], params['groups'])
+
+
+def forward(params, cfg: ModelConfig, tokens: Array,
+            prefix_embeds: Optional[Array] = None,
+            remat: bool = True, unroll: bool = False) -> Tuple[Array, Array]:
+    """tokens: (B, T) -> (hidden (B, T_total, D), aux_loss).
+
+    ``unroll=True`` replaces the groups scan with a python loop — used by
+    the dry-run so XLA cost_analysis counts every layer (a scanned while
+    body is costed once regardless of trip count).
+    """
+    x = embed_tokens(params, cfg, tokens, prefix_embeds)
+    T_total = x.shape[1]
+    positions = jnp.arange(T_total, dtype=jnp.int32)
+    shared = params.get('shared')
+
+    def group_body(carry, gparams):
+        x, aux = carry
+        for i, kind in enumerate(cfg.layer_pattern):
+            bp = gparams.get(f'b{i}')
+            x, a = _apply_block(kind, bp, shared, cfg, x, positions)
+            aux = aux + a
+        return (x, aux), None
+
+    if not remat or cfg.remat_policy == 'none':
+        body = group_body
+    elif cfg.remat_policy == 'dots':
+        # save matmul outputs -> far less recompute in backward (§Perf)
+        body = jax.checkpoint(
+            group_body,
+            policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    else:
+        body = jax.checkpoint(group_body)
+    carry = (x, jnp.zeros((), jnp.float32))
+    if unroll:
+        for g in range(n_groups(cfg)):
+            carry, _ = body(carry, group_slice(params, g))
+        x, aux = carry
+    else:
+        (x, aux), _ = jax.lax.scan(body, carry, params['groups'])
+    return rms_norm(x, params['final_norm'], cfg.norm_eps), aux
+
+
+def lm_head_t(params, cfg: ModelConfig) -> Array:
+    """(D, V) output projection (tied -> embed^T)."""
+    if cfg.tie_embeddings:
+        return params['embed'].T
+    return params['lm_head']
+
+
+def logits_fn(params, cfg: ModelConfig, hidden: Array) -> Array:
+    logits = hidden @ lm_head_t(params, cfg)
+    return softcap(logits, cfg.logit_softcap)
+
+
+def loss_fn(params, cfg: ModelConfig, tokens: Array,
+            prefix_embeds: Optional[Array] = None,
+            unroll: bool = False) -> Array:
+    """Next-token cross-entropy (+ MoE load-balance aux)."""
+    hidden, aux = forward(params, cfg, tokens, prefix_embeds, unroll=unroll)
+    P = hidden.shape[1] - tokens.shape[1]      # prefix length
+    # hidden at text position i predicts token i+1
+    h = hidden[:, P:-1] if tokens.shape[1] > 1 else hidden[:, P:]
+    labels = tokens[:, 1:]
+    mask = jnp.ones(labels.shape, jnp.float32)
+    xent = chunked_softmax_xent(
+        h, lm_head_t(params, cfg), labels, mask, cfg.logit_softcap)
+    return xent + AUX_LOSS_WEIGHT * aux
+
+
+# ---------------------------------------------------------------------------
+# KV / SSM caches
+# ---------------------------------------------------------------------------
+
+def entry_cache_len(cfg: ModelConfig, kind: str, cache_len: int) -> int:
+    if kind == 'swa' and cfg.sliding_window:
+        return min(cache_len, cfg.sliding_window)
+    return cache_len
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int,
+               dtype=jnp.bfloat16) -> dict:
+    ng = n_groups(cfg)
+    hd, kv = cfg.resolved_head_dim, cfg.n_kv_heads
+    cache = {}
+    for i, kind in enumerate(cfg.layer_pattern):
+        if kind == 'mamba':
+            c = init_mamba_cache(cfg, batch, dtype)
+        else:
+            S = entry_cache_len(cfg, kind, cache_len)
+            c = {'k': jnp.zeros((batch, S, kv, hd), dtype),
+                 'v': jnp.zeros((batch, S, kv, hd), dtype)}
+        cache[f'b{i}'] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (ng,) + a.shape), c)
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def _decode_block(kind: str, bparams, shared, cfg: ModelConfig, x: Array,
+                  bcache: dict, pos) -> Tuple[Array, dict]:
+    if kind == 'mamba':
+        h = rms_norm(x, bparams['ln'], cfg.norm_eps)
+        y, new_c = mamba_decode(bparams['mamba'], cfg, h, bcache)
+        return x + y, new_c
+    p = shared if kind == 'shared_attn' else bparams
+    window = cfg.sliding_window if kind == 'swa' else 0
+    h = rms_norm(x, p['ln'], cfg.norm_eps)
+    a, ck, cv = attn_mod.attention_decode(
+        p['attn'], cfg, h, bcache['k'], bcache['v'], pos, window)
+    if cfg.post_norm:
+        a = rms_norm(a, p['pln'], cfg.norm_eps)
+    x = x + a
+    h2 = rms_norm(x, p['ln2'], cfg.norm_eps)
+    if cfg.is_moe:
+        f, _ = moe_forward(p['moe'], cfg, h2)
+    else:
+        f = mlp_forward(p['mlp'], h2)
+    if cfg.post_norm:
+        f = rms_norm(f, p['pln2'], cfg.norm_eps)
+    return x + f, {'k': ck, 'v': cv}
+
+
+def decode_step(params, cfg: ModelConfig, cache: dict, token: Array,
+                pos, unroll: bool = False) -> Tuple[Array, dict]:
+    """token: (B, 1) int32; pos: scalar absolute position of the new token.
+    Returns (logits (B, 1, V), new_cache)."""
+    x = embed_tokens(params, cfg, token)
+    shared = params.get('shared')
+
+    def body(x, inp):
+        gparams, gcache = inp
+        new_gcache = {}
+        for i, kind in enumerate(cfg.layer_pattern):
+            bp = gparams.get(f'b{i}')
+            x, new_gcache[f'b{i}'] = _decode_block(
+                kind, bp, shared, cfg, x, gcache[f'b{i}'], pos)
+        return x, new_gcache
+
+    if unroll:
+        outs = []
+        for g in range(n_groups(cfg)):
+            gcache = jax.tree.map(lambda a: a[g], cache)
+            x, new_g = body(x, (group_slice(params, g), gcache))
+            outs.append(new_g)
+        new_cache = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+    else:
+        x, new_cache = jax.lax.scan(body, x, (params['groups'], cache))
+    x = rms_norm(x, params['final_norm'], cfg.norm_eps)
+    return logits_fn(params, cfg, x), new_cache
+
+
+# ---------------------------------------------------------------------------
+# prefill
+# ---------------------------------------------------------------------------
+
+def _ring_scatter(full_kv: Array, S: int) -> Array:
+    """Place the last S positions of a (B, T, Kv, hd) tensor into their
+    ring-buffer slots (pos % S) of a length-S cache."""
+    B, T = full_kv.shape[:2]
+    take = min(T, S)
+    last = full_kv[:, T - take:]
+    positions = jnp.arange(T - take, T, dtype=jnp.int32)
+    slots = positions % S
+    out = jnp.zeros((B, S) + full_kv.shape[2:], full_kv.dtype)
+    return out.at[:, slots].set(last)
+
+
+def prefill(params, cfg: ModelConfig, tokens: Array, cache_len: int,
+            prefix_embeds: Optional[Array] = None,
+            cache_dtype=jnp.bfloat16, unroll: bool = False
+            ) -> Tuple[Array, dict]:
+    """Run the prompt, build a decode-ready cache.
+
+    Returns (last-position logits (B, 1, V), cache).  The caller continues
+    with ``decode_step(..., pos=T_total)``.
+    """
+    x = embed_tokens(params, cfg, tokens, prefix_embeds)
+    B, T_total = x.shape[:2]
+    positions = jnp.arange(T_total, dtype=jnp.int32)
+    shared = params.get('shared')
+
+    def group_body(x, gparams):
+        new_gcache = {}
+        for i, kind in enumerate(cfg.layer_pattern):
+            bp = gparams.get(f'b{i}')
+            if kind == 'mamba':
+                h = rms_norm(x, bp['ln'], cfg.norm_eps)
+                y, c = mamba_forward(bp['mamba'], cfg, h, return_cache=True)
+                x = x + y
+                new_gcache[f'b{i}'] = jax.tree.map(
+                    lambda a: a.astype(cache_dtype), c)
+            else:
+                p = shared if kind == 'shared_attn' else bp
+                window = cfg.sliding_window if kind == 'swa' else 0
+                h = rms_norm(x, p['ln'], cfg.norm_eps)
+                a, (k, v) = attn_mod.attention_prefill(
+                    p['attn'], cfg, h, positions, window)
+                if cfg.post_norm:
+                    a = rms_norm(a, p['pln'], cfg.norm_eps)
+                x = x + a
+                h2 = rms_norm(x, p['ln2'], cfg.norm_eps)
+                if cfg.is_moe:
+                    f, _ = moe_forward(p['moe'], cfg, h2)
+                else:
+                    f = mlp_forward(p['mlp'], h2)
+                if cfg.post_norm:
+                    f = rms_norm(f, p['pln2'], cfg.norm_eps)
+                x = x + f
+                S = entry_cache_len(cfg, kind, cache_len)
+                if S >= T_total and kind != 'swa':
+                    ck = jnp.zeros((B, S) + k.shape[2:], cache_dtype)
+                    ck = jax.lax.dynamic_update_slice_in_dim(
+                        ck, k.astype(cache_dtype), 0, axis=1)
+                    cv = jnp.zeros((B, S) + v.shape[2:], cache_dtype)
+                    cv = jax.lax.dynamic_update_slice_in_dim(
+                        cv, v.astype(cache_dtype), 0, axis=1)
+                else:
+                    ck = _ring_scatter(k.astype(cache_dtype), S)
+                    cv = _ring_scatter(v.astype(cache_dtype), S)
+                new_gcache[f'b{i}'] = {'k': ck, 'v': cv}
+        return x, new_gcache
+
+    if unroll:
+        outs = []
+        for g in range(n_groups(cfg)):
+            x, gc = group_body(x, group_slice(params, g))
+            outs.append(gc)
+        cache = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+    else:
+        x, cache = jax.lax.scan(group_body, x, params['groups'])
+    x = rms_norm(x[:, -1:], params['final_norm'], cfg.norm_eps)
+    return logits_fn(params, cfg, x), cache

@@ -1,0 +1,60 @@
+"""Batched serving: prefill + autoregressive decode over the model zoo.
+
+`generate` drives the same `prefill` / `decode_step` primitives the
+multi-pod dry-run lowers, so anything served here is exactly what compiles
+for the production mesh.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as tf
+
+Array = jax.Array
+
+
+@functools.partial(jax.jit, static_argnames=('cfg', 'cache_len'))
+def _prefill(params, cfg: ModelConfig, tokens, prefix_embeds, cache_len: int):
+    return tf.prefill(params, cfg, tokens, cache_len,
+                      prefix_embeds=prefix_embeds, cache_dtype=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=('cfg', 'temperature'))
+def _decode(params, cfg: ModelConfig, cache, token, pos, key,
+            temperature: float):
+    logits, cache = tf.decode_step(params, cfg, cache, token, pos)
+    logits = logits[:, 0].astype(jnp.float32)
+    if temperature > 0:
+        nxt = jax.random.categorical(key, logits / temperature)
+    else:
+        nxt = jnp.argmax(logits, axis=-1)
+    return nxt.astype(jnp.int32)[:, None], cache
+
+
+def generate(params, cfg: ModelConfig, prompt: Array, n_new: int,
+             cache_len: Optional[int] = None,
+             prefix_embeds: Optional[Array] = None,
+             temperature: float = 0.0, seed: int = 0
+             ) -> Tuple[Array, Array]:
+    """prompt: (B, Tp) int32 -> (generated (B, n_new), last_logits)."""
+    B, Tp = prompt.shape
+    P = prefix_embeds.shape[1] if prefix_embeds is not None else 0
+    cache_len = cache_len or (P + Tp + n_new + 8)
+    logits, cache = _prefill(params, cfg, prompt, prefix_embeds, cache_len)
+    token = jnp.argmax(logits[:, 0].astype(jnp.float32),
+                       axis=-1).astype(jnp.int32)[:, None]
+    key = jax.random.PRNGKey(seed)
+    out = [token]
+    pos = P + Tp
+    for i in range(n_new - 1):
+        key, kd = jax.random.split(key)
+        token, cache = _decode(params, cfg, cache, token,
+                               jnp.asarray(pos + i, jnp.int32), kd,
+                               temperature)
+        out.append(token)
+    return jnp.concatenate(out, axis=1), logits

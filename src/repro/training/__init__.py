@@ -1,0 +1,2 @@
+from repro.training.fl_loop import FLHistory, FLSimulator, build_simulator  # noqa: F401
+from repro.training.optimizer import adamw, get_optimizer, momentum, sgd  # noqa: F401

@@ -1,0 +1,128 @@
+"""LLM-scale federated train step — SP-FL as the gradient transport of a
+data-parallel training system (DESIGN.md §3).
+
+The FL client axis is the mesh's (pod, data) extent: ``jax.vmap(jax.grad)``
+over a leading client axis of the batch produces stacked per-client
+gradients whose client dim shards over ('pod','data') and whose parameter
+dims shard over 'model' — so the K× gradient memory is fully distributed.
+The transport then runs vectorized over clients and its final mean over the
+client axis is what GSPMD lowers to the cross-client all-reduce (the
+"uplink").
+
+The wireless channel success probabilities (q, p) enter as *inputs*: the
+hierarchical allocator (repro.core.allocation) runs host-side between
+rounds on the per-client scalars this step also returns — exactly
+Algorithm 2 steps 4–5 with a one-round-stale norm report (noted in
+DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FLConfig, ModelConfig
+from repro.core import transport as tr
+from repro.models import transformer as tf
+
+
+def init_gbar(params) -> Any:
+    """Compensation modulus tree (last_global style), fp32 zeros."""
+    return jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def client_batch_shapes(cfg: ModelConfig, n_clients: int,
+                        global_batch: int, seq_len: int) -> Dict[str, Any]:
+    """ShapeDtypeStructs of one training batch, client-major."""
+    assert global_batch % n_clients == 0, (global_batch, n_clients)
+    b = global_batch // n_clients
+    shapes = {'tokens': jax.ShapeDtypeStruct(
+        (n_clients, b, seq_len), jnp.int32)}
+    if cfg.frontend == 'vision' and cfg.n_prefix_tokens:
+        shapes['prefix'] = jax.ShapeDtypeStruct(
+            (n_clients, b, cfg.n_prefix_tokens, cfg.frontend_embed_dim),
+            jnp.bfloat16)
+    return shapes
+
+
+def make_fl_train_step(cfg: ModelConfig, fl: FLConfig,
+                       transport_kind: str = 'spfl', unroll: bool = False):
+    """Returns train_step(params, batch, gbar, q, p, key) ->
+    (new_params, new_gbar, metrics)."""
+    lr = fl.learning_rate
+
+    def train_step(params, batch, gbar, q, p, key):
+        def client_loss(params_, bk):
+            return tf.loss_fn(params_, cfg, bk['tokens'], bk.get('prefix'),
+                              unroll=unroll)
+
+        def one(bk):
+            return jax.value_and_grad(client_loss)(params, bk)
+
+        losses, grads = jax.vmap(one)(batch)      # (K,), leaves (K, ...)
+
+        if transport_kind == 'spfl':
+            ghat, stats, diag = tr.spfl_aggregate_tree(
+                grads, gbar, q, p, fl, key)
+        elif transport_kind == 'error_free':
+            ghat, stats, diag = tr.error_free_aggregate_tree(grads, fl, key)
+        else:
+            raise ValueError(
+                f'LLM-scale transport must be spfl|error_free, '
+                f'got {transport_kind!r}')
+
+        new_params = jax.tree.map(
+            lambda pp, g: (pp.astype(jnp.float32)
+                           - lr * g).astype(pp.dtype), params, ghat)
+        new_gbar = jax.tree.map(lambda g: jnp.abs(g), ghat)
+        metrics = {
+            'loss': jnp.mean(losses),
+            'client_losses': losses,
+            'g_norm_sq': stats['g2'],            # -> host allocator
+            'g_min': stats['g_min'],
+            'g_max': stats['g_max'],
+            'sign_ok': diag.sign_ok,
+            'mod_ok': diag.mod_ok,
+            'payload_bits': diag.payload_bits,
+        }
+        return new_params, new_gbar, metrics
+
+    return train_step
+
+
+def make_standard_train_step(cfg: ModelConfig, fl: FLConfig,
+                             unroll: bool = False):
+    """Plain data-parallel step (batch (B, T), one global gradient).
+
+    Used where classic client-resident-model FL is physically impossible —
+    arctic-480b's experts are sharded over the client axes, so per-client
+    full gradients do not exist (DESIGN.md §Arch-applicability).  The
+    uplink is error-free; gradients are still stochastically quantized so
+    the numerics match the FL path as closely as possible.
+    """
+    lr = fl.learning_rate
+
+    def train_step(params, batch, key):
+        def loss(params_):
+            return tf.loss_fn(params_, cfg, batch['tokens'],
+                              batch.get('prefix'), unroll=unroll)
+
+        loss_val, grads = jax.value_and_grad(loss)(params)
+        new_params = jax.tree.map(
+            lambda pp, g: (pp.astype(jnp.float32)
+                           - lr * g.astype(jnp.float32)).astype(pp.dtype),
+            params, grads)
+        g2 = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                 for g in jax.tree.leaves(grads))
+        return new_params, {'loss': loss_val, 'g_norm_sq': g2}
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig):
+    def eval_step(params, batch):
+        return tf.loss_fn(params, cfg, batch['tokens'], batch.get('prefix'))
+    return eval_step

@@ -1,0 +1,76 @@
+"""Minimal pytree optimizers (no optax offline).
+
+The FL global update is plain GD (paper eq. (6)); SGD-momentum and AdamW
+exist for the LM example drivers and beyond-paper experiments.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], Tuple[Any, Any]]  # (grads, state, params)
+
+
+def _tmap(f, *trees):
+    return jax.tree.map(f, *trees)
+
+
+def sgd(lr: float) -> Optimizer:
+    def init(params):
+        return ()
+
+    def update(grads, state, params):
+        new = _tmap(lambda p, g: (p.astype(jnp.float32)
+                                  - lr * g.astype(jnp.float32)).astype(p.dtype),
+                    params, grads)
+        return new, state
+    return Optimizer(init, update)
+
+
+def momentum(lr: float, beta: float = 0.9) -> Optimizer:
+    def init(params):
+        return _tmap(lambda p: jnp.zeros_like(p, jnp.float32), params)
+
+    def update(grads, state, params):
+        vel = _tmap(lambda v, g: beta * v + g.astype(jnp.float32),
+                    state, grads)
+        new = _tmap(lambda p, v: (p.astype(jnp.float32)
+                                  - lr * v).astype(p.dtype), params, vel)
+        return new, vel
+    return Optimizer(init, update)
+
+
+def adamw(lr: float, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        z = _tmap(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return {'m': z, 'v': jax.tree.map(jnp.zeros_like, z),
+                't': jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        t = state['t'] + 1
+        m = _tmap(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+                  state['m'], grads)
+        v = _tmap(lambda v_, g: b2 * v_
+                  + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                  state['v'], grads)
+        bc1 = 1 - b1 ** t.astype(jnp.float32)
+        bc2 = 1 - b2 ** t.astype(jnp.float32)
+
+        def step(p, m_, v_):
+            upd = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+            return (p.astype(jnp.float32)
+                    - lr * (upd + weight_decay * p.astype(jnp.float32))
+                    ).astype(p.dtype)
+
+        return _tmap(step, params, m, v), {'m': m, 'v': v, 't': t}
+    return Optimizer(init, update)
+
+
+def get_optimizer(name: str, lr: float) -> Optimizer:
+    return {'sgd': sgd, 'momentum': momentum, 'adamw': adamw}[name](lr)

@@ -1,0 +1,17 @@
+import os
+import sys
+
+# src-layout import without install
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), '..', 'src'))
+
+# Keep tests on the true device count (the dry-run sets its own XLA_FLAGS
+# in a separate process; smoke tests must see 1 device per the harness).
+os.environ.setdefault('JAX_PLATFORMS', 'cpu')
+
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope='session')
+def rng():
+    return np.random.RandomState(0)

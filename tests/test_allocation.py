@@ -1,0 +1,106 @@
+"""Hierarchical resource allocation (Algorithm 1, §IV-D)."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import FLConfig
+from repro.core import allocation as AL
+from repro.core import channel as CH
+from repro.core import convergence as CV
+
+
+def _problem(k=12, power_dbm=-14.0, seed=0):
+    fl = dataclasses.replace(FLConfig(), tx_power_dbm=power_dbm)
+    key = jax.random.PRNGKey(seed)
+    d = CH.sample_distances(key, k, 500.0)
+    gains = CH.path_gain(np.asarray(d), fl.path_loss_exp)
+    p_w = np.full(k, fl.tx_power_w)
+    rng = np.random.RandomState(seed)
+    g2 = np.abs(rng.randn(k)) + 0.2
+    gb2 = np.abs(rng.randn(k)) * 0.4 + 0.05
+    v = np.sqrt(g2 * gb2) * rng.uniform(0, 1, k)
+    d2 = np.abs(rng.randn(k)) * 0.05
+    return AL.problem_from_stats(g2, gb2, v, d2, gains, p_w, 60000, fl)
+
+
+def test_alpha_optimizer_matches_brute_force():
+    prob = _problem()
+    beta = np.full(prob.n, 1.0 / prob.n)
+    a_opt = AL.optimize_alpha(prob, beta)
+    grid = np.linspace(1e-4, 1.0, 2001)
+    hs, hv = prob.h_s(beta), prob.h_v(beta)
+    for k in range(prob.n):
+        coef_k = CV.GCoefficients(*(np.full(grid.shape, c[k])
+                                    for c in prob.coef))
+        vals = CV.g_value(coef_k, grid, np.full(grid.shape, hs[k]),
+                          np.full(grid.shape, hv[k]))
+        best = vals.min()
+        got = CV.g_value(CV.GCoefficients(*(np.array([c[k]])
+                                            for c in prob.coef)),
+                         np.array([a_opt[k]]), hs[k:k + 1], hv[k:k + 1])[0]
+        assert got <= best + 1e-6 + 1e-6 * abs(best)
+
+
+def test_sca_monotone_descent():
+    prob = _problem()
+    alpha = np.full(prob.n, 0.5)
+    beta = np.full(prob.n, 1.0 / prob.n)
+    prev = prob.objective(alpha, beta)
+    b = AL.optimize_beta_sca(prob, alpha, beta)
+    cur = prob.objective(alpha, b)
+    assert cur <= prev + 1e-9
+    assert b.sum() <= 1.0 + 1e-6
+    assert np.all(b > 0)
+
+
+def test_barrier_feasible_and_descends():
+    prob = _problem()
+    alpha = np.full(prob.n, 0.5)
+    beta0 = np.full(prob.n, 1.0 / prob.n)
+    b = AL.optimize_beta_barrier(prob, alpha, beta0)
+    assert b.sum() < 1.0 and np.all(b > 0) and np.all(b < 1)
+    assert prob.objective(alpha, b) <= prob.objective(alpha, beta0) + 1e-9
+
+
+@pytest.mark.parametrize('power', [-4.0, -24.0])
+def test_alternating_beats_uniform(power):
+    prob = _problem(power_dbm=power)
+    uni = AL.solve(prob, 'uniform')
+    alt = AL.solve(prob, 'alternating', max_iters=2)
+    bar = AL.solve(prob, 'barrier')
+    assert alt.objective <= uni.objective + 1e-9
+    assert bar.objective <= uni.objective + 1e-9
+    for sol in (uni, alt, bar):
+        assert sol.beta.sum() <= 1.0 + 1e-6
+        assert np.all((sol.alpha >= 0) & (sol.alpha <= 1))
+        assert np.all((sol.q >= 0) & (sol.q <= 1))
+        assert np.all((sol.p >= 0) & (sol.p <= 1))
+
+
+def test_more_important_clients_get_more_bandwidth():
+    """Remark 1: larger ||g_k|| should attract more resources."""
+    fl = dataclasses.replace(FLConfig(), tx_power_dbm=-30.0)
+    k = 8
+    gains = np.full(k, 1e-8)          # identical channels
+    p_w = np.full(k, fl.tx_power_w)
+    g2 = np.linspace(0.1, 5.0, k)     # increasing importance
+    gb2 = np.full(k, 0.2)
+    v = np.sqrt(g2 * gb2) * 0.5
+    d2 = np.full(k, 0.02)
+    prob = AL.problem_from_stats(g2, gb2, v, d2, gains, p_w, 60000, fl)
+    sol = AL.solve(prob, 'alternating', max_iters=2)
+    # bandwidth should (weakly) increase with importance overall
+    corr = np.corrcoef(g2, sol.beta)[0, 1]
+    assert corr > 0.2, (sol.beta, corr)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000), power=st.floats(-35.0, 0.0))
+def test_property_solver_never_worse_than_uniform(seed, power):
+    prob = _problem(k=6, power_dbm=power, seed=seed)
+    uni = AL.solve(prob, 'uniform')
+    bar = AL.solve(prob, 'barrier')
+    assert bar.objective <= uni.objective + 1e-7 * (1 + abs(uni.objective))

@@ -1,0 +1,101 @@
+"""Wireless channel model: eq. (9)-(14)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import FLConfig
+from repro.core import channel as CH
+
+FL = FLConfig()
+
+
+def _setup(k=16, seed=0):
+    key = jax.random.PRNGKey(seed)
+    d = CH.sample_distances(key, k, 500.0)
+    gains = CH.path_gain(np.asarray(d), FL.path_loss_exp)
+    p_w = np.full(k, FL.tx_power_w)
+    return gains, p_w
+
+
+def test_h_terms_nonpositive():
+    gains, p_w = _setup()
+    beta = np.full(16, 1 / 16)
+    assert np.all(np.asarray(CH.h_sign(beta, p_w, gains, 60000, FL)) <= 0)
+    assert np.all(np.asarray(CH.h_modulus(beta, p_w, gains, 60000, FL)) <= 0)
+
+
+def test_probs_in_unit_interval_and_boundaries():
+    gains, p_w = _setup()
+    beta = np.full(16, 1 / 16)
+    hs = CH.h_sign(beta, p_w, gains, 60000, FL)
+    hv = CH.h_modulus(beta, p_w, gains, 60000, FL)
+    q0 = CH.sign_success_prob(np.zeros(16), hs)
+    p1 = CH.modulus_success_prob(np.ones(16), hv)
+    assert np.allclose(np.asarray(q0), 0.0)     # eq. (11): alpha=0 -> q=0
+    assert np.allclose(np.asarray(p1), 0.0)     # eq. (13): alpha=1 -> p=0
+    for a in (0.1, 0.5, 0.9):
+        q, p = CH.success_probs(np.full(16, a), beta, p_w, gains, 60000, FL)
+        assert np.all((np.asarray(q) >= 0) & (np.asarray(q) <= 1))
+        assert np.all((np.asarray(p) >= 0) & (np.asarray(p) <= 1))
+
+
+def test_monotonicity():
+    gains, p_w = _setup()
+    beta = np.full(16, 1 / 16)
+    hs = CH.h_sign(beta, p_w, gains, 60000, FL)
+    q_lo = np.asarray(CH.sign_success_prob(np.full(16, 0.2), hs))
+    q_hi = np.asarray(CH.sign_success_prob(np.full(16, 0.8), hs))
+    assert np.all(q_hi >= q_lo)          # more sign power -> higher q
+    # more bandwidth -> higher success (for these operating points)
+    hs2 = CH.h_sign(beta * 2, p_w, gains, 60000, FL)
+    q2 = np.asarray(CH.sign_success_prob(np.full(16, 0.5), hs2))
+    q1 = np.asarray(CH.sign_success_prob(np.full(16, 0.5), hs))
+    assert np.all(q2 >= q1 - 1e-12)
+    # more distance -> lower success
+    gains_far = gains * 0.1
+    hs3 = CH.h_sign(beta, p_w, gains_far, 60000, FL)
+    q3 = np.asarray(CH.sign_success_prob(np.full(16, 0.5), hs3))
+    assert np.all(q3 <= q1 + 1e-12)
+
+
+def test_empirical_matches_analytic():
+    gains, p_w = _setup(8)
+    # low power so probabilities are interior
+    fl = dataclasses.replace(FL, tx_power_dbm=-30.0)
+    p_w = np.full(8, fl.tx_power_w)
+    alpha = np.full(8, 0.6)
+    beta = np.full(8, 1 / 8)
+    q, p = CH.success_probs(alpha, beta, p_w, gains, 60000, fl)
+    keys = jax.random.split(jax.random.PRNGKey(5), 4000)
+    sims = [CH.simulate_outcomes_fading(k, alpha, beta, p_w, gains,
+                                        60000, fl) for k in keys[:1500]]
+    emp_q = np.mean([np.asarray(s[0]) for s in sims], axis=0)
+    emp_p = np.mean([np.asarray(s[1]) for s in sims], axis=0)
+    assert np.max(np.abs(emp_q - np.asarray(q))) < 0.05
+    assert np.max(np.abs(emp_p - np.asarray(p))) < 0.05
+
+
+def test_capacity_positive_and_increasing_in_power():
+    gains, p_w = _setup(4)
+    c1 = CH.sign_capacity(0.5, 0.25, p_w, gains, 1.0, FL)
+    c2 = CH.sign_capacity(0.9, 0.25, p_w, gains, 1.0, FL)
+    assert np.all(np.asarray(c1) > 0)
+    assert np.all(np.asarray(c2) >= np.asarray(c1))
+
+
+@settings(max_examples=25, deadline=None)
+@given(alpha=st.floats(0.01, 0.99), beta=st.floats(0.001, 0.9),
+       pow_dbm=st.floats(-40.0, 10.0), bits=st.integers(100, 10**7))
+def test_property_probs_valid(alpha, beta, pow_dbm, bits):
+    fl = dataclasses.replace(FL, tx_power_dbm=pow_dbm)
+    gains, _ = _setup(4)
+    p_w = np.full(4, fl.tx_power_w)
+    q, p = CH.success_probs(np.full(4, alpha), np.full(4, beta), p_w,
+                            gains, bits, fl)
+    q, p = np.asarray(q), np.asarray(p)
+    assert np.all(q >= 0) and np.all(q <= 1) and not np.any(np.isnan(q))
+    assert np.all(p >= 0) and np.all(p <= 1) and not np.any(np.isnan(p))

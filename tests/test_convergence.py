@@ -1,0 +1,101 @@
+"""Theorem 1: G coefficients, the two G forms, and bound validity."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import FLConfig
+from repro.core import convergence as CV
+from repro.core import channel as CH
+
+
+def _coef(k=8, seed=0):
+    rng = np.random.RandomState(seed)
+    g2 = np.abs(rng.randn(k)) + 0.1
+    gb2 = np.abs(rng.randn(k)) * 0.5
+    # v = <g, s(g) gbar> <= ||g|| ||gbar|| (and >= 0)
+    v = np.sqrt(g2 * gb2) * rng.uniform(0, 1, k)
+    d2 = np.abs(rng.randn(k)) * 0.05
+    return CV.g_coefficients(g2, gb2, v, d2, lipschitz=20.0, eta=0.05), \
+        dict(g2=g2, gb2=gb2, v=v, d2=d2)
+
+
+def test_g_two_forms_agree():
+    """Exp-form (27, line 2+) == p/q-form (27, line 1) on interior
+    operating points (both saturate identically in deep outage)."""
+    coef, _ = _coef()
+    fl = FLConfig()
+    key = jax.random.PRNGKey(0)
+    d = CH.sample_distances(key, 8, 500.0)
+    gains = np.asarray(CH.path_gain(np.asarray(d), fl.path_loss_exp))
+    p_w = np.full(8, fl.tx_power_w)
+    beta = np.full(8, 1 / 8)
+    hs = np.asarray(CH.h_sign(beta, p_w, gains, 60000, fl))
+    hv = np.asarray(CH.h_modulus(beta, p_w, gains, 60000, fl))
+    for a in (0.2, 0.5, 0.8):
+        alpha = np.full(8, a)
+        g1 = CV.g_value(coef, alpha, hs, hv)
+        q = np.exp(hs / a)
+        p = np.exp(hv / (1 - a))
+        g2 = CV.g_value_from_probs(coef, p, q)
+        # h terms arrive in float32 from the jnp channel model
+        assert np.allclose(g1, g2, rtol=1e-5, atol=1e-5)
+
+
+def test_coefficients_signs():
+    """B >= 0 and D >= 0 always (paper §IV-B); A, C sign-indefinite."""
+    for seed in range(5):
+        coef, s = _coef(seed=seed)
+        # B = g2 + gb2 - 2v >= (sqrt(g2)-sqrt(gb2))^2 >= 0 given v<=sqrt(g2 gb2)
+        assert np.all(coef.B >= -1e-12)
+        assert np.all(coef.D >= 0)
+
+
+def test_g_prime_matches_numeric():
+    coef, _ = _coef(4)
+    hs = np.full(4, -0.3)
+    hv = np.full(4, -0.8)
+    for a in (0.3, 0.5, 0.7):
+        alpha = np.full(4, a)
+        eps = 1e-6
+        num = (CV.g_value(coef, alpha + eps, hs, hv)
+               - CV.g_value(coef, alpha - eps, hs, hv)) / (2 * eps)
+        ana = CV.g_prime_alpha(coef, alpha, hs, hv)
+        assert np.allclose(num, ana, rtol=1e-4, atol=1e-6)
+
+
+def test_alpha_zero_blows_up():
+    """Remark 2: q -> 0 makes the bound diverge (sign reliability is
+    first-order; modulus only enters higher-order terms)."""
+    coef, _ = _coef(4)
+    hs = np.full(4, -0.5)
+    hv = np.full(4, -0.5)
+    g_small_alpha = CV.g_value(coef, np.full(4, 1e-9), hs, hv)
+    g_mid = CV.g_value(coef, np.full(4, 0.5), hs, hv)
+    assert np.all(g_small_alpha > np.abs(g_mid) * 1e3)
+
+
+def test_one_step_bound_holds_on_cnn():
+    """Statistical Theorem-1 check: measured E[F(w+1)] - F(w) <= bound."""
+    from repro.configs.base import FLConfig
+    from repro.training.fl_loop import build_simulator
+    fl = FLConfig(n_devices=8, allocator='barrier', seed=3)
+    sim = build_simulator(fl, per_device=100, n_test=200)
+    h = sim.run(6, compute_bound=True)
+    # compare the bound against the actually measured per-round decrement;
+    # Theorem 1 bounds the EXPECTED decrement, so allow MC slack
+    for b, d in zip(h.bound[1:], h.loss_delta[1:]):
+        assert d <= b + 0.25, (d, b)
+
+
+def test_bound_inputs_from_grads():
+    rng = np.random.RandomState(0)
+    grads = rng.randn(4, 100)
+    gbar = np.abs(rng.randn(100))
+    out = CV.bound_inputs_from_grads(grads, gbar)
+    assert out['g2'].shape == (4,)
+    assert np.all(out['v'] >= 0)
+    assert np.allclose(out['g2'], np.sum(grads ** 2, axis=1))
+    g = grads.mean(0)
+    assert np.isclose(out['g_global2'], np.sum(g ** 2))

@@ -1,0 +1,96 @@
+"""End-to-end FL integration: Algorithm 2 on the paper's CNN setting."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs.base import FLConfig
+from repro.training.fl_loop import build_simulator
+
+
+def _fl(**kw):
+    base = dict(n_devices=6, allocator='barrier', seed=0)
+    base.update(kw)
+    return FLConfig(**base)
+
+
+@pytest.fixture(scope='module')
+def histories():
+    """Run each transport once on a small shared problem."""
+    out = {}
+    for kind in ('error_free', 'spfl', 'dds', 'onebit', 'scheduling'):
+        sim = build_simulator(_fl(transport=kind), per_device=100,
+                              n_test=300)
+        out[kind] = sim.run(8)
+    return out
+
+
+def test_error_free_learns(histories):
+    h = histories['error_free']
+    assert h.loss[-1] < h.loss[0] - 0.1
+    assert h.test_acc[-1] > h.test_acc[0]
+
+
+def test_spfl_learns(histories):
+    h = histories['spfl']
+    assert h.loss[-1] < h.loss[0] - 0.05
+    assert all(np.isfinite(h.loss))
+
+
+def test_all_transports_produce_finite_histories(histories):
+    for kind, h in histories.items():
+        assert all(np.isfinite(h.loss)), kind
+        assert len(h.loss) == 8, kind
+        assert all(0 <= a <= 1 for a in h.test_acc), kind
+
+
+def test_payload_accounting(histories):
+    # one-bit sends ~1/(b+1) the bits of dds per round
+    dds = np.mean(histories['dds'].payload_bits)
+    onebit = np.mean(histories['onebit'].payload_bits)
+    assert onebit < dds / 3
+    # spfl payload = sign + modulus packets
+    spfl = np.mean(histories['spfl'].payload_bits)
+    assert abs(spfl - dds) / dds < 0.05    # same total bits, different split
+
+
+def test_compensation_variants_run():
+    for comp in ('last_global', 'last_local', 'zeros', 'seeded_random'):
+        sim = build_simulator(_fl(compensation=comp), per_device=60,
+                              n_test=100)
+        h = sim.run(3)
+        assert all(np.isfinite(h.loss)), comp
+
+
+def test_retransmission_variant_runs():
+    sim = build_simulator(_fl(transport='spfl_retx'), per_device=60,
+                          n_test=100)
+    h = sim.run(3)
+    assert all(np.isfinite(h.loss))
+    assert np.mean(h.sign_ok_frac) >= 0.5
+
+
+def test_spfl_robust_in_deep_outage():
+    """At very low power SP-FL must stay finite (1/q guard) and still
+    prioritize signs (alpha pushes sign success above modulus success)."""
+    sim = build_simulator(_fl(tx_power_dbm=-40.0), per_device=60,
+                          n_test=100)
+    h = sim.run(4)
+    assert all(np.isfinite(h.loss))
+    assert np.mean(h.sign_ok_frac[1:]) >= np.mean(h.mod_ok_frac[1:]) - 0.05
+
+
+def test_iid_vs_noniid_partitions():
+    sim_iid = build_simulator(_fl(), per_device=60, n_test=100, iid=True)
+    sim_non = build_simulator(_fl(dirichlet_alpha=0.1), per_device=60,
+                              n_test=100, iid=False)
+    # non-IID client labels should be more concentrated
+    import numpy as np
+    ent_iid, ent_non = [], []
+    for sim, acc in ((sim_iid, ent_iid), (sim_non, ent_non)):
+        for k in range(sim.K):
+            y = np.asarray(sim.client_y[k])
+            p = np.bincount(y, minlength=10) / len(y)
+            p = p[p > 0]
+            acc.append(-(p * np.log(p)).sum())
+    assert np.mean(ent_non) < np.mean(ent_iid) - 0.3

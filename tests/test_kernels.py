@@ -1,0 +1,88 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype/bits sweeps
+(interpret=True on CPU, per the harness)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+SHAPES = [64, 1000, 65536, 65536 + 3, 128 * 512, 128 * 512 + 1]
+BITS = [1, 2, 3, 4, 8]
+
+
+def _inputs(n, seed=0, dtype=jnp.float32):
+    key = jax.random.PRNGKey(seed)
+    g = (jax.random.normal(key, (n,)) * 0.03).astype(dtype)
+    rand = jax.random.uniform(jax.random.fold_in(key, 1), (n,))
+    gbar = jnp.abs(jax.random.normal(jax.random.fold_in(key, 2), (n,))
+                   ) * 0.03
+    gmin = float(jnp.min(jnp.abs(g)))
+    gmax = float(jnp.max(jnp.abs(g)))
+    return g, rand, gbar, gmin, gmax
+
+
+@pytest.mark.parametrize('n', SHAPES)
+@pytest.mark.parametrize('bits', [1, 3, 8])
+def test_quantize_kernel_matches_ref(n, bits):
+    g, rand, gbar, gmin, gmax = _inputs(n)
+    s, q = ops.stochastic_quantize_flat(g, rand, gmin, gmax, bits)
+    s_r, q_r = ref.quantize_ref(g, rand, gmin, gmax, bits)
+    assert jnp.array_equal(s, s_r)
+    assert jnp.array_equal(q, q_r)
+
+
+@pytest.mark.parametrize('n', [1000, 128 * 512 + 7])
+@pytest.mark.parametrize('bits', BITS)
+@pytest.mark.parametrize('mod_ok', [0.0, 1.0])
+def test_dequant_kernel_matches_ref(n, bits, mod_ok):
+    g, rand, gbar, gmin, gmax = _inputs(n, seed=bits)
+    s, q = ref.quantize_ref(g, rand, gmin, gmax, bits)
+    out = ops.dequant_compensate_flat(s, q, gbar, gmin, gmax, mod_ok,
+                                      0.77, bits)
+    out_r = ref.dequant_ref(s, q, gbar, gmin, gmax, mod_ok, 0.77, bits)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out_r),
+                               atol=1e-6)
+
+
+@pytest.mark.parametrize('dtype', [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize('n', [4096, 70000])
+def test_roundtrip_kernel_matches_ref(dtype, n):
+    g, rand, gbar, gmin, gmax = _inputs(n, seed=7, dtype=dtype)
+    out = ops.spfl_roundtrip_flat(g, rand, gbar, gmin, gmax, 1.0, 1.25, 3)
+    out_r = ref.roundtrip_ref(g.astype(jnp.float32), rand, gbar, gmin,
+                              gmax, 1.0, 1.25, 3)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out_r),
+                               atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(8, 3000), bits=st.integers(1, 8),
+       weight=st.floats(0.0, 10.0), mod_ok=st.sampled_from([0.0, 1.0]),
+       seed=st.integers(0, 10**6))
+def test_property_fused_equals_two_stage(n, bits, weight, mod_ok, seed):
+    """roundtrip kernel == quantize kernel + dequant kernel, always."""
+    g, rand, gbar, gmin, gmax = _inputs(n, seed=seed)
+    s, q = ops.stochastic_quantize_flat(g, rand, gmin, gmax, bits)
+    two = ops.dequant_compensate_flat(s, q, gbar, gmin, gmax, mod_ok,
+                                      weight, bits)
+    one = ops.spfl_roundtrip_flat(g, rand, gbar, gmin, gmax, mod_ok,
+                                  weight, bits)
+    np.testing.assert_allclose(np.asarray(one), np.asarray(two),
+                               atol=1e-5 * max(1.0, weight))
+
+
+def test_kernel_unbiasedness():
+    """The Pallas quantizer inherits Lemma-2 unbiasedness."""
+    n, bits = 8192, 3
+    g, _, _, gmin, gmax = _inputs(n, seed=11)
+    outs = []
+    for i in range(200):
+        rand = jax.random.uniform(jax.random.PRNGKey(1000 + i), (n,))
+        s, q = ops.stochastic_quantize_flat(g, rand, gmin, gmax, bits)
+        step = (gmax - gmin) / (2 ** bits - 1)
+        outs.append(s.astype(jnp.float32) * (gmin + q * step))
+    emp = jnp.stack(outs).mean(0)
+    step = (gmax - gmin) / (2 ** bits - 1)
+    assert float(jnp.max(jnp.abs(emp - g))) < 5 * step / np.sqrt(200)

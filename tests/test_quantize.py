@@ -1,0 +1,78 @@
+"""Stochastic quantizer: paper eq. (7)-(8) and Lemma 2."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quantize as Q
+
+
+def test_unbiasedness_statistical():
+    key = jax.random.PRNGKey(0)
+    g = jax.random.normal(key, (2000,)) * 0.05
+    keys = jax.random.split(jax.random.PRNGKey(1), 400)
+    deq = jnp.stack([Q.dequantize(Q.stochastic_quantize(g, 3, k))
+                     for k in keys])
+    bias = jnp.abs(deq.mean(0) - g)
+    # MC std of the mean ~ step/sqrt(400)
+    step = float(Q.knob_step(*Q.quant_range(g), 3))
+    assert float(jnp.max(bias)) < 5 * step / np.sqrt(400)
+
+
+def test_sign_exact():
+    g = jnp.asarray([-1.0, -0.3, 0.0, 0.2, 5.0])
+    qg = Q.stochastic_quantize(g, 3, jax.random.PRNGKey(0))
+    assert qg.sign.tolist() == [-1, -1, 0, 1, 1]
+
+
+def test_knobs_within_range():
+    key = jax.random.PRNGKey(3)
+    g = jax.random.normal(key, (512,))
+    qg = Q.stochastic_quantize(g, 2, key)
+    mod = Q.dequantize_modulus(qg)
+    gmin, gmax = Q.quant_range(g)
+    assert float(jnp.min(mod)) >= float(gmin) - 1e-6
+    assert float(jnp.max(mod)) <= float(gmax) + 1e-6
+    assert int(jnp.max(qg.qidx)) <= 3 and int(jnp.min(qg.qidx)) >= 0
+
+
+def test_constant_gradient_degenerate():
+    g = jnp.full((64,), 0.25)
+    qg = Q.stochastic_quantize(g, 3, jax.random.PRNGKey(0))
+    assert jnp.allclose(Q.dequantize(qg), g)
+
+
+def test_lemma2_bound_dominates_exact_mse():
+    key = jax.random.PRNGKey(7)
+    for bits in (1, 2, 3, 5):
+        g = jax.random.normal(jax.random.fold_in(key, bits), (4096,))
+        gmin, gmax = Q.quant_range(g)
+        exact = float(Q.expected_quant_mse(g, bits))
+        bound = float(Q.quantization_error_bound(gmin, gmax, g.shape[0],
+                                                 bits))
+        assert exact <= bound + 1e-6
+        # empirical MSE matches the exact expectation
+        keys = jax.random.split(key, 200)
+        errs = [float(jnp.sum((Q.dequantize(
+            Q.stochastic_quantize(g, bits, k)) - g) ** 2)) for k in keys]
+        emp = np.mean(errs)
+        assert abs(emp - exact) < 0.15 * max(exact, 1e-9)
+
+
+@settings(max_examples=30, deadline=None)
+@given(bits=st.integers(1, 8), scale=st.floats(1e-4, 1e3), n=st.integers(2, 300),
+       seed=st.integers(0, 2**31 - 1))
+def test_property_roundtrip_error_bounded(bits, scale, n, seed):
+    """|dequant - g| <= step everywhere, any shape/scale/bits."""
+    key = jax.random.PRNGKey(seed)
+    g = jax.random.normal(key, (n,)) * scale
+    qg = Q.stochastic_quantize(g, bits, jax.random.fold_in(key, 1))
+    step = Q.knob_step(qg.g_min, qg.g_max, bits)
+    err = jnp.abs(Q.dequantize(qg) - g)
+    assert float(jnp.max(err)) <= float(step) * (1 + 1e-4) + 1e-7
+
+
+def test_packet_bits():
+    s, m = Q.packet_bits(60000, 3, 64)
+    assert s == 60000 and m == 180064   # l and l*b + b0 (paper §II-B)

@@ -1,0 +1,159 @@
+"""Gradient transports: eq. (15)-(17) semantics and baselines."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import FLConfig
+from repro.core import transport as TR
+
+FL = FLConfig()
+K, L = 8, 3000
+
+
+@pytest.fixture(scope='module')
+def data():
+    key = jax.random.PRNGKey(0)
+    grads = jax.random.normal(key, (K, L)) * 0.02
+    gbar = jnp.abs(jax.random.normal(jax.random.PRNGKey(1), (L,))) * 0.02
+    return grads, gbar
+
+
+def test_spfl_expectation_matches_eq59(data):
+    grads, gbar = data
+    q = jnp.asarray(np.random.RandomState(0).uniform(0.7, 0.99, K))
+    p = jnp.asarray(np.random.RandomState(1).uniform(0.3, 0.9, K))
+    agg = jax.jit(lambda k: TR.spfl_aggregate(grads, gbar, q, p, 3, 64, k)[0])
+    keys = jax.random.split(jax.random.PRNGKey(2), 600)
+    emp = jnp.stack([agg(k) for k in keys]).mean(0)
+    expect = jnp.mean(p[:, None] * grads
+                      + (1 - p[:, None]) * jnp.sign(grads) * gbar, axis=0)
+    scale = float(jnp.max(jnp.abs(expect)))
+    assert float(jnp.max(jnp.abs(emp - expect))) < 0.12 * scale
+
+
+def test_spfl_all_success_is_quantized_mean(data):
+    grads, gbar = data
+    ones = jnp.ones(K)
+    ghat, diag = TR.spfl_aggregate(grads, gbar, ones, ones, 3, 64,
+                                   jax.random.PRNGKey(3))
+    ef, _ = TR.error_free_aggregate(grads, FL, jax.random.PRNGKey(3))
+    # same per-client quantizer draws differ, but both are unbiased means:
+    assert float(jnp.max(jnp.abs(ghat - grads.mean(0)))) < 0.02
+    assert bool(jnp.all(diag.sign_ok)) and bool(jnp.all(diag.mod_ok))
+
+
+def test_spfl_sign_failure_drops_client(data):
+    grads, gbar = data
+    q = jnp.zeros(K)       # every sign packet lost
+    p = jnp.ones(K)
+    ghat, diag = TR.spfl_aggregate(grads, gbar, q, p, 3, 64,
+                                   jax.random.PRNGKey(4))
+    assert float(jnp.max(jnp.abs(ghat))) == 0.0      # everything rejected
+
+
+def test_spfl_modulus_failure_uses_compensation(data):
+    grads, gbar = data
+    q = jnp.ones(K)
+    p = jnp.zeros(K)       # every modulus packet lost
+    ghat, diag = TR.spfl_aggregate(grads, gbar, q, p, 3, 64,
+                                   jax.random.PRNGKey(5))
+    expect = jnp.mean(jnp.sign(grads) * gbar, axis=0)
+    assert jnp.allclose(ghat, expect, atol=1e-6)
+
+
+def test_retransmission_improves_sign_rate(data):
+    grads, gbar = data
+    q = jnp.full((K,), 0.5)
+    p = jnp.ones(K)
+    keys = jax.random.split(jax.random.PRNGKey(6), 300)
+    base = np.mean([float(jnp.mean(TR.spfl_aggregate(
+        grads, gbar, q, p, 3, 64, k, n_retx=0)[1].sign_ok)) for k in keys])
+    retx = np.mean([float(jnp.mean(TR.spfl_aggregate(
+        grads, gbar, q, p, 3, 64, k, n_retx=1)[1].sign_ok)) for k in keys])
+    assert retx > base + 0.15           # 0.5 -> 0.75 expected
+
+
+def test_error_free_unbiased(data):
+    grads, _ = data
+    keys = jax.random.split(jax.random.PRNGKey(7), 300)
+    emp = jnp.stack([TR.error_free_aggregate(grads, FL, k)[0]
+                     for k in keys]).mean(0)
+    assert float(jnp.max(jnp.abs(emp - grads.mean(0)))) < 2e-3
+
+
+def test_dds_discards_failures(data):
+    grads, _ = data
+    gains = jnp.full((K,), 1e-20)       # hopeless channel
+    p_w = jnp.full((K,), FL.tx_power_w)
+    beta = jnp.full((K,), 1.0 / K)
+    ghat, diag = TR.dds_aggregate(grads, beta, gains, p_w, FL,
+                                  jax.random.PRNGKey(8))
+    assert not bool(jnp.any(diag.accepted))
+    assert float(jnp.max(jnp.abs(ghat))) == 0.0
+    gains2 = jnp.full((K,), 1.0)        # perfect channel
+    ghat2, diag2 = TR.dds_aggregate(grads, beta, gains2, p_w, FL,
+                                    jax.random.PRNGKey(9))
+    assert bool(jnp.all(diag2.accepted))
+    assert float(jnp.max(jnp.abs(ghat2 - grads.mean(0)))) < 0.02
+
+
+def test_onebit_is_sign_only(data):
+    grads, _ = data
+    gains = jnp.full((K,), 1.0)
+    p_w = jnp.full((K,), FL.tx_power_w)
+    beta = jnp.full((K,), 1.0 / K)
+    ghat, diag = TR.onebit_aggregate(grads, beta, gains, p_w, FL,
+                                     jax.random.PRNGKey(10))
+    # correlation with the true mean sign should be strong
+    corr = jnp.corrcoef(jnp.stack(
+        [ghat, jnp.mean(jnp.sign(grads), axis=0)]))[0, 1]
+    assert float(corr) > 0.9
+    # payload is 1 bit/dim -> much smaller than dds
+    assert float(diag.payload_bits) == K * L
+
+
+def test_scheduling_selects_subset(data):
+    grads, _ = data
+    gains = jnp.asarray(np.random.RandomState(3).uniform(0.5, 2.0, K))
+    p_w = jnp.full((K,), FL.tx_power_w)
+    ghat, diag = TR.scheduling_aggregate(grads, gains, p_w, FL,
+                                         jax.random.PRNGKey(11))
+    m = int(np.ceil(FL.scheduling_ratio * K))
+    assert int(jnp.sum(diag.accepted)) <= m
+
+
+def test_tree_stats_and_delta(data):
+    grads, gbar = data
+    tree = {'a': grads[:, :1000].reshape(K, 10, 100), 'b': grads[:, 1000:]}
+    stats = TR.tree_client_stats(tree)
+    assert stats['dim'] == L
+    np.testing.assert_allclose(np.asarray(stats['g2']),
+                               np.sum(np.asarray(grads) ** 2, axis=1),
+                               rtol=1e-5)
+    a = np.abs(np.asarray(grads))
+    np.testing.assert_allclose(np.asarray(stats['g_min']), a.min(1),
+                               rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(stats['g_max']), a.max(1),
+                               rtol=1e-6)
+    d2 = TR.delta_sq_tree(stats, 3)
+    assert d2.shape == (K,) and bool(jnp.all(d2 >= 0))
+
+
+def test_tree_spfl_matches_flat_in_expectation(data):
+    grads, gbar = data
+    tree = {'a': grads[:, :1000], 'b': grads[:, 1000:]}
+    gbar_tree = {'a': gbar[:1000], 'b': gbar[1000:]}
+    q = jnp.full((K,), 0.9)
+    p = jnp.full((K,), 0.6)
+    keys = jax.random.split(jax.random.PRNGKey(12), 400)
+    agg = jax.jit(lambda k: TR.spfl_aggregate_tree(
+        tree, gbar_tree, q, p, FL, k)[0])
+    outs = [agg(k) for k in keys]
+    emp = jnp.concatenate([
+        jnp.stack([o['a'] for o in outs]).mean(0),
+        jnp.stack([o['b'] for o in outs]).mean(0)])
+    expect = jnp.mean(p[:, None] * grads
+                      + (1 - p[:, None]) * jnp.sign(grads) * gbar, axis=0)
+    scale = float(jnp.max(jnp.abs(expect)))
+    assert float(jnp.max(jnp.abs(emp - expect))) < 0.15 * scale
