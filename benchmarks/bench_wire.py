@@ -1,0 +1,115 @@
+"""Materialized wire format: bytes-on-wire and pack/unpack throughput.
+
+The acceptance numbers for the wire subsystem:
+
+* measured bits-on-wire of the framed packets within 1% of the analytic
+  ``payload_bits`` formula (l + l*b + b0 per client);
+* packed device buffers >= 8x (sign, int8 -> 1 bit) and >= 10x (modulus,
+  int32 -> b=3 bits) smaller than the arrays they replace;
+* pack/unpack wall-times for the jnp reference and the Pallas kernels
+  (interpret mode on CPU — TPU wall-times require hardware, but the HBM
+  byte accounting is machine-independent).
+
+Rows: name,us_per_call,derived (see common.py).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from common import emit
+
+from repro.configs.base import FLConfig
+from repro.core import transport as TR
+from repro.core.quantize import packet_bits
+from repro.kernels import ops
+from repro.wire import format as fmt
+
+
+def _time(fn, *args, reps=5):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / reps
+
+
+def main() -> None:
+    fl = FLConfig()
+    bits = fl.quant_bits
+    l = 1 << 20
+    k = 8
+    key = jax.random.PRNGKey(0)
+
+    # ------------------------------------------------------ bytes on wire
+    s_bits, m_bits = packet_bits(l, bits, fl.b0_bits)
+    analytic = s_bits + m_bits
+    measured = fmt.measured_uplink_bits(l, bits)
+    emit('wire_bits_analytic', 0.0, analytic)
+    emit('wire_bits_measured', 0.0,
+         f'{measured} (+{100.0 * (measured - analytic) / analytic:.3f}% '
+         f'framing+padding)')
+    assert measured <= 1.01 * analytic, (measured, analytic)
+
+    # --------------------------------------------------- buffer shrinkage
+    rng = np.random.RandomState(0)
+    sign = jnp.asarray(rng.choice([-1, 1], l), jnp.int8)
+    qidx = jnp.asarray(rng.randint(0, 2 ** bits, l), jnp.int32)
+    sw = fmt.pack_bits_ref(fmt.sign_to_bits(sign), 1)
+    qw = fmt.pack_bits_ref(qidx, bits)
+    emit('wire_sign_buffer_shrink', 0.0,
+         f'{sign.nbytes / sw.nbytes:.2f}x (int8 {sign.nbytes} B -> '
+         f'packed {sw.nbytes} B)')
+    emit('wire_modulus_buffer_shrink', 0.0,
+         f'{qidx.nbytes / qw.nbytes:.2f}x (int32 {qidx.nbytes} B -> '
+         f'packed {qw.nbytes} B)')
+
+    # ------------------------------------------------ pack/unpack speed
+    g = jax.random.normal(key, (l,)) * 0.01
+    rand = jax.random.uniform(jax.random.fold_in(key, 1), (l,))
+    gbar = jnp.abs(jax.random.normal(jax.random.fold_in(key, 2), (l,)))
+    gmin = float(jnp.min(jnp.abs(g)))
+    gmax = float(jnp.max(jnp.abs(g)))
+
+    pack_ref = jax.jit(lambda v: fmt.pack_bits_ref(v, bits))
+    t = _time(pack_ref, qidx)
+    emit('wire_pack_ref_jnp', 1e6 * t, f'{l / t / 1e9:.2f} Gelem/s')
+
+    unpack_ref = jax.jit(lambda w: fmt.unpack_bits_ref(w, l, bits))
+    t = _time(unpack_ref, qw)
+    emit('wire_unpack_ref_jnp', 1e6 * t, f'{l / t / 1e9:.2f} Gelem/s')
+
+    t = _time(lambda v: ops.pack_bits_flat(v, bits), qidx)
+    emit('wire_pack_pallas', 1e6 * t, f'{l / t / 1e9:.2f} Gelem/s')
+
+    t = _time(lambda g_, r_: ops.quantize_pack_flat(
+        g_, r_, gmin, gmax, bits), g, rand)
+    emit('wire_quantize_pack_fused', 1e6 * t, f'{l / t / 1e9:.2f} Gelem/s')
+
+    sw2, qw2 = ops.quantize_pack_flat(g, rand, gmin, gmax, bits)
+    t = _time(lambda s_, q_: ops.unpack_dequant_flat(
+        s_, q_, gbar, gmin, gmax, 1.0, 1.0, l, bits), sw2, qw2)
+    emit('wire_unpack_dequant_fused', 1e6 * t, f'{l / t / 1e9:.2f} Gelem/s')
+
+    # --------------------------------- end-to-end transport, both wires
+    kl = 1 << 16
+    grads = jax.random.normal(jax.random.fold_in(key, 3), (k, kl)) * 0.01
+    gbar_k = jnp.abs(jax.random.normal(jax.random.fold_in(key, 4), (kl,)))
+    q = jnp.full((k,), 0.9)
+    p = jnp.full((k,), 0.6)
+    for wire in ('analytic', 'packed'):
+        agg = jax.jit(lambda kk, w=wire: TR.spfl_aggregate(
+            grads, gbar_k, q, p, bits, fl.b0_bits, kk, wire=w))
+        t = _time(lambda kk: agg(kk)[0], jax.random.PRNGKey(5))
+        _, diag = agg(jax.random.PRNGKey(5))
+        emit(f'wire_spfl_{wire}', 1e6 * t,
+             f'payload_bits={float(diag.payload_bits):.0f}')
+
+
+if __name__ == '__main__':
+    main()

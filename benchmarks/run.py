@@ -28,6 +28,7 @@ SUITES = [
     ('bits', 'bench_bits'),                  # Fig 10
     ('allocation', 'bench_allocation'),      # §IV-C complexity
     ('kernels', 'bench_kernels'),            # Pallas hot path
+    ('wire', 'bench_wire'),                  # materialized packet layer
     ('roofline', 'roofline'),                # deliverable (g)
 ]
 

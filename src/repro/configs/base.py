@@ -229,6 +229,12 @@ class FLConfig:
     (beyond-paper §Perf knob — the payload is already b-bit quantized, so
     a bf16 all-reduce halves uplink collective bytes at no fidelity cost;
     'float32' is the paper-faithful baseline).
+
+    ``wire``: 'analytic' keeps payload sizes as closed-form bit counts;
+    'packed' materializes the sign/modulus packets as real bit-packed
+    word buffers (repro.wire) on the supporting transports (spfl,
+    error_free, and their tree variants) — identical aggregation, with
+    ``payload_bits`` measured from the buffers.
     """
     n_devices: int = 20                  # K
     bandwidth_hz: float = 10e6           # B
@@ -255,6 +261,7 @@ class FLConfig:
     # suboptimal (EXPERIMENTS.md §Paper-validation); alpha_max < 1 keeps a
     # power floor under the modulus packet.
     alpha_max: float = 1.0
+    wire: str = 'analytic'               # analytic | packed
 
     @property
     def noise_psd_w(self) -> float:

@@ -25,6 +25,15 @@ Flat (K, l) versions power the paper-scale simulator and tests; the
 gradient pytrees with *shared per-client* quantizer ranges and packet
 outcomes — exactly one "radio" per client per round, regardless of how the
 model is sharded.
+
+Wire materialization (``wire='packed'``): ``spfl`` and ``error_free`` can
+route the quantized gradient through the real bit-packed packet layer
+(repro.wire) — encode to framed uint32 word buffers, decode on the PS
+side, aggregate from the decoded packets.  The aggregation math is
+identical (the decode is exact), and ``payload_bits`` becomes the
+*measured* size of the materialized buffers instead of the analytic
+formula.  ``wire='analytic'`` (default) keeps the original count-only
+path.
 """
 from __future__ import annotations
 
@@ -37,9 +46,11 @@ import jax.numpy as jnp
 from repro.configs.base import FLConfig
 from repro.core import channel
 from repro.core.quantize import (
-    QuantizedGradient, dequantize_modulus, knob_step, packet_bits,
+    QuantizedGradient, dequantize_modulus, packet_bits,
     quantization_error_bound, stochastic_quantize,
 )
+from repro.wire import format as wire_fmt
+from repro.wire import packets as wire_packets
 
 Array = jax.Array
 
@@ -53,11 +64,6 @@ class TransportDiagnostics(NamedTuple):
     accepted: Array         # (K,) bool — client contributed to the update
     payload_bits: Array     # scalar — total uplink payload this round
     retransmissions: Array  # scalar
-
-
-def _zero_diag(k: int) -> TransportDiagnostics:
-    f = jnp.zeros((k,), bool)
-    return TransportDiagnostics(f, f, f, jnp.zeros(()), jnp.zeros(()))
 
 
 # ---------------------------------------------------------------------------
@@ -88,16 +94,80 @@ def _inverse_prob(accept: Array, q: Array) -> Array:
 
 
 # ---------------------------------------------------------------------------
+# wire materialization
+# ---------------------------------------------------------------------------
+
+WIRE_KINDS = ('analytic', 'packed')
+
+
+def materialize_wire(qg: QuantizedGradient, round_idx: int = 0
+                     ) -> Tuple[QuantizedGradient, int, Array]:
+    """Round-trip a (K, l) quantized gradient through the packed wire.
+
+    Encodes every client's sign/modulus packets into framed uint32 word
+    buffers (repro.wire.packets), decodes them back on the "PS side", and
+    returns (reconstructed QuantizedGradient, measured payload bits of the
+    real buffers, per-client checksum-ok flags).  The decode is exact:
+    knob indices and the bitcast (g_min, g_max) side-channel survive
+    bit-for-bit; signs come back in {-1, +1} (a 1-bit wire cannot carry
+    sign 0 — see repro.wire.__doc__; the reconstruction s*Q_v is still
+    exact because g=0 coordinates quantize to knob 0 with g_min=0).
+    """
+    K, l = qg.sign.shape
+    bits = qg.bits
+    sign_words, mod_words = wire_packets.encode_uplink_batch(
+        qg.sign, qg.qidx, qg.g_min.reshape(K), qg.g_max.reshape(K),
+        bits=bits, round_idx=round_idx)
+    measured = wire_fmt.WORD_BITS * K * (sign_words.shape[1]
+                                         + mod_words.shape[1])
+    dec = wire_packets.decode_uplink_batch(sign_words, mod_words,
+                                           n=l, bits=bits)
+    rec = QuantizedGradient(dec.sign, dec.qidx,
+                            dec.g_min.reshape(qg.g_min.shape),
+                            dec.g_max.reshape(qg.g_max.shape), bits)
+    return rec, measured, dec.sign_ok & dec.mod_ok
+
+
+def _wire_leaf_roundtrip(sign: Array, qidx: Array, bits: int
+                         ) -> Tuple[Array, Array, int]:
+    """Payload-word round-trip for one (K, d) tree leaf: pack both
+    payloads into wire words and decode them back (per-client framing is
+    accounted once per client in the tree aggregators)."""
+    sw = wire_fmt.pack_bits_ref(wire_fmt.sign_to_bits(sign), 1)
+    qw = wire_fmt.pack_bits_ref(qidx, bits)
+    d = sign.shape[-1]
+    sign_rec = wire_fmt.bits_to_sign(wire_fmt.unpack_bits_ref(sw, d, 1))
+    qidx_rec = wire_fmt.unpack_bits_ref(qw, d, bits).astype(jnp.int32)
+    return sign_rec, qidx_rec, sw.shape[-1] + qw.shape[-1]
+
+
+# ---------------------------------------------------------------------------
 # SP-FL (flat)
 # ---------------------------------------------------------------------------
 
 def spfl_aggregate(grads: Array, gbar: Array, q: Array, p: Array,
-                   bits: int, b0: int, key, n_retx: int = 0
+                   bits: int, b0: int, key, n_retx: int = 0,
+                   wire: str = 'analytic', round_idx=0
                    ) -> Tuple[Array, TransportDiagnostics]:
-    """Eq. (15)-(17).  grads: (K, l); gbar: (l,) or (K, l); q, p: (K,)."""
+    """Eq. (15)-(17).  grads: (K, l); gbar: (l,) or (K, l); q, p: (K,).
+
+    ``wire='packed'`` materializes the two packets as bit-packed word
+    buffers and decodes from them; the aggregate is identical and
+    ``payload_bits`` is the measured buffer size.  ``round_idx`` stamps
+    the packet headers (PS-side attribution).
+    """
+    assert wire in WIRE_KINDS, wire
     K, l = grads.shape
     kq, ko = jax.random.split(key)
     qg = _per_client_quantize(grads, bits, kq)
+
+    if wire == 'packed':
+        qg, measured_bits, _crc_ok = materialize_wire(qg, round_idx)
+        sign_bits = wire_fmt.WORD_BITS * wire_fmt.sign_packet_words(l)
+        payload_base = float(measured_bits)
+    else:
+        sign_bits, mod_bits = packet_bits(l, bits, b0)
+        payload_base = float(K * (sign_bits + mod_bits))
 
     q_eff = 1.0 - (1.0 - q) ** (n_retx + 1)      # sign retransmission(s)
     sign_ok, mod_ok = channel.simulate_outcomes(ko, q_eff, p)
@@ -110,10 +180,8 @@ def spfl_aggregate(grads: Array, gbar: Array, q: Array, p: Array,
     w = _inverse_prob(sign_ok, q_eff)[:, None]             # (K, 1)
     ghat = jnp.mean(w * signed, axis=0)
 
-    sign_bits, mod_bits = packet_bits(l, bits, b0)
     retx = jnp.sum((~sign_ok).astype(jnp.float32)) * min(n_retx, 1)
-    payload = (K * (sign_bits + mod_bits)
-               + retx * sign_bits)
+    payload = payload_base + retx * sign_bits
     return ghat, TransportDiagnostics(sign_ok, mod_ok, sign_ok,
                                       jnp.asarray(payload, jnp.float32),
                                       retx)
@@ -184,15 +252,22 @@ def scheduling_aggregate(grads: Array, gains: Array, p_w: Array,
     return ghat, TransportDiagnostics(ok, ok, ok, payload, jnp.zeros(()))
 
 
-def error_free_aggregate(grads: Array, fl: FLConfig, key
+def error_free_aggregate(grads: Array, fl: FLConfig, key,
+                         wire: Optional[str] = None, round_idx=0
                          ) -> Tuple[Array, TransportDiagnostics]:
+    wire = fl.wire if wire is None else wire
+    assert wire in WIRE_KINDS, wire
     K, l = grads.shape
     qg = _per_client_quantize(grads, fl.quant_bits, key)
+    if wire == 'packed':
+        qg, measured_bits, _crc_ok = materialize_wire(qg, round_idx)
+        payload = jnp.asarray(measured_bits, jnp.float32)
+    else:
+        payload = jnp.asarray(K * (l * (fl.quant_bits + 1) + fl.b0_bits),
+                              jnp.float32)
     ghat = jnp.mean(qg.sign.astype(jnp.float32) * dequantize_modulus(qg),
                     axis=0)
     ok = jnp.ones((K,), bool)
-    payload = jnp.asarray(K * (l * (fl.quant_bits + 1) + fl.b0_bits),
-                          jnp.float32)
     return ghat, TransportDiagnostics(ok, ok, ok, payload, jnp.zeros(()))
 
 
@@ -219,13 +294,21 @@ def tree_client_stats(grads_tree) -> dict:
 
 def spfl_aggregate_tree(grads_tree, gbar_tree, q: Array, p: Array,
                         fl: FLConfig, key, stats: Optional[dict] = None,
-                        n_retx: int = 0):
+                        n_retx: int = 0, wire: Optional[str] = None):
     """SP-FL over per-client gradient pytrees (leaves (K, ...)).
 
     The quantizer range, the packet outcomes and the 1/q weights are
     per-client and shared across leaves; everything else is the flat math
     applied leaf-wise.  Returns (ghat_tree, stats, diagnostics).
+
+    ``wire='packed'`` (default: ``fl.wire``) bit-packs each leaf's sign
+    and knob payloads into wire words and decodes from them.  The
+    per-client framing (headers + b0 range + checksums) is one packet
+    pair per client per round regardless of leaf count, so the measured
+    ``payload_bits`` charges it once per client.
     """
+    wire = fl.wire if wire is None else wire
+    assert wire in WIRE_KINDS, wire
     if stats is None:
         stats = tree_client_stats(grads_tree)
     K = q.shape[0]
@@ -240,6 +323,7 @@ def spfl_aggregate_tree(grads_tree, gbar_tree, q: Array, p: Array,
     # cross-client reduction can run in bf16, halving uplink bytes
     rdt = jnp.bfloat16 if fl.uplink_reduce_dtype == 'bfloat16' \
         else jnp.float32
+    payload_words = [0]
 
     def leaf(gleaf, gbar_leaf, lkey):
         Kd = gleaf.shape[0]
@@ -247,14 +331,18 @@ def spfl_aggregate_tree(grads_tree, gbar_tree, q: Array, p: Array,
         flat = gleaf.astype(jnp.float32).reshape(Kd, -1)
         qg = stochastic_quantize(flat, bits, lkey,
                                  g_min[:, None], g_max[:, None])
-        modulus = dequantize_modulus(qg)
+        sign, qidx = qg.sign, qg.qidx
+        if wire == 'packed':
+            sign, qidx, n_words = _wire_leaf_roundtrip(sign, qg.qidx, bits)
+            payload_words[0] += n_words
+        modulus = dequantize_modulus(qg._replace(sign=sign, qidx=qidx))
         gb = gbar_leaf.astype(jnp.float32)
         if gb.shape == shape:                       # per-client (last_local)
             gb = gb.reshape(Kd, -1)
         else:                                       # shared (last_global...)
             gb = jnp.broadcast_to(gb.reshape(1, -1), flat.shape)
         modulus = jnp.where(mod_ok[:, None], modulus, gb)
-        signed = qg.sign.astype(jnp.float32) * modulus
+        signed = sign.astype(jnp.float32) * modulus
         contrib = (w[:, None] * signed).astype(rdt)
         # keep the reduction itself (-> cross-client all-reduce) in rdt
         return (jnp.sum(contrib, axis=0) / Kd).astype(
@@ -267,36 +355,61 @@ def spfl_aggregate_tree(grads_tree, gbar_tree, q: Array, p: Array,
     ghat = jax.tree.unflatten(treedef, out)
 
     l = stats['dim']
-    sign_bits, mod_bits = packet_bits(l, bits, fl.b0_bits)
+    if wire == 'packed':
+        framing = (wire_fmt.SIGN_HEADER_WORDS + wire_fmt.MOD_HEADER_WORDS
+                   + 2 * wire_fmt.CRC_WORDS)
+        payload = K * wire_fmt.WORD_BITS * (payload_words[0] + framing)
+    else:
+        sign_bits, mod_bits = packet_bits(l, bits, fl.b0_bits)
+        payload = K * (sign_bits + mod_bits)
     diag = TransportDiagnostics(
         sign_ok, mod_ok, sign_ok,
-        jnp.asarray(K * (sign_bits + mod_bits), jnp.float32),
+        jnp.asarray(payload, jnp.float32),
         jnp.sum((~sign_ok).astype(jnp.float32)) * min(n_retx, 1))
     return ghat, stats, diag
 
 
 def error_free_aggregate_tree(grads_tree, fl: FLConfig, key,
-                              stats: Optional[dict] = None):
+                              stats: Optional[dict] = None,
+                              wire: Optional[str] = None):
     """Quantized-but-lossless tree aggregation (arctic-480b fallback and
     the error-free baseline at LLM scale)."""
+    wire = fl.wire if wire is None else wire
+    assert wire in WIRE_KINDS, wire
     if stats is None:
         stats = tree_client_stats(grads_tree)
     g_min, g_max = stats['g_min'], stats['g_max']
     bits = fl.quant_bits
     leaves, treedef = jax.tree.flatten(grads_tree)
     keys = jax.random.split(key, len(leaves))
+    K = leaves[0].shape[0]
+    payload_words = [0]
 
     def leaf(gleaf, lkey):
         Kd = gleaf.shape[0]
         flat = gleaf.astype(jnp.float32).reshape(Kd, -1)
         qg = stochastic_quantize(flat, bits, lkey,
                                  g_min[:, None], g_max[:, None])
-        signed = qg.sign.astype(jnp.float32) * dequantize_modulus(qg)
+        sign, qidx = qg.sign, qg.qidx
+        if wire == 'packed':
+            sign, qidx, n_words = _wire_leaf_roundtrip(sign, qidx, bits)
+            payload_words[0] += n_words
+        modulus = dequantize_modulus(qg._replace(sign=sign, qidx=qidx))
+        signed = sign.astype(jnp.float32) * modulus
         return jnp.mean(signed, axis=0).reshape(gleaf.shape[1:])
 
     out = [leaf(lf, k) for lf, k in zip(leaves, keys)]
-    return jax.tree.unflatten(treedef, out), stats, _zero_diag(
-        jax.tree.leaves(grads_tree)[0].shape[0])
+    if wire == 'packed':
+        payload = K * wire_fmt.WORD_BITS * (
+            payload_words[0] + wire_fmt.SIGN_HEADER_WORDS
+            + wire_fmt.MOD_HEADER_WORDS + 2 * wire_fmt.CRC_WORDS)
+    else:
+        payload = K * (stats['dim'] * (bits + 1) + fl.b0_bits)
+    ok = jnp.ones((K,), bool)
+    diag = TransportDiagnostics(ok, ok, ok,
+                                jnp.asarray(payload, jnp.float32),
+                                jnp.zeros(()))
+    return jax.tree.unflatten(treedef, out), stats, diag
 
 
 def delta_sq_tree(stats: dict, bits: int) -> Array:

@@ -1,3 +1,5 @@
 # SP-FL uplink hot path as Pallas TPU kernels (quantize / dequant /
 # fused roundtrip), with jnp oracles in ref.py and jit wrappers in ops.py.
+# ops.py also fronts the materialized-wire kernels (repro.wire.pack_kernel):
+# pack/unpack payload words, fused quantize->pack, fused unpack->dequant.
 from repro.kernels import ops, ref  # noqa: F401

@@ -3,6 +3,11 @@
 Handle arbitrary flat/ND inputs: pad to the (BLOCK_ROWS, BLOCK_COLS) tile
 grid, run the kernel, unpad.  ``interpret`` defaults to True off-TPU so the
 same call sites work on CPU (validation) and TPU (deployment).
+
+The ``*_packed`` family is the materialized-wire hot path: packed uint32
+word buffers (repro.wire.format layout) in and out, with the client-side
+quantize->pack and PS-side unpack->dequantize->compensate->weight each
+fused into one HBM pass (repro.wire.pack_kernel).
 """
 from __future__ import annotations
 
@@ -12,6 +17,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import quantize_kernel as qk
+from repro.wire import format as wire_fmt
+from repro.wire import pack_kernel as wk
 
 Array = jax.Array
 
@@ -68,4 +75,85 @@ def spfl_roundtrip_flat(g: Array, rand: Array, gbar: Array, gmin, gmax,
     b2, _ = _to_tiles(gbar.astype(jnp.float32))
     out = qk.roundtrip_2d(g2, r2, b2, _s(gmin), _s(gmax), _s(mod_ok),
                           _s(weight), bits=bits, interpret=interpret)
+    return out.reshape(-1)[:n]
+
+
+# ---------------------------------------------------------------------------
+# materialized wire format (packed uint32 payload words)
+# ---------------------------------------------------------------------------
+
+def _to_groups(flat: Array, dtype) -> Tuple[Array, int, int]:
+    """1-D -> group-major (G_pad, 32) for the pack kernels.  Returns
+    (padded 2-D array, original size n, exact group count G)."""
+    n = flat.shape[0]
+    g = wire_fmt.n_groups(n)
+    g_pad = -(-g // wk.BLOCK_GROUPS) * wk.BLOCK_GROUPS
+    padded = jnp.pad(flat.astype(dtype), (0, g_pad * wire_fmt.GROUP - n))
+    return padded.reshape(g_pad, wire_fmt.GROUP), n, g
+
+
+def _words_to_grid(words: Array, n: int, bits: int) -> Tuple[Array, int]:
+    """Flat payload words -> (G_pad, bits) for the unpack kernels."""
+    g = wire_fmt.n_groups(n)
+    assert words.shape[0] == g * bits, (words.shape, n, bits)
+    g_pad = -(-g // wk.BLOCK_GROUPS) * wk.BLOCK_GROUPS
+    w2 = jnp.pad(words.astype(jnp.uint32).reshape(g, bits),
+                 ((0, g_pad - g), (0, 0)))
+    return w2, g
+
+
+def _mask_tail(words: Array, n: int) -> Array:
+    """Zero the padding lanes of the last 1-bit-plane word so kernel
+    output matches the zero-padded reference exactly (the fused quantize
+    packs pad coordinates as sign bit 1, since sign(0) transmits as +1)."""
+    rem = n % wire_fmt.GROUP
+    if rem == 0:
+        return words
+    mask = jnp.uint32((1 << rem) - 1)
+    return words.at[-1].set(words[-1] & mask)
+
+
+def pack_bits_flat(values: Array, bits: int,
+                   interpret: bool | None = None) -> Array:
+    """(n,) integer values in [0, 2^bits) -> (ceil(n/32)*bits,) payload
+    words (canonical repro.wire.format layout)."""
+    interpret = default_interpret() if interpret is None else interpret
+    v2, n, g = _to_groups(values, jnp.uint32)
+    w = wk.pack_2d(v2, bits=bits, interpret=interpret)
+    return w[:g].reshape(-1)
+
+
+def unpack_bits_flat(words: Array, n: int, bits: int,
+                     interpret: bool | None = None) -> Array:
+    """Inverse of :func:`pack_bits_flat` -> (n,) uint32 values."""
+    interpret = default_interpret() if interpret is None else interpret
+    w2, g = _words_to_grid(words, n, bits)
+    v = wk.unpack_2d(w2, bits=bits, interpret=interpret)
+    return v.reshape(-1)[:n]
+
+
+def quantize_pack_flat(g: Array, rand: Array, gmin, gmax, bits: int,
+                       interpret: bool | None = None
+                       ) -> Tuple[Array, Array]:
+    """Fused client pass: flat (l,) gradient -> packed (sign_words,
+    qidx_words) payloads in ONE read of g (no int8/int32 intermediates)."""
+    interpret = default_interpret() if interpret is None else interpret
+    g2, n, ng = _to_groups(g, jnp.float32)
+    r2, _, _ = _to_groups(rand, jnp.float32)
+    sw, qw = wk.quantize_pack_2d(g2, r2, _s(gmin), _s(gmax), bits=bits,
+                                 interpret=interpret)
+    return _mask_tail(sw[:ng].reshape(-1), n), qw[:ng].reshape(-1)
+
+
+def unpack_dequant_flat(sign_words: Array, qidx_words: Array, gbar: Array,
+                        gmin, gmax, mod_ok, weight, n: int, bits: int,
+                        interpret: bool | None = None) -> Array:
+    """Fused PS pass: packed payloads -> weighted, compensated
+    contribution w * s(g) ⊙ (mod_ok ? Q_v(g) : gbar), one HBM pass."""
+    interpret = default_interpret() if interpret is None else interpret
+    s2, g_exact = _words_to_grid(sign_words, n, 1)
+    q2, _ = _words_to_grid(qidx_words, n, bits)
+    b2, _, _ = _to_groups(gbar, jnp.float32)
+    out = wk.unpack_dequant_2d(s2, q2, b2, _s(gmin), _s(gmax), _s(mod_ok),
+                               _s(weight), bits=bits, interpret=interpret)
     return out.reshape(-1)[:n]

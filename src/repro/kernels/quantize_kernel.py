@@ -48,12 +48,14 @@ def _tile_spec():
 # kernel bodies
 # ---------------------------------------------------------------------------
 
-def quantize_kernel(gmin_ref, gmax_ref, g_ref, r_ref, sign_ref, qidx_ref,
-                    *, bits: int):
-    """Stochastic quantization, eq. (8)."""
-    g = g_ref[...].astype(jnp.float32)
-    gmin = gmin_ref[0, 0]
-    gmax = gmax_ref[0, 0]
+def quantize_body(g, r, gmin, gmax, bits: int):
+    """Shared eq. (8) tile arithmetic -> qidx as f32 in [0, 2^b - 1].
+
+    The single source of the stochastic-rounding math for every kernel
+    that quantizes (quantize/roundtrip here, the fused quantize->pack in
+    repro.wire.pack_kernel) — the packed-vs-analytic bit-exactness tests
+    rely on these staying identical.
+    """
     nk = float(2 ** bits - 1)
     step = (gmax - gmin) / nk
     safe = jnp.where(step > 0.0, step, 1.0)
@@ -61,8 +63,17 @@ def quantize_kernel(gmin_ref, gmax_ref, g_ref, r_ref, sign_ref, qidx_ref,
     u = jnp.where(step > 0.0, (a - gmin) / safe, 0.0)
     lower = jnp.clip(jnp.floor(u), 0.0, nk)
     frac = u - lower
-    up = (r_ref[...].astype(jnp.float32) < frac).astype(jnp.float32)
-    qidx_ref[...] = jnp.clip(lower + up, 0.0, nk).astype(jnp.int32)
+    up = (r < frac).astype(jnp.float32)
+    return jnp.clip(lower + up, 0.0, nk)
+
+
+def quantize_kernel(gmin_ref, gmax_ref, g_ref, r_ref, sign_ref, qidx_ref,
+                    *, bits: int):
+    """Stochastic quantization, eq. (8)."""
+    g = g_ref[...].astype(jnp.float32)
+    qidx = quantize_body(g, r_ref[...].astype(jnp.float32),
+                         gmin_ref[0, 0], gmax_ref[0, 0], bits)
+    qidx_ref[...] = qidx.astype(jnp.int32)
     sign_ref[...] = jnp.sign(g).astype(jnp.int8)
 
 
@@ -90,15 +101,9 @@ def roundtrip_kernel(gmin_ref, gmax_ref, mod_ok_ref, weight_ref,
     gmax = gmax_ref[0, 0]
     mod_ok = mod_ok_ref[0, 0]
     w = weight_ref[0, 0]
-    nk = float(2 ** bits - 1)
-    step = (gmax - gmin) / nk
-    safe = jnp.where(step > 0.0, step, 1.0)
-    a = jnp.abs(g)
-    u = jnp.where(step > 0.0, (a - gmin) / safe, 0.0)
-    lower = jnp.clip(jnp.floor(u), 0.0, nk)
-    frac = u - lower
-    up = (r_ref[...].astype(jnp.float32) < frac).astype(jnp.float32)
-    qidx = jnp.clip(lower + up, 0.0, nk)
+    qidx = quantize_body(g, r_ref[...].astype(jnp.float32), gmin, gmax,
+                         bits)
+    step = (gmax - gmin) / float(2 ** bits - 1)
     modulus = gmin + qidx * step
     modulus = jnp.where(mod_ok > 0.0, modulus,
                         gbar_ref[...].astype(jnp.float32))

@@ -66,9 +66,10 @@ def make_fl_train_step(cfg: ModelConfig, fl: FLConfig,
 
         if transport_kind == 'spfl':
             ghat, stats, diag = tr.spfl_aggregate_tree(
-                grads, gbar, q, p, fl, key)
+                grads, gbar, q, p, fl, key, wire=fl.wire)
         elif transport_kind == 'error_free':
-            ghat, stats, diag = tr.error_free_aggregate_tree(grads, fl, key)
+            ghat, stats, diag = tr.error_free_aggregate_tree(
+                grads, fl, key, wire=fl.wire)
         else:
             raise ValueError(
                 f'LLM-scale transport must be spfl|error_free, '

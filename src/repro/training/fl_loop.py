@@ -115,11 +115,12 @@ class FLSimulator:
         beta_uniform = jnp.full((self.K,), 1.0 / self.K)
 
         @functools.partial(jax.jit, static_argnames=('kind',))
-        def run_transport(kind, grads, gbar, q, p, key):
+        def run_transport(kind, grads, gbar, q, p, key, round_idx):
             if kind in ('spfl', 'spfl_retx'):
                 return transport.spfl_aggregate(
                     grads, gbar, q, p, fl.quant_bits, fl.b0_bits, key,
-                    n_retx=1 if kind == 'spfl_retx' else 0)
+                    n_retx=1 if kind == 'spfl_retx' else 0, wire=fl.wire,
+                    round_idx=round_idx)
             if kind == 'dds':
                 return transport.dds_aggregate(
                     grads, beta_uniform, gains, p_w, fl, key)
@@ -130,7 +131,8 @@ class FLSimulator:
                 return transport.scheduling_aggregate(
                     grads, gains, p_w, fl, key)
             if kind == 'error_free':
-                return transport.error_free_aggregate(grads, fl, key)
+                return transport.error_free_aggregate(
+                    grads, fl, key, round_idx=round_idx)
             raise ValueError(kind)
 
         self._run_transport = run_transport
@@ -186,7 +188,8 @@ class FLSimulator:
             alloc_t = time.time() - ta
 
             ghat, diag = self._run_transport(
-                kind, grads, self.gbar, q, p, kr)
+                kind, grads, self.gbar, q, p, kr,
+                jnp.uint32(self._round))
 
             if compute_bound and sol is not None:
                 gsum = np.asarray(convergence.g_value_from_probs(

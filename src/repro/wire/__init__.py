@@ -1,0 +1,61 @@
+"""Materialized wire format — the paper's two uplink packets as real bits.
+
+The paper's central mechanism (§II-B/§II-C1) is that every client sends its
+gradient as *two physically separate packets*: a 1-bit-per-coordinate sign
+packet and a b-bit-per-coordinate modulus packet.  The analytic stack
+(``repro.core``) only ever *counts* those bits — eq. (12)/(14) price a
+packet of ``l`` resp. ``l*b + b0`` bits into the channel H terms — while
+the arrays themselves travel as int8 signs (8 bits per 1-bit sign) and
+int32 knob indices (≈10.7x the b=3 wire bits).  This subsystem closes the
+gap: gradients become bit-packed uint32 word buffers and back, so
+``payload_bits`` is a measured property of real buffers.
+
+Packet fields -> paper equations:
+
+* sign payload      — s(g_{k,n}) of eq. (7): one bit per coordinate
+                      (bit=1 <-> +1).  Its wire size l is exactly the
+                      packet length priced by H_s, eq. (12).
+* modulus payload   — the knob index of the stochastic quantizer
+                      Q_v(g_{k,n}), eq. (8): b bits per coordinate.
+                      Together with the b0 side-channel this is the
+                      l*b + b0 bits priced by H_v, eq. (14).
+* (g_min, g_max)    — the quantizer range of eq. (8), carried in the
+                      modulus-packet header as two float32 words: the
+                      b0 = 64-bit side-channel of §II-C1.
+* header/checksum   — client id, round index, coordinate count, bit
+                      width, and an xor-fold integrity word (framing the
+                      paper assumes implicitly: the PS must attribute a
+                      decoded packet to device k in round n before it can
+                      apply the 1/q_{k,n} unbiasing of eq. (15)-(17)).
+
+Modules:
+
+* ``format``      — canonical bit-plane word layout, pure-jnp reference
+                    packers, header/checksum construction and parsing.
+* ``pack_kernel`` — Pallas TPU kernels for the same layout: standalone
+                    pack/unpack plus the fused quantize->pack (client)
+                    and unpack->dequantize->compensate->weight (PS)
+                    single-HBM-pass variants.
+* ``packets``     — ``encode_client_uplink`` / ``decode_client_uplink``
+                    assembling/parsing whole packets; vmap over the K
+                    client axis via ``encode_uplink_batch`` /
+                    ``decode_uplink_batch``.
+
+One physical caveat, documented once here: a 1-bit sign cannot represent
+s(g)=0.  Coordinates with g=0 are transmitted as +1; their decoded
+modulus is exactly 0 whenever the modulus packet arrives (g=0 implies
+g_min=0 and knob 0), so the reconstruction s*Q_v is still exact.  Only
+when the modulus packet is *lost* does the compensated estimate differ
+from the analytic idealization at exactly-zero coordinates (+gbar_i
+instead of 0) — a measure-zero event for real-valued gradients.
+"""
+from repro.wire import format, packets  # noqa: F401
+from repro.wire.format import (  # noqa: F401
+    GROUP, MOD_HEADER_WORDS, SIGN_HEADER_WORDS, WORD_BITS,
+    measured_uplink_bits, modulus_packet_words, pack_bits_ref,
+    payload_words, sign_packet_words, unpack_bits_ref,
+)
+from repro.wire.packets import (  # noqa: F401
+    DecodedUplink, decode_client_uplink, decode_uplink_batch,
+    encode_client_uplink, encode_uplink_batch,
+)

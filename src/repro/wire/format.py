@@ -1,0 +1,153 @@
+"""Canonical wire layout: bit-plane packed uint32 words + packet framing.
+
+Payload layout ("consecutive-32 bit-plane" format)
+--------------------------------------------------
+Values are processed in groups of ``GROUP = 32`` consecutive coordinates.
+For group ``g`` and bit plane ``j`` (0 = LSB), payload word
+
+    w[g * bits + j] = sum_i  bit_j(v[32*g + i]) << i ,   i = 0..31
+
+i.e. each word holds one bit plane of 32 consecutive values, lane ``i`` of
+the word carrying coordinate ``32*g + i``.  The layout is dense — exactly
+``ceil(n/32) * bits`` words, <= 31 coordinates of tail padding — and maps
+onto the TPU VPU as pure shift/mask/reduce arithmetic (see
+``repro.wire.pack_kernel`` for the Pallas implementation; the functions
+here are the jnp reference the kernels are validated against).
+
+Packet framing
+--------------
+::
+
+    sign packet     [SIGN_MAGIC, client_id, round, n] payload...  crc
+    modulus packet  [MOD_MAGIC, client_id, round, n, bits,
+                     bitcast(g_min), bitcast(g_max)]   payload...  crc
+
+All words uint32.  ``crc`` is the xor-fold of every preceding word
+(header + payload).  The two float32 range words are the paper's b0 = 64
+bit side-channel (§II-C1); magics make a sign packet undecodable as a
+modulus packet and vice versa.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+WORD_BITS = 32
+GROUP = 32                   # coordinates per bit-plane group
+
+SIGN_MAGIC = 0x53474E31      # 'SGN1'
+MOD_MAGIC = 0x4D4F4431       # 'MOD1'
+SIGN_HEADER_WORDS = 4        # magic, client_id, round, n
+MOD_HEADER_WORDS = 7         # magic, client_id, round, n, bits, gmin, gmax
+CRC_WORDS = 1
+
+
+# ---------------------------------------------------------------------------
+# sizes (all exact word counts of real buffers, not analytic formulas)
+# ---------------------------------------------------------------------------
+
+def n_groups(n: int) -> int:
+    return -(-n // GROUP)
+
+
+def payload_words(n: int, bits: int) -> int:
+    return n_groups(n) * bits
+
+
+def sign_packet_words(n: int) -> int:
+    return SIGN_HEADER_WORDS + payload_words(n, 1) + CRC_WORDS
+
+
+def modulus_packet_words(n: int, bits: int) -> int:
+    return MOD_HEADER_WORDS + payload_words(n, bits) + CRC_WORDS
+
+
+def measured_uplink_bits(n: int, bits: int, k: int = 1) -> int:
+    """Total bits on the wire for k clients' (sign + modulus) packets."""
+    return k * WORD_BITS * (sign_packet_words(n) + modulus_packet_words(n, bits))
+
+
+# ---------------------------------------------------------------------------
+# reference packers (arbitrary leading batch dims; last axis packed)
+# ---------------------------------------------------------------------------
+
+def pack_bits_ref(values: Array, bits: int) -> Array:
+    """(..., n) integer values in [0, 2^bits) -> (..., ceil(n/32)*bits)
+    uint32 payload words in the canonical bit-plane layout."""
+    *lead, n = values.shape
+    g = n_groups(n)
+    pad = g * GROUP - n
+    v = values.astype(jnp.uint32)
+    if pad:
+        v = jnp.pad(v, [(0, 0)] * len(lead) + [(0, pad)])
+    v = v.reshape(*lead, g, GROUP)
+    lane = jnp.arange(GROUP, dtype=jnp.uint32)
+    planes = [jnp.sum(((v >> j) & jnp.uint32(1)) << lane, axis=-1,
+                      dtype=jnp.uint32) for j in range(bits)]
+    return jnp.stack(planes, axis=-1).reshape(*lead, g * bits)
+
+
+def unpack_bits_ref(words: Array, n: int, bits: int) -> Array:
+    """Inverse of :func:`pack_bits_ref` -> (..., n) uint32 values."""
+    *lead, w = words.shape
+    g = n_groups(n)
+    assert w == g * bits, (w, n, bits)
+    wv = words.astype(jnp.uint32).reshape(*lead, g, bits)
+    lane = jnp.arange(GROUP, dtype=jnp.uint32)
+    acc = jnp.zeros((*lead, g, GROUP), jnp.uint32)
+    for j in range(bits):
+        plane = (wv[..., j:j + 1] >> lane) & jnp.uint32(1)
+        acc = acc | (plane << jnp.uint32(j))
+    return acc.reshape(*lead, g * GROUP)[..., :n]
+
+
+def sign_to_bits(sign: Array) -> Array:
+    """int8 sign in {-1, 0, +1} -> wire bit (1 <-> +1; 0 transmits as +1,
+    see the zero-sign note in ``repro.wire.__doc__``)."""
+    return (sign >= 0).astype(jnp.uint32)
+
+
+def bits_to_sign(bits_: Array) -> Array:
+    """Wire bit -> int8 sign in {-1, +1}."""
+    return jnp.where(bits_ > 0, jnp.int8(1), jnp.int8(-1))
+
+
+# ---------------------------------------------------------------------------
+# framing helpers
+# ---------------------------------------------------------------------------
+
+def xor_fold(words: Array) -> Array:
+    """Xor of all words along the last axis (the integrity word)."""
+    return jax.lax.reduce(words.astype(jnp.uint32), jnp.uint32(0),
+                          jax.lax.bitwise_xor, (words.ndim - 1,))
+
+
+def _u32(x) -> Array:
+    return jnp.asarray(x).astype(jnp.uint32)
+
+
+def f32_to_word(x) -> Array:
+    return jax.lax.bitcast_convert_type(
+        jnp.asarray(x, jnp.float32), jnp.uint32)
+
+
+def word_to_f32(w: Array) -> Array:
+    return jax.lax.bitcast_convert_type(w.astype(jnp.uint32), jnp.float32)
+
+
+def frame(header_fields, payload: Array) -> Array:
+    """[header..., payload..., crc] as one uint32 buffer (1-D)."""
+    header = jnp.stack([_u32(f) for f in header_fields])
+    body = jnp.concatenate([header, payload.astype(jnp.uint32)])
+    return jnp.concatenate([body, xor_fold(body)[None]])
+
+
+def sign_header(client_id, round_idx, n: int):
+    return (SIGN_MAGIC, client_id, round_idx, n)
+
+
+def modulus_header(client_id, round_idx, n: int, bits: int, g_min, g_max):
+    return (MOD_MAGIC, client_id, round_idx, n, bits,
+            f32_to_word(g_min), f32_to_word(g_max))

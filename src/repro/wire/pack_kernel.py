@@ -1,0 +1,186 @@
+"""Pallas TPU kernels for the bit-plane wire format.
+
+The payload layout (repro.wire.format) was chosen to be kernel-shaped: a
+group of 32 consecutive coordinates becomes ``bits`` words by pure
+shift/mask/lane-reduce arithmetic, so pack and unpack are elementwise
+VPU streams with zero cross-group communication.  Arrays enter as
+group-major 2-D tiles — values ``(G, 32)``, words ``(G, bits)`` — and the
+grid runs over blocks of ``BLOCK_GROUPS`` groups.
+
+Four kernels:
+
+* ``pack_bits_kernel``      — values -> payload words.
+* ``unpack_bits_kernel``    — payload words -> values.
+* ``quantize_pack_kernel``  — the fused client-side pass: stochastic
+                              quantization (paper eq. (7)-(8), identical
+                              math to ``kernels.quantize_kernel``) +
+                              sign/modulus packing in ONE read of the
+                              gradient — quantize->pack with no int8/int32
+                              intermediates touching HBM.
+* ``unpack_dequant_kernel`` — the fused PS-side pass: unpack both packets
+                              + knob reconstruction + compensation select
+                              + 1/q weighting (eq. (15)-(17)) in one pass.
+
+Per-client scalars travel as (1, 1) blocks exactly like
+``kernels.quantize_kernel``.  Everything is validated against the
+``format`` reference packers in interpret mode (tests/test_wire.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.quantize_kernel import quantize_body
+from repro.wire.format import GROUP
+
+BLOCK_GROUPS = 256           # groups (of 32 values) per grid step
+
+
+def _scalar_spec():
+    return pl.BlockSpec((1, 1), lambda i: (0, 0))
+
+
+def _value_spec():
+    return pl.BlockSpec((BLOCK_GROUPS, GROUP), lambda i: (i, 0))
+
+
+def _word_spec(bits: int):
+    return pl.BlockSpec((BLOCK_GROUPS, bits), lambda i: (i, 0))
+
+
+def _lane(shape):
+    return jax.lax.broadcasted_iota(jnp.uint32, shape, 1)
+
+
+def _pack(v: jax.Array, bits: int) -> jax.Array:
+    """(BG, 32) uint32 -> (BG, bits) words."""
+    lane = _lane(v.shape)
+    planes = [jnp.sum(((v >> j) & jnp.uint32(1)) << lane, axis=1,
+                      dtype=jnp.uint32) for j in range(bits)]
+    return jnp.stack(planes, axis=1)
+
+
+def _unpack(w: jax.Array, bits: int) -> jax.Array:
+    """(BG, bits) words -> (BG, 32) uint32 values."""
+    lane = _lane((w.shape[0], GROUP))
+    acc = jnp.zeros((w.shape[0], GROUP), jnp.uint32)
+    for j in range(bits):
+        plane = (w[:, j:j + 1] >> lane) & jnp.uint32(1)
+        acc = acc | (plane << jnp.uint32(j))
+    return acc
+
+
+# ---------------------------------------------------------------------------
+# kernel bodies
+# ---------------------------------------------------------------------------
+
+def pack_bits_kernel(v_ref, w_ref, *, bits: int):
+    w_ref[...] = _pack(v_ref[...].astype(jnp.uint32), bits)
+
+
+def unpack_bits_kernel(w_ref, v_ref, *, bits: int):
+    v_ref[...] = _unpack(w_ref[...].astype(jnp.uint32), bits)
+
+
+def quantize_pack_kernel(gmin_ref, gmax_ref, g_ref, r_ref,
+                         sw_ref, qw_ref, *, bits: int):
+    """Fused eq. (7)-(8) + packing: gradient tile in, two packed-word
+    tiles out."""
+    g = g_ref[...].astype(jnp.float32)
+    qidx = quantize_body(g, r_ref[...].astype(jnp.float32),
+                         gmin_ref[0, 0], gmax_ref[0, 0], bits)
+    sw_ref[...] = _pack((g >= 0.0).astype(jnp.uint32), 1)
+    qw_ref[...] = _pack(qidx.astype(jnp.uint32), bits)
+
+
+def unpack_dequant_kernel(gmin_ref, gmax_ref, mod_ok_ref, weight_ref,
+                          sw_ref, qw_ref, gbar_ref, out_ref, *, bits: int):
+    """Fused PS decode, eq. (15)-(17):
+    out = w * s(g) ⊙ (mod_ok ? Q_v(g) : gbar) straight from packed words."""
+    gmin = gmin_ref[0, 0]
+    gmax = gmax_ref[0, 0]
+    mod_ok = mod_ok_ref[0, 0]
+    w = weight_ref[0, 0]
+    nk = float(2 ** bits - 1)
+    step = (gmax - gmin) / nk
+    sign = jnp.where(_unpack(sw_ref[...].astype(jnp.uint32), 1) > 0,
+                     1.0, -1.0)
+    qidx = _unpack(qw_ref[...].astype(jnp.uint32), bits).astype(jnp.float32)
+    modulus = gmin + qidx * step
+    modulus = jnp.where(mod_ok > 0.0, modulus,
+                        gbar_ref[...].astype(jnp.float32))
+    out_ref[...] = w * sign * modulus
+
+
+# ---------------------------------------------------------------------------
+# pallas_call builders (group-major 2-D inputs, grid over group blocks)
+# ---------------------------------------------------------------------------
+
+def _grid(n_rows: int):
+    assert n_rows % BLOCK_GROUPS == 0, n_rows
+    return (n_rows // BLOCK_GROUPS,)
+
+
+@functools.partial(jax.jit, static_argnames=('bits', 'interpret'))
+def pack_2d(values, *, bits: int, interpret: bool = False):
+    """values: (G, 32) uint32 -> (G, bits) uint32 words."""
+    return pl.pallas_call(
+        functools.partial(pack_bits_kernel, bits=bits),
+        grid=_grid(values.shape[0]),
+        in_specs=[_value_spec()],
+        out_specs=_word_spec(bits),
+        out_shape=jax.ShapeDtypeStruct((values.shape[0], bits), jnp.uint32),
+        interpret=interpret,
+    )(values)
+
+
+@functools.partial(jax.jit, static_argnames=('bits', 'interpret'))
+def unpack_2d(words, *, bits: int, interpret: bool = False):
+    """words: (G, bits) uint32 -> (G, 32) uint32 values."""
+    return pl.pallas_call(
+        functools.partial(unpack_bits_kernel, bits=bits),
+        grid=_grid(words.shape[0]),
+        in_specs=[_word_spec(bits)],
+        out_specs=_value_spec(),
+        out_shape=jax.ShapeDtypeStruct((words.shape[0], GROUP), jnp.uint32),
+        interpret=interpret,
+    )(words)
+
+
+@functools.partial(jax.jit, static_argnames=('bits', 'interpret'))
+def quantize_pack_2d(g, rand, gmin, gmax, *, bits: int,
+                     interpret: bool = False):
+    """g, rand: (G, 32) f32; gmin/gmax: (1, 1).
+    -> (sign words (G, 1), qidx words (G, bits)), both uint32."""
+    n_rows = g.shape[0]
+    return pl.pallas_call(
+        functools.partial(quantize_pack_kernel, bits=bits),
+        grid=_grid(n_rows),
+        in_specs=[_scalar_spec(), _scalar_spec(), _value_spec(),
+                  _value_spec()],
+        out_specs=[_word_spec(1), _word_spec(bits)],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_rows, 1), jnp.uint32),
+            jax.ShapeDtypeStruct((n_rows, bits), jnp.uint32),
+        ],
+        interpret=interpret,
+    )(gmin, gmax, g, rand)
+
+
+@functools.partial(jax.jit, static_argnames=('bits', 'interpret'))
+def unpack_dequant_2d(sign_words, qidx_words, gbar, gmin, gmax, mod_ok,
+                      weight, *, bits: int, interpret: bool = False):
+    """sign_words (G, 1), qidx_words (G, bits), gbar (G, 32) -> (G, 32) f32."""
+    n_rows = sign_words.shape[0]
+    return pl.pallas_call(
+        functools.partial(unpack_dequant_kernel, bits=bits),
+        grid=_grid(n_rows),
+        in_specs=[_scalar_spec()] * 4
+        + [_word_spec(1), _word_spec(bits), _value_spec()],
+        out_specs=_value_spec(),
+        out_shape=jax.ShapeDtypeStruct((n_rows, GROUP), jnp.float32),
+        interpret=interpret,
+    )(gmin, gmax, mod_ok, weight, sign_words, qidx_words, gbar)

@@ -1,0 +1,100 @@
+"""Whole-packet encode/decode for one client uplink (and the K batch).
+
+``encode_client_uplink`` turns one client's quantized gradient — the int8
+sign vector, the int32 knob indices and the (g_min, g_max) range of
+eq. (7)-(8) — into the two framed word buffers of ``repro.wire.format``.
+``decode_client_uplink`` is the PS side: parse headers, verify the
+xor-fold integrity word, unpack payloads, bitcast the b0 side-channel
+back to float32.  Both are pure jnp (jit/vmap-safe); the Pallas fused
+variants live in ``repro.wire.pack_kernel`` and are exposed through
+``repro.kernels.ops`` for the flat hot path.
+
+Batched variants vmap over the leading K client axis with per-client
+ids — exactly one sign packet and one modulus packet per client per
+round, whatever the model partitioning.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.wire import format as fmt
+
+Array = jax.Array
+
+
+class DecodedUplink(NamedTuple):
+    """PS-side view of one client's round: reconstructed quantized
+    gradient + framing metadata."""
+    sign: Array          # int8 in {-1, +1}  (wire has no zero sign)
+    qidx: Array          # int32 knob index
+    g_min: Array         # float32 scalar (b0 side-channel)
+    g_max: Array         # float32 scalar (b0 side-channel)
+    client_id: Array     # uint32, from the header
+    round_idx: Array     # uint32, from the header
+    sign_ok: Array       # bool — sign packet framing + checksum valid
+    mod_ok: Array        # bool — modulus packet framing + checksum valid
+
+
+# ---------------------------------------------------------------------------
+# single client
+# ---------------------------------------------------------------------------
+
+def encode_client_uplink(sign: Array, qidx: Array, g_min, g_max,
+                         client_id, *, bits: int, round_idx=0):
+    """-> (sign_words, mod_words): the two framed uint32 buffers."""
+    n = sign.shape[0]
+    sign_words = fmt.frame(
+        fmt.sign_header(client_id, round_idx, n),
+        fmt.pack_bits_ref(fmt.sign_to_bits(sign), 1))
+    mod_words = fmt.frame(
+        fmt.modulus_header(client_id, round_idx, n, bits, g_min, g_max),
+        fmt.pack_bits_ref(qidx, bits))
+    return sign_words, mod_words
+
+
+def decode_client_uplink(sign_words: Array, mod_words: Array, *, n: int,
+                         bits: int) -> DecodedUplink:
+    """Parse + verify both packets.  Payloads are decoded unconditionally
+    (shapes are static); the *_ok flags say whether they can be trusted."""
+    sh = sign_words[:fmt.SIGN_HEADER_WORDS]
+    sp = sign_words[fmt.SIGN_HEADER_WORDS:-1]
+    sign_ok = ((sh[0] == fmt.SIGN_MAGIC) & (sh[3] == jnp.uint32(n))
+               & (fmt.xor_fold(sign_words[:-1]) == sign_words[-1]))
+    sign = fmt.bits_to_sign(fmt.unpack_bits_ref(sp, n, 1))
+
+    mh = mod_words[:fmt.MOD_HEADER_WORDS]
+    mp = mod_words[fmt.MOD_HEADER_WORDS:-1]
+    mod_ok = ((mh[0] == fmt.MOD_MAGIC) & (mh[3] == jnp.uint32(n))
+              & (mh[4] == jnp.uint32(bits))
+              & (fmt.xor_fold(mod_words[:-1]) == mod_words[-1]))
+    qidx = fmt.unpack_bits_ref(mp, n, bits).astype(jnp.int32)
+
+    return DecodedUplink(
+        sign=sign, qidx=qidx,
+        g_min=fmt.word_to_f32(mh[5]), g_max=fmt.word_to_f32(mh[6]),
+        client_id=sh[1], round_idx=sh[2], sign_ok=sign_ok, mod_ok=mod_ok)
+
+
+# ---------------------------------------------------------------------------
+# K-client batch
+# ---------------------------------------------------------------------------
+
+def encode_uplink_batch(sign: Array, qidx: Array, g_min: Array,
+                        g_max: Array, *, bits: int, round_idx=0):
+    """sign/qidx (K, l), g_min/g_max (K,) -> (sign_words (K, Ws),
+    mod_words (K, Wm)); client ids are the row indices."""
+    k = sign.shape[0]
+    enc = functools.partial(encode_client_uplink, bits=bits,
+                            round_idx=round_idx)
+    return jax.vmap(enc)(sign, qidx, g_min, g_max,
+                         jnp.arange(k, dtype=jnp.uint32))
+
+
+def decode_uplink_batch(sign_words: Array, mod_words: Array, *, n: int,
+                        bits: int) -> DecodedUplink:
+    dec = functools.partial(decode_client_uplink, n=n, bits=bits)
+    return jax.vmap(dec)(sign_words, mod_words)

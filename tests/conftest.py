@@ -1,8 +1,9 @@
 import os
 import sys
 
-# src-layout import without install
+# src-layout import without install; tests dir for _hypothesis_compat
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), '..', 'src'))
+sys.path.insert(0, os.path.dirname(__file__))
 
 # Keep tests on the true device count (the dry-run sets its own XLA_FLAGS
 # in a separate process; smoke tests must see 1 device per the harness).

@@ -4,7 +4,7 @@ import dataclasses
 import jax
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.configs.base import FLConfig
 from repro.core import allocation as AL

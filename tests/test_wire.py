@@ -1,0 +1,248 @@
+"""Materialized wire format: packing exactness, framing integrity, and
+packed-vs-analytic transport equivalence (the subsystem's headline claim:
+the bit-packed uplink changes NOTHING about the aggregate, only how the
+bits travel)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import FLConfig
+from repro.core import transport as TR
+from repro.kernels import ops, ref
+from repro.wire import format as fmt
+from repro.wire import packets
+
+K, L = 6, 3000
+FL = FLConfig()
+
+
+def _grads(l=L, k=K, seed=0):
+    """Strictly nonzero gradients: the 1-bit wire cannot carry sign 0
+    (see repro.wire.__doc__), so equivalence is asserted away from the
+    measure-zero g=0 coordinates."""
+    g = jax.random.normal(jax.random.PRNGKey(seed), (k, l)) * 0.02
+    return jnp.where(g == 0, 1e-4, g)
+
+
+# ---------------------------------------------------------------------------
+# payload packing round-trips (reference layout)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize('bits', range(1, 9))
+@pytest.mark.parametrize('n', [1, 31, 32, 33, 63, 65, 1000, 4097])
+def test_pack_roundtrip_exact(bits, n):
+    rng = np.random.RandomState(bits * 100 + n)
+    v = jnp.asarray(rng.randint(0, 2 ** bits, n), jnp.uint32)
+    w = fmt.pack_bits_ref(v, bits)
+    assert w.shape == (fmt.payload_words(n, bits),)
+    assert jnp.array_equal(fmt.unpack_bits_ref(w, n, bits), v)
+
+
+def test_pack_density():
+    """The layout is dense: exactly ceil(n/32)*bits words, <= 31 values
+    of tail padding — the property that makes measured bytes track the
+    analytic l*b to within header+tail overhead."""
+    for n, bits in [(1000, 3), (65536, 1), (99999, 8)]:
+        assert fmt.payload_words(n, bits) * 32 < (n + 32) * bits
+
+
+def test_pack_batched_matches_per_row():
+    rng = np.random.RandomState(7)
+    v = jnp.asarray(rng.randint(0, 8, (5, 321)), jnp.uint32)
+    w = fmt.pack_bits_ref(v, 3)
+    for i in range(5):
+        assert jnp.array_equal(w[i], fmt.pack_bits_ref(v[i], 3))
+
+
+# ---------------------------------------------------------------------------
+# packet framing
+# ---------------------------------------------------------------------------
+
+def test_packet_roundtrip_and_headers():
+    rng = np.random.RandomState(0)
+    sign = jnp.asarray(rng.choice([-1, 1], 777), jnp.int8)
+    qidx = jnp.asarray(rng.randint(0, 8, 777), jnp.int32)
+    sw, mw = packets.encode_client_uplink(sign, qidx, 0.125, 0.875, 3,
+                                          bits=3, round_idx=12)
+    assert sw.shape == (fmt.sign_packet_words(777),)
+    assert mw.shape == (fmt.modulus_packet_words(777, 3),)
+    dec = packets.decode_client_uplink(sw, mw, n=777, bits=3)
+    assert jnp.array_equal(dec.sign, sign)
+    assert jnp.array_equal(dec.qidx, qidx)
+    # the b0 side-channel is a float32 bitcast: exact, not approximate
+    assert float(dec.g_min) == 0.125 and float(dec.g_max) == 0.875
+    assert int(dec.client_id) == 3 and int(dec.round_idx) == 12
+    assert bool(dec.sign_ok) and bool(dec.mod_ok)
+
+
+@pytest.mark.parametrize('word_idx', [0, 5, -1])
+def test_checksum_detects_flipped_word(word_idx):
+    rng = np.random.RandomState(1)
+    sign = jnp.asarray(rng.choice([-1, 1], 500), jnp.int8)
+    qidx = jnp.asarray(rng.randint(0, 8, 500), jnp.int32)
+    sw, mw = packets.encode_client_uplink(sign, qidx, 0.0, 1.0, 0, bits=3)
+    for flip_sign in (True, False):
+        bad_s = sw.at[word_idx].set(sw[word_idx] ^ jnp.uint32(1 << 9)) \
+            if flip_sign else sw
+        bad_m = mw if flip_sign else \
+            mw.at[word_idx].set(mw[word_idx] ^ jnp.uint32(1 << 9))
+        dec = packets.decode_client_uplink(bad_s, bad_m, n=500, bits=3)
+        assert bool(dec.sign_ok) == (not flip_sign)
+        assert bool(dec.mod_ok) == flip_sign
+
+
+def test_sign_and_modulus_packets_not_interchangeable():
+    rng = np.random.RandomState(2)
+    sign = jnp.asarray(rng.choice([-1, 1], 96), jnp.int8)
+    qidx = jnp.asarray(rng.randint(0, 2, 96), jnp.int32)
+    sw, _ = packets.encode_client_uplink(sign, qidx, 0.0, 1.0, 0, bits=1)
+    # a sign packet offered where a modulus packet is expected must fail
+    padded = jnp.pad(sw, (0, fmt.modulus_packet_words(96, 1) - sw.shape[0]))
+    dec = packets.decode_client_uplink(sw, padded, n=96, bits=1)
+    assert not bool(dec.mod_ok)
+
+
+def test_measured_bits_close_to_analytic():
+    """Framing + tail padding stay under 1% at realistic dimensions."""
+    from repro.core.quantize import packet_bits
+    l, bits = 100_000, FL.quant_bits
+    s_bits, m_bits = packet_bits(l, bits, FL.b0_bits)
+    measured = fmt.measured_uplink_bits(l, bits)
+    assert measured >= s_bits + m_bits          # wire can't beat entropy
+    assert measured <= 1.01 * (s_bits + m_bits)
+
+
+# ---------------------------------------------------------------------------
+# packed-vs-analytic transport equivalence (the headline test)
+# ---------------------------------------------------------------------------
+
+def test_spfl_flat_packed_bit_exact():
+    grads = _grads()
+    gbar = jnp.abs(_grads(seed=1)[0])
+    q = jnp.linspace(0.4, 0.95, K)
+    p = jnp.linspace(0.2, 0.9, K)
+    for seed in range(3):
+        k = jax.random.PRNGKey(seed)
+        ga, da = TR.spfl_aggregate(grads, gbar, q, p, 3, 64, k)
+        gp, dp = TR.spfl_aggregate(grads, gbar, q, p, 3, 64, k,
+                                   wire='packed')
+        assert jnp.array_equal(ga, gp)
+        assert jnp.array_equal(da.sign_ok, dp.sign_ok)
+        assert float(dp.payload_bits) == fmt.measured_uplink_bits(L, 3, K)
+
+
+def test_error_free_flat_packed_bit_exact():
+    grads = _grads(seed=3)
+    k = jax.random.PRNGKey(9)
+    ga, _ = TR.error_free_aggregate(grads, FL, k)
+    gp, dp = TR.error_free_aggregate(grads, FL, k, wire='packed')
+    assert jnp.array_equal(ga, gp)
+    assert float(dp.payload_bits) == fmt.measured_uplink_bits(L, 3, K)
+
+
+def test_spfl_tree_packed_bit_exact():
+    grads = _grads(seed=4)
+    gbar = jnp.abs(_grads(seed=5)[0])
+    tree = {'a': grads[:, :1000].reshape(K, 10, 100), 'b': grads[:, 1000:]}
+    gbar_tree = {'a': gbar[:1000].reshape(10, 100), 'b': gbar[1000:]}
+    q = jnp.full((K,), 0.8)
+    p = jnp.full((K,), 0.5)
+    k = jax.random.PRNGKey(11)
+    ga, _, da = TR.spfl_aggregate_tree(tree, gbar_tree, q, p, FL, k)
+    gp, _, dp = TR.spfl_aggregate_tree(tree, gbar_tree, q, p, FL, k,
+                                       wire='packed')
+    for xa, xp in zip(jax.tree.leaves(ga), jax.tree.leaves(gp)):
+        assert jnp.array_equal(xa, xp)
+    assert float(dp.payload_bits) > float(da.payload_bits)      # framing
+    assert float(dp.payload_bits) < 1.05 * float(da.payload_bits)
+
+
+def test_error_free_tree_packed_bit_exact():
+    grads = _grads(seed=6)
+    tree = {'a': grads[:, :512], 'b': grads[:, 512:]}
+    k = jax.random.PRNGKey(13)
+    ga, _, _ = TR.error_free_aggregate_tree(tree, FL, k)
+    gp, _, _ = TR.error_free_aggregate_tree(tree, FL, k, wire='packed')
+    for xa, xp in zip(jax.tree.leaves(ga), jax.tree.leaves(gp)):
+        assert jnp.array_equal(xa, xp)
+
+
+def test_fl_config_wire_switch_is_plumbed():
+    """error_free picks `wire` off FLConfig when not overridden."""
+    import dataclasses
+    grads = _grads(seed=7)
+    k = jax.random.PRNGKey(15)
+    fl_packed = dataclasses.replace(FL, wire='packed')
+    ga, da = TR.error_free_aggregate(grads, FL, k)
+    gp, dp = TR.error_free_aggregate(grads, fl_packed, k)
+    assert jnp.array_equal(ga, gp)
+    assert float(dp.payload_bits) != float(da.payload_bits)
+
+
+# ---------------------------------------------------------------------------
+# Pallas packers vs the reference layout (interpret mode on CPU)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize('bits', [1, 3, 8])
+@pytest.mark.parametrize('n', [64, 1000, 8192, 8192 * 3 + 5])
+def test_pallas_pack_unpack_matches_ref(bits, n):
+    rng = np.random.RandomState(n + bits)
+    v = jnp.asarray(rng.randint(0, 2 ** bits, n), jnp.uint32)
+    w = ops.pack_bits_flat(v, bits, interpret=True)
+    assert jnp.array_equal(w, fmt.pack_bits_ref(v, bits))
+    assert jnp.array_equal(ops.unpack_bits_flat(w, n, bits,
+                                                interpret=True), v)
+
+
+@pytest.mark.parametrize('bits', [1, 3, 8])
+@pytest.mark.parametrize('n', [1000, 8192 + 7])
+def test_pallas_fused_quantize_pack_matches_ref(bits, n):
+    key = jax.random.PRNGKey(10 * bits + 1)
+    g = jax.random.normal(key, (n,)) * 0.03
+    rand = jax.random.uniform(jax.random.fold_in(key, 1), (n,))
+    gmin = float(jnp.min(jnp.abs(g)))
+    gmax = float(jnp.max(jnp.abs(g)))
+    sw, qw = ops.quantize_pack_flat(g, rand, gmin, gmax, bits,
+                                    interpret=True)
+    s_r, q_r = ref.quantize_ref(g, rand, gmin, gmax, bits)
+    assert jnp.array_equal(sw, fmt.pack_bits_ref(fmt.sign_to_bits(s_r), 1))
+    assert jnp.array_equal(qw, fmt.pack_bits_ref(q_r, bits))
+
+
+@pytest.mark.parametrize('mod_ok', [0.0, 1.0])
+def test_pallas_fused_unpack_dequant_matches_ref(mod_ok):
+    n, bits, weight = 8192 + 7, 3, 1.7
+    key = jax.random.PRNGKey(21)
+    g = jax.random.normal(key, (n,)) * 0.03
+    rand = jax.random.uniform(jax.random.fold_in(key, 1), (n,))
+    gbar = jnp.abs(jax.random.normal(jax.random.fold_in(key, 2),
+                                     (n,))) * 0.03
+    gmin = float(jnp.min(jnp.abs(g)))
+    gmax = float(jnp.max(jnp.abs(g)))
+    sw, qw = ops.quantize_pack_flat(g, rand, gmin, gmax, bits,
+                                    interpret=True)
+    out = ops.unpack_dequant_flat(sw, qw, gbar, gmin, gmax, mod_ok,
+                                  weight, n, bits, interpret=True)
+    s_r, q_r = ref.quantize_ref(g, rand, gmin, gmax, bits)
+    sign_pm = jnp.where(s_r >= 0, 1, -1).astype(jnp.int8)
+    out_r = ref.dequant_ref(sign_pm, q_r, gbar, gmin, gmax, mod_ok,
+                            weight, bits)
+    # same tolerance as the existing dequant kernel tests: the (1, 1)
+    # scalar blocks enter the kernel as f32, the reference keeps them as
+    # weak f64 — one ULP on the knob step
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out_r),
+                               atol=1e-6)
+
+
+def test_packed_buffers_shrink_vs_int_arrays():
+    """The acceptance numbers: >=8x sign and >=10x modulus (b=3) buffer
+    shrinkage vs the int8/int32 device arrays they replace."""
+    n, bits = 65536, 3
+    rng = np.random.RandomState(3)
+    sign = jnp.asarray(rng.choice([-1, 1], n), jnp.int8)
+    qidx = jnp.asarray(rng.randint(0, 2 ** bits, n), jnp.int32)
+    sw = fmt.pack_bits_ref(fmt.sign_to_bits(sign), 1)
+    qw = fmt.pack_bits_ref(qidx, bits)
+    assert sign.nbytes / sw.nbytes >= 8.0
+    assert qidx.nbytes / qw.nbytes >= 10.0
