@@ -1,0 +1,117 @@
+"""Bit-level channel: calibration fidelity, corruption throughput, and the
+cost of CRC-driven erasures over the packed wire path.
+
+The acceptance numbers for the bitchannel subsystem (ISSUE 2):
+
+* the BER calibration inverts the fold-pass closed form (empirical
+  detected-erasure rate equals the analytic 1-q / 1-p of eq. (11)/(13)
+  within CLT tolerance);
+* flip-mask generation + verify throughput on transport-scale buffers
+  (the bit channel touches every payload bit, so this bounds the
+  per-round overhead of `channel='bitlevel'` vs `'bernoulli'`);
+* end-to-end spfl round wall-time across channel modes, including the
+  materialized retransmission path and its measured resend bits.
+
+Rows: name,us_per_call,derived (see common.py).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from common import emit
+
+from repro.configs.base import FLConfig
+from repro.core import bitchannel as BC
+from repro.core import transport as TR
+from repro.wire import corrupt as WC
+from repro.wire import format as fmt
+from repro.wire import packets
+
+
+def _time(fn, *args, reps=5):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / reps
+
+
+def main() -> None:
+    fl = FLConfig()
+    bits = fl.quant_bits
+    key = jax.random.PRNGKey(0)
+
+    # ------------------------------------------- calibration fidelity
+    k, l = 8, 512
+    rng = np.random.RandomState(0)
+    sign = jnp.asarray(rng.choice([-1, 1], (k, l)), jnp.int8)
+    qidx = jnp.asarray(rng.randint(0, 2 ** bits, (k, l)), jnp.int32)
+    sw, mw = packets.encode_uplink_batch(
+        sign, qidx, jnp.full((k,), 0.1), jnp.full((k,), 0.9), bits=bits)
+    q = jnp.linspace(0.3, 0.95, k)
+    p = jnp.linspace(0.25, 0.9, k)
+    trial = jax.jit(lambda kk: BC.transmit_uplink(
+        kk, sw, mw, q, p, n=l, bits=bits)[2:4])
+    oks = [jax.vmap(trial)(ck) for ck in
+           jnp.split(jax.random.split(key, 2000), 8)]
+    emp_q = np.mean(np.concatenate([np.asarray(o[0]) for o in oks]), 0)
+    emp_p = np.mean(np.concatenate([np.asarray(o[1]) for o in oks]), 0)
+    dq = float(np.max(np.abs(emp_q - np.asarray(q))))
+    dp = float(np.max(np.abs(emp_p - np.asarray(p))))
+    emit('bitchannel_calibration_sign', 0.0,
+         f'max|emp-q|={dq:.4f} over 2000 trials (CLT ~ {3e-2:.3f})')
+    emit('bitchannel_calibration_mod', 0.0, f'max|emp-p|={dp:.4f}')
+    assert dq < 0.05 and dp < 0.05, (dq, dp)
+
+    # ------------------------------------------ corruption throughput
+    kl = 1 << 16
+    grads = jax.random.normal(jax.random.fold_in(key, 1), (8, kl)) * 0.01
+    s8 = jnp.sign(grads).astype(jnp.int8)
+    q8 = jnp.asarray(rng.randint(0, 2 ** bits, (8, kl)), jnp.int32)
+    sw8, mw8 = packets.encode_uplink_batch(
+        s8, q8, jnp.full((8,), 0.1), jnp.full((8,), 0.9), bits=bits)
+    ber = BC.ber_for_success(jnp.full((8,), 0.9), sw8.shape[1])
+    n_bits = sw8.size * fmt.WORD_BITS
+    corrupt = jax.jit(lambda kk: WC.corrupt_words(kk, sw8, ber)[0])
+    t = _time(corrupt, key)
+    emit('bitchannel_flip_mask', 1e6 * t, f'{n_bits / t / 1e9:.2f} Gbit/s')
+
+    verify = jax.jit(lambda w: packets.verify_sign_words(w, n=kl))
+    t = _time(verify, sw8)
+    emit('bitchannel_verify_fold', 1e6 * t,
+         f'{n_bits / t / 1e9:.2f} Gbit/s')
+
+    full = jax.jit(lambda kk: BC.transmit_uplink(
+        kk, sw8, mw8, jnp.full((8,), 0.9), jnp.full((8,), 0.6),
+        n=kl, bits=bits)[2])
+    t = _time(full, key)
+    emit('bitchannel_transmit_uplink', 1e6 * t,
+         f'K=8 l={kl} sign+mod corrupted+verified')
+
+    # --------------------------- end-to-end transport, channel modes
+    gbar = jnp.abs(jax.random.normal(jax.random.fold_in(key, 2), (kl,)))
+    qk = jnp.full((8,), 0.7)
+    pk = jnp.full((8,), 0.6)
+    for chan_kind, wire, n_retx in (('bernoulli', 'analytic', 0),
+                                    ('bernoulli', 'packed', 0),
+                                    ('bitlevel', 'packed', 0),
+                                    ('bitlevel', 'packed', 1)):
+        agg = jax.jit(lambda kk, w=wire, c=chan_kind, r=n_retx:
+                      TR.spfl_aggregate(grads, gbar, qk, pk, bits,
+                                        fl.b0_bits, kk, n_retx=r,
+                                        wire=w, channel=c))
+        t = _time(lambda kk: agg(kk)[0], jax.random.PRNGKey(5))
+        _, diag = agg(jax.random.PRNGKey(5))
+        retx = float(diag.retransmissions)
+        emit(f'bitchannel_spfl_{chan_kind}_{wire}_retx{n_retx}', 1e6 * t,
+             f'payload_bits={float(diag.payload_bits):.0f} retx={retx:.0f}')
+
+
+if __name__ == '__main__':
+    main()

@@ -29,6 +29,7 @@ SUITES = [
     ('allocation', 'bench_allocation'),      # §IV-C complexity
     ('kernels', 'bench_kernels'),            # Pallas hot path
     ('wire', 'bench_wire'),                  # materialized packet layer
+    ('bitchannel', 'bench_bitchannel'),      # CRC-driven erasures + retx
     ('roofline', 'roofline'),                # deliverable (g)
 ]
 

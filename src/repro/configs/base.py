@@ -235,6 +235,14 @@ class FLConfig:
     word buffers (repro.wire) on the supporting transports (spfl,
     error_free, and their tree variants) — identical aggregation, with
     ``payload_bits`` measured from the buffers.
+
+    ``channel``: how packet fate is decided on spfl/spfl_retx.
+    'bernoulli' draws one coin per packet from the closed-form (q, p) of
+    eq. (11)/(13); 'bitlevel' (requires ``wire='packed'``) flips
+    individual bits of the materialized buffers at a BER calibrated to
+    the same (q, p) and lets the xor-fold checksum drive erasures on the
+    PS side (repro.core.bitchannel) — sign retransmissions then resend
+    real buffers and their measured bits land in ``payload_bits``.
     """
     n_devices: int = 20                  # K
     bandwidth_hz: float = 10e6           # B
@@ -262,6 +270,7 @@ class FLConfig:
     # power floor under the modulus packet.
     alpha_max: float = 1.0
     wire: str = 'analytic'               # analytic | packed
+    channel: str = 'bernoulli'           # bernoulli | bitlevel
 
     @property
     def noise_psd_w(self) -> float:

@@ -1,0 +1,152 @@
+"""Bit-level uplink channel — CRC-driven erasures over materialized packets.
+
+The analytic channel (``repro.core.channel``) prices a whole packet into
+one success probability — q for the sign packet, eq. (11); p for the
+modulus packet, eq. (13) — and the Bernoulli simulator draws packet fate
+directly from it.  This module is the bit-granular counterpart for the
+materialized wire path (``repro.wire``): it maps (q, p) to a per-bit flip
+probability, flips real bits of the framed uint32 buffers
+(``repro.wire.corrupt``), and lets the PS-side xor-fold verification
+(``repro.wire.packets``) *detect* the damage.  ``sign_ok`` / ``mod_ok``
+are then decode outcomes of corrupted buffers, not independent coin
+flips — the checksum becomes a modeled erasure mechanism (cf. the
+bit-level reliability treatment in Jin et al., "Communication Efficient
+Federated Learning with Energy Awareness over Wireless Networks", and the
+packet-error formulation of Chen et al., "A Joint Learning and
+Communications Framework for Federated Learning over Wireless Networks").
+
+Calibration
+-----------
+The fold verify passes iff every one of the 32 bit columns of the
+``B = header + payload + crc`` received words has even flip parity
+(``repro.wire.format.verify_frame``).  With i.i.d. flips at rate ``eps``,
+a column of ``B`` bits has even parity w.p. ``(1 + (1 - 2 eps)^B) / 2``,
+so
+
+    P(fold passes) = ((1 + (1 - 2 eps)^B) / 2) ** 32 .
+
+``ber_for_success`` inverts this closed form, so the *detected-erasure*
+rate of the bit channel equals the analytic packet-error rate ``1 - q``
+(resp. ``1 - p``) by construction — even though the materialized packet is
+slightly larger than the ``l`` (resp. ``l b + b0``) bits eq. (12)/(14)
+price, the framing/padding overhead is absorbed into the per-bit rate.
+Two second-order deviations remain, both far below CLT resolution at
+operating points of interest (pinned by tests/test_bitchannel.py):
+
+* even-parity flip patterns pass the fold undetected — the miss rate any
+  32-bit checksum has (here the decoded payload is *used corrupted*,
+  which is the physically honest behavior);
+* the magic/length header checks reject a measure-O(eps^2) sliver of
+  fold-passing patterns.
+
+Retransmission
+--------------
+``transmit_uplink(n_retx=...)`` materializes the sign-packet
+retransmissions of SP-FL+retx (paper Fig. 6): a client whose sign packet
+failed verification re-encodes the *same payload* with a fresh header
+stamp (``repro.wire.packets.restamp_sign_retx``), the buffer takes a
+fresh channel draw, and the PS re-verifies.  Every resend is counted at
+its measured size (``sign words * 32`` bits) and surfaced per client.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.wire import corrupt as wire_corrupt
+from repro.wire import format as wire_fmt
+from repro.wire import packets as wire_packets
+
+Array = jax.Array
+
+
+def fold_pass_prob(ber, n_words: int) -> Array:
+    """Forward model: P(xor-fold verify passes) for i.i.d. flips at rate
+    ``ber`` over ``n_words`` total words (header + payload + crc).
+
+    Evaluated in log1p/expm1 form so f32 stays exact for the tiny BERs
+    of large packets at high success probabilities (where (1-2e)^B would
+    round to 1.0)."""
+    ber = jnp.asarray(ber, jnp.float32)
+    log_pow = n_words * jnp.log1p(-2.0 * ber)      # log (1-2e)^B
+    even_m1 = 0.5 * jnp.expm1(log_pow)             # P(column even) - 1
+    return jnp.exp(wire_fmt.WORD_BITS * jnp.log1p(even_m1))
+
+
+def ber_for_success(prob, n_words: int) -> Array:
+    """Per-bit flip probability such that the fold verify passes with
+    probability ``prob`` over an ``n_words`` packet (inverse of
+    :func:`fold_pass_prob`); the marginal erasure rate of the bit channel
+    then matches the analytic 1 - q / 1 - p of eq. (11)/(13).
+
+    Stable in f32 across the whole operating range: the log1p/expm1
+    chain keeps prob -> 1 at model-scale packets (l ~ 1e6 coordinates)
+    from underflowing to ber = 0, and prob at or below the 2^-32 fold
+    floor saturates at ber = 1/2 (a 32-bit fold cannot flag erasures
+    more often than 1 - 2^-32)."""
+    prob = jnp.clip(jnp.asarray(prob, jnp.float32), 0.0, 1.0)
+    # r - 1 with r = 2 prob^(1/32) - 1; clamped at r = 0 (the fold floor)
+    rm1 = jnp.maximum(
+        2.0 * jnp.expm1(jnp.log(prob) / wire_fmt.WORD_BITS), -1.0)
+    log_r = jnp.log1p(rm1)                         # -inf at the floor
+    return -0.5 * jnp.expm1(log_r / n_words)
+
+
+class UplinkReport(NamedTuple):
+    """What the PS saw of one round's uplink through the bit channel."""
+    sign_words: Array    # (K, Ws) received sign buffers (accepted attempt)
+    mod_words: Array     # (K, Wm) received modulus buffers
+    sign_ok: Array       # (K,) bool — verify outcome after retransmissions
+    mod_ok: Array        # (K,) bool — modulus verify outcome
+    sign_crc_ok: Array   # (K,) bool — first-attempt sign verify
+    mod_crc_ok: Array    # (K,) bool — (== mod_ok; modulus has no retx)
+    sign_flips: Array    # (K,) int32 — channel bit flips across attempts
+    mod_flips: Array     # (K,) int32
+    retx_attempts: Array  # (K,) int32 — materialized sign resends
+    retx_bits: Array     # scalar f32 — measured bits of all resends
+
+
+def transmit_uplink(key, sign_words: Array, mod_words: Array, q: Array,
+                    p: Array, *, n: int, bits: int,
+                    n_retx: int = 0) -> UplinkReport:
+    """Send every client's framed packet pair through the bit channel.
+
+    ``sign_words`` (K, Ws) / ``mod_words`` (K, Wm) are the encoded
+    buffers; ``q`` / ``p`` (K,) the analytic per-packet success
+    probabilities the flip rates are calibrated to.  Failed sign packets
+    are re-encoded (same payload, fresh stamp) and resent up to
+    ``n_retx`` times, each resend re-verified under a fresh channel draw.
+    """
+    ws = sign_words.shape[-1]
+    wm = mod_words.shape[-1]
+    ber_s = ber_for_success(q, ws)
+    ber_v = ber_for_success(p, wm)
+    ks, kv = jax.random.split(key)
+
+    sw, s_mask = wire_corrupt.corrupt_words(ks, sign_words, ber_s)
+    mw, m_mask = wire_corrupt.corrupt_words(kv, mod_words, ber_v)
+    sign_ok = wire_packets.verify_sign_words(sw, n=n)
+    mod_ok = wire_packets.verify_mod_words(mw, n=n, bits=bits)
+    sign_crc_ok = sign_ok
+    sign_flips = wire_corrupt.count_flips(s_mask)
+    mod_flips = wire_corrupt.count_flips(m_mask)
+
+    retx_attempts = jnp.zeros(q.shape, jnp.int32)
+    for attempt in range(1, n_retx + 1):
+        failed = ~sign_ok
+        resent = wire_packets.restamp_sign_retx(sign_words, attempt)
+        rx, mask = wire_corrupt.corrupt_words(
+            jax.random.fold_in(ks, attempt), resent, ber_s)
+        ok = wire_packets.verify_sign_words(rx, n=n)
+        sw = jnp.where((failed & ok)[..., None], rx, sw)
+        sign_flips = sign_flips + jnp.where(
+            failed, wire_corrupt.count_flips(mask), 0)
+        retx_attempts = retx_attempts + failed.astype(jnp.int32)
+        sign_ok = sign_ok | (failed & ok)
+
+    retx_bits = (jnp.sum(retx_attempts).astype(jnp.float32)
+                 * float(ws * wire_fmt.WORD_BITS))
+    return UplinkReport(sw, mw, sign_ok, mod_ok, sign_crc_ok, mod_ok,
+                        sign_flips, mod_flips, retx_attempts, retx_bits)

@@ -28,6 +28,15 @@ from repro.configs.base import FLConfig
 
 Array = jax.Array
 
+# How per-round packet fate is simulated (FLConfig.channel):
+#   'bernoulli' — one Bernoulli(q)/Bernoulli(p) draw per packet, straight
+#                 from the closed forms (11)/(13);
+#   'bitlevel'  — per-bit flips of the materialized wire buffers at a rate
+#                 calibrated to the same (q, p), with erasures driven by
+#                 the PS-side xor-fold verification (repro.core.bitchannel;
+#                 requires wire='packed').
+CHANNEL_KINDS = ('bernoulli', 'bitlevel')
+
 
 @dataclass(frozen=True)
 class ChannelState:
@@ -125,6 +134,24 @@ def simulate_outcomes(key, q: Array, p: Array) -> Tuple[Array, Array]:
     sign_ok = jax.random.uniform(k1, q.shape) < q
     mod_ok = jax.random.uniform(k2, p.shape) < p
     return sign_ok, mod_ok
+
+
+def simulate_attempts(key, q: Array, n_retx: int) -> Tuple[Array, Array]:
+    """Per-attempt Bernoulli draws for ``1 + n_retx`` sign transmissions.
+
+    A client retransmits after each failure until it succeeds or exhausts
+    its ``n_retx`` retransmissions.  Returns ``(sign_ok, n_resends)``:
+    ``sign_ok ~ Bernoulli(1 - (1-q)^(n_retx+1))`` marginally, and
+    ``n_resends`` counts the retransmissions actually performed (failed
+    attempts before the first success, capped at ``n_retx``) — the number
+    the payload accounting must charge, not just "did any retx happen".
+    """
+    u = jax.random.uniform(key, (n_retx + 1,) + jnp.shape(q))
+    succ = u < q[None, ...]
+    sign_ok = jnp.any(succ, axis=0)
+    first = jnp.argmax(succ, axis=0).astype(jnp.int32)
+    n_resends = jnp.where(sign_ok, first, n_retx)
+    return sign_ok, n_resends
 
 
 def simulate_outcomes_fading(key, alpha, beta, p_w, gain, dim: int,

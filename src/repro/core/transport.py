@@ -34,6 +34,14 @@ identical (the decode is exact), and ``payload_bits`` becomes the
 *measured* size of the materialized buffers instead of the analytic
 formula.  ``wire='analytic'`` (default) keeps the original count-only
 path.
+
+Bit-level channel (``channel='bitlevel'``, packed wire only): decode
+stops being lossless — the buffers take calibrated per-bit flips
+(repro.core.bitchannel) and ``sign_ok``/``mod_ok`` are the PS-side
+xor-fold verification outcomes of the damaged words, with the marginal
+packet-error rates still matching eq. (11)/(13).  ``spfl_retx`` then
+resends *materialized* sign buffers (same payload, fresh header stamp,
+fresh draw) and the diagnostics carry per-client CRC state.
 """
 from __future__ import annotations
 
@@ -44,11 +52,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import FLConfig
-from repro.core import channel
+from repro.core import bitchannel
+from repro.core import channel as chan
 from repro.core.quantize import (
     QuantizedGradient, dequantize_modulus, packet_bits,
     quantization_error_bound, stochastic_quantize,
 )
+from repro.wire import corrupt as wire_corrupt
 from repro.wire import format as wire_fmt
 from repro.wire import packets as wire_packets
 
@@ -59,11 +69,21 @@ _Q_FLOOR = 1e-8        # below this, 1/q unbiasing is switched off (q ~ 0)
 
 
 class TransportDiagnostics(NamedTuple):
+    """Per-round uplink telemetry.  The first five fields exist on every
+    transport; the trailing CRC-state fields are populated by the
+    channels that measure them (``channel='bitlevel'``, and
+    ``retx_attempts`` also by the fixed Bernoulli retx accounting) and
+    stay ``None`` elsewhere."""
     sign_ok: Array          # (K,) bool — sign packet decoded
     mod_ok: Array           # (K,) bool — modulus packet decoded
     accepted: Array         # (K,) bool — client contributed to the update
     payload_bits: Array     # scalar — total uplink payload this round
-    retransmissions: Array  # scalar
+    retransmissions: Array  # scalar — total sign resends this round
+    sign_flips: Optional[Array] = None    # (K,) channel bit flips (sign)
+    mod_flips: Optional[Array] = None     # (K,) channel bit flips (mod)
+    sign_crc_ok: Optional[Array] = None   # (K,) first-attempt CRC verify
+    mod_crc_ok: Optional[Array] = None    # (K,) modulus CRC verify
+    retx_attempts: Optional[Array] = None  # (K,) per-client resend count
 
 
 # ---------------------------------------------------------------------------
@@ -75,7 +95,7 @@ def single_packet_success_prob(beta, p_w, gain, n_bits, fl: FLConfig):
     client's whole band at full power.  Uses the paper's H convention
     (channel.h_term) with the band-split factor removed, i.e. exponent
     n_bits/(beta*B*tau) instead of 2*n_bits/(beta*B*tau)."""
-    h = channel.h_term(beta, p_w, gain, n_bits / 2.0, fl)
+    h = chan.h_term(beta, p_w, gain, n_bits / 2.0, fl)
     return jnp.exp(h)
 
 
@@ -100,6 +120,33 @@ def _inverse_prob(accept: Array, q: Array) -> Array:
 WIRE_KINDS = ('analytic', 'packed')
 
 
+def encode_wire(qg: QuantizedGradient, round_idx: int = 0
+                ) -> Tuple[Array, Array, int]:
+    """Client side of the packed wire: encode a (K, l) quantized gradient
+    into framed buffers -> (sign_words (K, Ws), mod_words (K, Wm),
+    measured bits of the real buffers)."""
+    K = qg.sign.shape[0]
+    sign_words, mod_words = wire_packets.encode_uplink_batch(
+        qg.sign, qg.qidx, qg.g_min.reshape(K), qg.g_max.reshape(K),
+        bits=qg.bits, round_idx=round_idx)
+    measured = wire_fmt.WORD_BITS * K * (sign_words.shape[1]
+                                         + mod_words.shape[1])
+    return sign_words, mod_words, measured
+
+
+def decode_wire(qg: QuantizedGradient, sign_words: Array, mod_words: Array
+                ) -> Tuple[QuantizedGradient, Array]:
+    """PS side: decode (possibly damaged) buffers back into a
+    QuantizedGradient shaped like ``qg`` -> (decoded, crc_ok flags)."""
+    l = qg.sign.shape[1]
+    dec = wire_packets.decode_uplink_batch(sign_words, mod_words,
+                                           n=l, bits=qg.bits)
+    rec = QuantizedGradient(dec.sign, dec.qidx,
+                            dec.g_min.reshape(qg.g_min.shape),
+                            dec.g_max.reshape(qg.g_max.shape), qg.bits)
+    return rec, dec
+
+
 def materialize_wire(qg: QuantizedGradient, round_idx: int = 0
                      ) -> Tuple[QuantizedGradient, int, Array]:
     """Round-trip a (K, l) quantized gradient through the packed wire.
@@ -113,18 +160,8 @@ def materialize_wire(qg: QuantizedGradient, round_idx: int = 0
     sign 0 — see repro.wire.__doc__; the reconstruction s*Q_v is still
     exact because g=0 coordinates quantize to knob 0 with g_min=0).
     """
-    K, l = qg.sign.shape
-    bits = qg.bits
-    sign_words, mod_words = wire_packets.encode_uplink_batch(
-        qg.sign, qg.qidx, qg.g_min.reshape(K), qg.g_max.reshape(K),
-        bits=bits, round_idx=round_idx)
-    measured = wire_fmt.WORD_BITS * K * (sign_words.shape[1]
-                                         + mod_words.shape[1])
-    dec = wire_packets.decode_uplink_batch(sign_words, mod_words,
-                                           n=l, bits=bits)
-    rec = QuantizedGradient(dec.sign, dec.qidx,
-                            dec.g_min.reshape(qg.g_min.shape),
-                            dec.g_max.reshape(qg.g_max.shape), bits)
+    sign_words, mod_words, measured = encode_wire(qg, round_idx)
+    rec, dec = decode_wire(qg, sign_words, mod_words)
     return rec, measured, dec.sign_ok & dec.mod_ok
 
 
@@ -147,7 +184,8 @@ def _wire_leaf_roundtrip(sign: Array, qidx: Array, bits: int
 
 def spfl_aggregate(grads: Array, gbar: Array, q: Array, p: Array,
                    bits: int, b0: int, key, n_retx: int = 0,
-                   wire: str = 'analytic', round_idx=0
+                   wire: str = 'analytic', round_idx=0,
+                   channel: str = 'bernoulli'
                    ) -> Tuple[Array, TransportDiagnostics]:
     """Eq. (15)-(17).  grads: (K, l); gbar: (l,) or (K, l); q, p: (K,).
 
@@ -155,22 +193,54 @@ def spfl_aggregate(grads: Array, gbar: Array, q: Array, p: Array,
     buffers and decodes from them; the aggregate is identical and
     ``payload_bits`` is the measured buffer size.  ``round_idx`` stamps
     the packet headers (PS-side attribution).
+
+    ``channel='bitlevel'`` (requires ``wire='packed'``) replaces the
+    per-packet Bernoulli draw with per-bit flips of the materialized
+    buffers at a BER calibrated to the same (q, p): ``sign_ok``/``mod_ok``
+    come from the PS-side xor-fold verification of the corrupted buffers,
+    failed sign packets are *resent as real buffers* (same payload, fresh
+    header stamp, fresh channel draw) up to ``n_retx`` times, and the
+    measured resend bits land in ``payload_bits``.
     """
     assert wire in WIRE_KINDS, wire
+    assert channel in chan.CHANNEL_KINDS, channel
+    if channel == 'bitlevel' and wire != 'packed':
+        raise ValueError("channel='bitlevel' requires wire='packed'")
     K, l = grads.shape
     kq, ko = jax.random.split(key)
     qg = _per_client_quantize(grads, bits, kq)
-
-    if wire == 'packed':
-        qg, measured_bits, _crc_ok = materialize_wire(qg, round_idx)
-        sign_bits = wire_fmt.WORD_BITS * wire_fmt.sign_packet_words(l)
-        payload_base = float(measured_bits)
-    else:
-        sign_bits, mod_bits = packet_bits(l, bits, b0)
-        payload_base = float(K * (sign_bits + mod_bits))
-
     q_eff = 1.0 - (1.0 - q) ** (n_retx + 1)      # sign retransmission(s)
-    sign_ok, mod_ok = channel.simulate_outcomes(ko, q_eff, p)
+
+    extras = {}
+    if channel == 'bitlevel':
+        sign_words, mod_words, measured = encode_wire(qg, round_idx)
+        rep = bitchannel.transmit_uplink(ko, sign_words, mod_words, q, p,
+                                         n=l, bits=bits, n_retx=n_retx)
+        qg, _dec = decode_wire(qg, rep.sign_words, rep.mod_words)
+        sign_ok, mod_ok = rep.sign_ok, rep.mod_ok
+        retx = jnp.sum(rep.retx_attempts).astype(jnp.float32)
+        payload = float(measured) + rep.retx_bits
+        extras = dict(sign_flips=rep.sign_flips, mod_flips=rep.mod_flips,
+                      sign_crc_ok=rep.sign_crc_ok, mod_crc_ok=rep.mod_crc_ok,
+                      retx_attempts=rep.retx_attempts)
+    else:
+        if wire == 'packed':
+            qg, measured_bits, _crc_ok = materialize_wire(qg, round_idx)
+            sign_bits = wire_fmt.WORD_BITS * wire_fmt.sign_packet_words(l)
+            payload_base = float(measured_bits)
+        else:
+            sign_bits, mod_bits = packet_bits(l, bits, b0)
+            payload_base = float(K * (sign_bits + mod_bits))
+        if n_retx == 0:
+            sign_ok, mod_ok = chan.simulate_outcomes(ko, q_eff, p)
+            retx = jnp.zeros((), jnp.float32)
+        else:
+            ks, km = jax.random.split(ko)
+            sign_ok, retx_k = chan.simulate_attempts(ks, q, n_retx)
+            mod_ok = jax.random.uniform(km, p.shape) < p
+            retx = jnp.sum(retx_k).astype(jnp.float32)
+            extras = dict(retx_attempts=retx_k)
+        payload = payload_base + retx * sign_bits
 
     modulus = dequantize_modulus(qg)                       # (K, l)
     gbar_k = jnp.broadcast_to(gbar, grads.shape) if gbar.ndim == 1 else gbar
@@ -180,11 +250,9 @@ def spfl_aggregate(grads: Array, gbar: Array, q: Array, p: Array,
     w = _inverse_prob(sign_ok, q_eff)[:, None]             # (K, 1)
     ghat = jnp.mean(w * signed, axis=0)
 
-    retx = jnp.sum((~sign_ok).astype(jnp.float32)) * min(n_retx, 1)
-    payload = payload_base + retx * sign_bits
     return ghat, TransportDiagnostics(sign_ok, mod_ok, sign_ok,
                                       jnp.asarray(payload, jnp.float32),
-                                      retx)
+                                      retx, **extras)
 
 
 # ---------------------------------------------------------------------------
@@ -292,9 +360,40 @@ def tree_client_stats(grads_tree) -> dict:
     return {'g2': g2, 'g_min': g_min, 'g_max': g_max, 'dim': dim}
 
 
+def _bitlevel_tree_pass(key, word_leaves, ber, frame_words: int, k: int):
+    """One transmission of every client's *virtual* framed packet whose
+    payload words are scattered across per-leaf buffers (K, W_i).
+
+    Corrupts each leaf buffer plus one draw for the per-client framing
+    words (header + crc, which the tree path never materializes), and
+    verifies by folding the flip masks: on a contiguous buffer the
+    PS-side check ``fold(received[:-1]) == received[-1]`` is equivalent
+    to ``fold(flip mask over ALL words incl. crc) == 0``, so
+    accumulating the mask fold across leaves computes exactly the
+    xor-fold verification the flat path runs on real buffers.
+
+    Returns (corrupted leaf buffers, verify_ok (K,), flips (K,)).
+    """
+    fold = jnp.zeros((k,), jnp.uint32)
+    flips = jnp.zeros((k,), jnp.int32)
+    rx = []
+    for i, wl in enumerate(word_leaves):
+        cw, mask = wire_corrupt.corrupt_words(
+            jax.random.fold_in(key, i), wl, ber)
+        rx.append(cw)
+        fold = fold ^ wire_fmt.xor_fold(mask)
+        flips = flips + wire_corrupt.count_flips(mask)
+    fmask = wire_corrupt.flip_mask(
+        jax.random.fold_in(key, len(word_leaves)), (k, frame_words), ber)
+    fold = fold ^ wire_fmt.xor_fold(fmask)
+    flips = flips + wire_corrupt.count_flips(fmask)
+    return rx, fold == 0, flips
+
+
 def spfl_aggregate_tree(grads_tree, gbar_tree, q: Array, p: Array,
                         fl: FLConfig, key, stats: Optional[dict] = None,
-                        n_retx: int = 0, wire: Optional[str] = None):
+                        n_retx: int = 0, wire: Optional[str] = None,
+                        channel: Optional[str] = None):
     """SP-FL over per-client gradient pytrees (leaves (K, ...)).
 
     The quantizer range, the packet outcomes and the 1/q weights are
@@ -306,16 +405,26 @@ def spfl_aggregate_tree(grads_tree, gbar_tree, q: Array, p: Array,
     per-client framing (headers + b0 range + checksums) is one packet
     pair per client per round regardless of leaf count, so the measured
     ``payload_bits`` charges it once per client.
+
+    ``channel='bitlevel'`` (default: ``fl.channel``; requires the packed
+    wire) flips bits of the leaf word buffers at the (q, p)-calibrated
+    BER and drives ``sign_ok``/``mod_ok`` from the xor-fold verification
+    of the flipped words — one virtual packet pair per client spanning
+    all leaves, with sign retransmissions re-sending the same payload
+    under a fresh channel draw (the fresh header stamp lives in the
+    framing words, which the tree path draws but does not materialize).
     """
     wire = fl.wire if wire is None else wire
+    channel = fl.channel if channel is None else channel
     assert wire in WIRE_KINDS, wire
+    assert channel in chan.CHANNEL_KINDS, channel
+    if channel == 'bitlevel' and wire != 'packed':
+        raise ValueError("channel='bitlevel' requires wire='packed'")
     if stats is None:
         stats = tree_client_stats(grads_tree)
     K = q.shape[0]
     kq, ko = jax.random.split(key)
     q_eff = 1.0 - (1.0 - q) ** (n_retx + 1)
-    sign_ok, mod_ok = channel.simulate_outcomes(ko, q_eff, p)
-    w = _inverse_prob(sign_ok, q_eff)
 
     g_min, g_max = stats['g_min'], stats['g_max']
     bits = fl.quant_bits
@@ -323,49 +432,111 @@ def spfl_aggregate_tree(grads_tree, gbar_tree, q: Array, p: Array,
     # cross-client reduction can run in bf16, halving uplink bytes
     rdt = jnp.bfloat16 if fl.uplink_reduce_dtype == 'bfloat16' \
         else jnp.float32
-    payload_words = [0]
 
-    def leaf(gleaf, gbar_leaf, lkey):
-        Kd = gleaf.shape[0]
-        shape = gleaf.shape
-        flat = gleaf.astype(jnp.float32).reshape(Kd, -1)
+    leaves, treedef = jax.tree.flatten(grads_tree)
+    gbar_leaves = jax.tree.leaves(gbar_tree)
+    keys = jax.random.split(kq, len(leaves))
+
+    # ---- clients: quantize every leaf (+ pack on the packed wire) ----
+    qgs, sws, qws = [], [], []
+    payload_words = 0
+    for lf, lkey in zip(leaves, keys):
+        Kd = lf.shape[0]
+        flat = lf.astype(jnp.float32).reshape(Kd, -1)
         qg = stochastic_quantize(flat, bits, lkey,
                                  g_min[:, None], g_max[:, None])
+        qgs.append(qg)
+        if wire == 'packed':
+            sws.append(wire_fmt.pack_bits_ref(
+                wire_fmt.sign_to_bits(qg.sign), 1))
+            qws.append(wire_fmt.pack_bits_ref(qg.qidx, bits))
+            payload_words += sws[-1].shape[-1] + qws[-1].shape[-1]
+
+    # ---- channel: packet fate (and, bit-level, payload damage) ----
+    extras = {}
+    if channel == 'bitlevel':
+        sign_frame = wire_fmt.SIGN_HEADER_WORDS + wire_fmt.CRC_WORDS
+        mod_frame = wire_fmt.MOD_HEADER_WORDS + wire_fmt.CRC_WORDS
+        ws = sum(sw.shape[-1] for sw in sws) + sign_frame
+        wm = sum(qw.shape[-1] for qw in qws) + mod_frame
+        ber_s = bitchannel.ber_for_success(q, ws)
+        ber_v = bitchannel.ber_for_success(p, wm)
+        ks, kv = jax.random.split(ko)
+        qws, mod_ok, mod_flips = _bitlevel_tree_pass(
+            kv, qws, ber_v, mod_frame, K)
+        orig_sws = sws      # pristine payloads: retransmissions resend these
+        sws, sign_ok, sign_flips = _bitlevel_tree_pass(
+            ks, sws, ber_s, sign_frame, K)
+        sign_crc_ok = sign_ok
+        retx_k = jnp.zeros((K,), jnp.int32)
+        for attempt in range(1, n_retx + 1):
+            failed = ~sign_ok
+            rx_a, ok_a, flips_a = _bitlevel_tree_pass(
+                jax.random.fold_in(ks, attempt), orig_sws, ber_s,
+                sign_frame, K)
+            rescued = failed & ok_a
+            sws = [jnp.where(rescued[:, None], a, r)
+                   for a, r in zip(rx_a, sws)]
+            sign_flips = sign_flips + jnp.where(failed, flips_a, 0)
+            retx_k = retx_k + failed.astype(jnp.int32)
+            sign_ok = sign_ok | rescued
+        retx = jnp.sum(retx_k).astype(jnp.float32)
+        extras = dict(sign_flips=sign_flips, mod_flips=mod_flips,
+                      sign_crc_ok=sign_crc_ok, mod_crc_ok=mod_ok,
+                      retx_attempts=retx_k)
+    elif n_retx == 0:
+        sign_ok, mod_ok = chan.simulate_outcomes(ko, q_eff, p)
+        retx = jnp.zeros((), jnp.float32)
+    else:
+        ks, km = jax.random.split(ko)
+        sign_ok, retx_k = chan.simulate_attempts(ks, q, n_retx)
+        mod_ok = jax.random.uniform(km, p.shape) < p
+        retx = jnp.sum(retx_k).astype(jnp.float32)
+        extras = dict(retx_attempts=retx_k)
+    w = _inverse_prob(sign_ok, q_eff)
+
+    # ---- PS: decode (possibly damaged) payloads + aggregate ----
+    out = []
+    for i, (lf, gbar_leaf) in enumerate(zip(leaves, gbar_leaves)):
+        qg = qgs[i]
+        shape = lf.shape
+        Kd = shape[0]
         sign, qidx = qg.sign, qg.qidx
         if wire == 'packed':
-            sign, qidx, n_words = _wire_leaf_roundtrip(sign, qg.qidx, bits)
-            payload_words[0] += n_words
+            d = sign.shape[-1]
+            sign = wire_fmt.bits_to_sign(wire_fmt.unpack_bits_ref(
+                sws[i], d, 1))
+            qidx = wire_fmt.unpack_bits_ref(qws[i], d, bits).astype(
+                jnp.int32)
         modulus = dequantize_modulus(qg._replace(sign=sign, qidx=qidx))
         gb = gbar_leaf.astype(jnp.float32)
         if gb.shape == shape:                       # per-client (last_local)
             gb = gb.reshape(Kd, -1)
         else:                                       # shared (last_global...)
-            gb = jnp.broadcast_to(gb.reshape(1, -1), flat.shape)
+            gb = jnp.broadcast_to(gb.reshape(1, -1), modulus.shape)
         modulus = jnp.where(mod_ok[:, None], modulus, gb)
         signed = sign.astype(jnp.float32) * modulus
         contrib = (w[:, None] * signed).astype(rdt)
         # keep the reduction itself (-> cross-client all-reduce) in rdt
-        return (jnp.sum(contrib, axis=0) / Kd).astype(
-            jnp.float32).reshape(shape[1:])
-
-    leaves, treedef = jax.tree.flatten(grads_tree)
-    gbar_leaves = jax.tree.leaves(gbar_tree)
-    keys = jax.random.split(kq, len(leaves))
-    out = [leaf(lf, gb, k) for lf, gb, k in zip(leaves, gbar_leaves, keys)]
+        out.append((jnp.sum(contrib, axis=0) / Kd).astype(
+            jnp.float32).reshape(shape[1:]))
     ghat = jax.tree.unflatten(treedef, out)
 
     l = stats['dim']
     if wire == 'packed':
         framing = (wire_fmt.SIGN_HEADER_WORDS + wire_fmt.MOD_HEADER_WORDS
                    + 2 * wire_fmt.CRC_WORDS)
-        payload = K * wire_fmt.WORD_BITS * (payload_words[0] + framing)
+        payload = K * wire_fmt.WORD_BITS * (payload_words + framing)
+        sign_bits = wire_fmt.WORD_BITS * (
+            sum(sw.shape[-1] for sw in sws) + wire_fmt.SIGN_HEADER_WORDS
+            + wire_fmt.CRC_WORDS) if sws else 0
     else:
         sign_bits, mod_bits = packet_bits(l, bits, fl.b0_bits)
         payload = K * (sign_bits + mod_bits)
     diag = TransportDiagnostics(
         sign_ok, mod_ok, sign_ok,
-        jnp.asarray(payload, jnp.float32),
-        jnp.sum((~sign_ok).astype(jnp.float32)) * min(n_retx, 1))
+        jnp.asarray(payload + retx * sign_bits, jnp.float32),
+        retx, **extras)
     return ghat, stats, diag
 
 

@@ -157,3 +157,17 @@ def unpack_dequant_flat(sign_words: Array, qidx_words: Array, gbar: Array,
     out = wk.unpack_dequant_2d(s2, q2, b2, _s(gmin), _s(gmax), _s(mod_ok),
                                _s(weight), bits=bits, interpret=interpret)
     return out.reshape(-1)[:n]
+
+
+def fold_words(words: Array, interpret: bool | None = None) -> Array:
+    """Per-client xor-fold of (K, W) word buffers -> (K,) uint32: the
+    Pallas form of repro.wire.format.xor_fold, for moving the bit-level
+    channel's packet verification on-chip at transport scale (validated
+    against the reference; the transports themselves still fold in jnp —
+    see ROADMAP).  Pads W to the fold-block grid with zeros (the xor
+    identity)."""
+    interpret = default_interpret() if interpret is None else interpret
+    k, w_n = words.shape
+    w_pad = -(-w_n // wk.BLOCK_FOLD_WORDS) * wk.BLOCK_FOLD_WORDS
+    padded = jnp.pad(words.astype(jnp.uint32), ((0, 0), (0, w_pad - w_n)))
+    return wk.fold_words_2d(padded, interpret=interpret).reshape(k)

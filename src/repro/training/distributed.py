@@ -66,7 +66,8 @@ def make_fl_train_step(cfg: ModelConfig, fl: FLConfig,
 
         if transport_kind == 'spfl':
             ghat, stats, diag = tr.spfl_aggregate_tree(
-                grads, gbar, q, p, fl, key, wire=fl.wire)
+                grads, gbar, q, p, fl, key, wire=fl.wire,
+                channel=fl.channel)
         elif transport_kind == 'error_free':
             ghat, stats, diag = tr.error_free_aggregate_tree(
                 grads, fl, key, wire=fl.wire)

@@ -41,6 +41,7 @@ class FLHistory:
     payload_bits: List[float] = field(default_factory=list)
     sign_ok_frac: List[float] = field(default_factory=list)
     mod_ok_frac: List[float] = field(default_factory=list)
+    retransmissions: List[float] = field(default_factory=list)
     alloc_time_s: List[float] = field(default_factory=list)
     round_time_s: List[float] = field(default_factory=list)
 
@@ -120,7 +121,7 @@ class FLSimulator:
                 return transport.spfl_aggregate(
                     grads, gbar, q, p, fl.quant_bits, fl.b0_bits, key,
                     n_retx=1 if kind == 'spfl_retx' else 0, wire=fl.wire,
-                    round_idx=round_idx)
+                    round_idx=round_idx, channel=fl.channel)
             if kind == 'dds':
                 return transport.dds_aggregate(
                     grads, beta_uniform, gains, p_w, fl, key)
@@ -229,6 +230,7 @@ class FLSimulator:
                 diag.sign_ok.astype(jnp.float32))))
             hist.mod_ok_frac.append(float(jnp.mean(
                 diag.mod_ok.astype(jnp.float32))))
+            hist.retransmissions.append(float(diag.retransmissions))
             hist.alloc_time_s.append(alloc_t)
             hist.round_time_s.append(time.time() - t0)
         return hist

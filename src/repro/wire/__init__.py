@@ -39,7 +39,14 @@ Modules:
 * ``packets``     — ``encode_client_uplink`` / ``decode_client_uplink``
                     assembling/parsing whole packets; vmap over the K
                     client axis via ``encode_uplink_batch`` /
-                    ``decode_uplink_batch``.
+                    ``decode_uplink_batch``; standalone ``verify_*`` CRC
+                    checks and the ``restamp_sign_retx`` retransmission
+                    re-encode.
+* ``corrupt``     — Bernoulli bit-flip masks over word buffers: the write
+                    side of the bit-level channel
+                    (``repro.core.bitchannel``), which turns the xor-fold
+                    checksum from a test artifact into a modeled erasure
+                    mechanism (see README.md).
 
 One physical caveat, documented once here: a 1-bit sign cannot represent
 s(g)=0.  Coordinates with g=0 are transmitted as +1; their decoded
@@ -49,13 +56,17 @@ when the modulus packet is *lost* does the compensated estimate differ
 from the analytic idealization at exactly-zero coordinates (+gbar_i
 instead of 0) — a measure-zero event for real-valued gradients.
 """
-from repro.wire import format, packets  # noqa: F401
+from repro.wire import corrupt, format, packets  # noqa: F401
+from repro.wire.corrupt import (  # noqa: F401
+    corrupt_words, count_flips, flip_mask,
+)
 from repro.wire.format import (  # noqa: F401
     GROUP, MOD_HEADER_WORDS, SIGN_HEADER_WORDS, WORD_BITS,
     measured_uplink_bits, modulus_packet_words, pack_bits_ref,
-    payload_words, sign_packet_words, unpack_bits_ref,
+    payload_words, sign_packet_words, unpack_bits_ref, verify_frame,
 )
 from repro.wire.packets import (  # noqa: F401
     DecodedUplink, decode_client_uplink, decode_uplink_batch,
-    encode_client_uplink, encode_uplink_batch,
+    encode_client_uplink, encode_uplink_batch, restamp_sign_retx,
+    verify_mod_words, verify_sign_words,
 )

@@ -1,0 +1,55 @@
+"""Bit-level corruption of wire word buffers — the channel's write side.
+
+The analytic stack decides packet fate with one Bernoulli draw per packet
+(eq. (11)/(13)); the bit-level channel (``repro.core.bitchannel``) instead
+flips individual bits of the materialized uint32 buffers at a calibrated
+per-bit error rate and lets the xor-fold integrity word *detect* the
+damage on the PS side.  This module is the flip machinery: i.i.d.
+Bernoulli(ber) masks over every bit of a word buffer, applied by xor.
+
+All functions are pure jnp (jit/vmap-safe) and batched over arbitrary
+leading axes; ``ber`` broadcasts against the leading (per-client) axes so
+each client's packets see that client's channel quality.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.wire.format import WORD_BITS
+
+Array = jax.Array
+
+
+def flip_mask(key, shape: Tuple[int, ...], ber) -> Array:
+    """Draw a uint32 flip mask for a word buffer of ``shape``.
+
+    Each of the ``32 * prod(shape)`` bits is set independently with
+    probability ``ber`` (broadcast over the leading axes of ``shape``,
+    e.g. per-client rates of shape (K,) against words (K, W)).
+    """
+    ber = jnp.asarray(ber, jnp.float32)
+    draws = jax.random.uniform(key, (*shape, WORD_BITS))
+    ber = ber.reshape(ber.shape + (1,) * (draws.ndim - ber.ndim))
+    bits = (draws < ber).astype(jnp.uint32)
+    lane = jnp.arange(WORD_BITS, dtype=jnp.uint32)
+    return jnp.sum(bits << lane, axis=-1, dtype=jnp.uint32)
+
+
+def count_flips(mask: Array) -> Array:
+    """Flipped bits per buffer: popcount of the mask, summed over words."""
+    return jnp.sum(jax.lax.population_count(mask.astype(jnp.uint32)),
+                   axis=-1).astype(jnp.int32)
+
+
+def corrupt_words(key, words: Array, ber) -> Tuple[Array, Array]:
+    """Transmit ``words`` through the bit-flip channel.
+
+    Returns ``(received, mask)``: the corrupted buffer ``words ^ mask``
+    and the mask itself (callers fold/popcount it for verification
+    bookkeeping and diagnostics).
+    """
+    mask = flip_mask(key, words.shape, ber)
+    return words ^ mask, mask

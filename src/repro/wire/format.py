@@ -43,6 +43,14 @@ SIGN_HEADER_WORDS = 4        # magic, client_id, round, n
 MOD_HEADER_WORDS = 7         # magic, client_id, round, n, bits, gmin, gmax
 CRC_WORDS = 1
 
+# The round header word carries a retransmission stamp in its top byte:
+# [attempt:8 | round:24].  A resent packet is byte-identical in payload but
+# distinguishable at the PS (fresh stamp -> fresh attribution, and the CRC
+# word changes with it), which is what lets retransmissions be real buffers
+# instead of analytic bit recounts.
+RETX_SHIFT = 24
+ROUND_MASK = (1 << RETX_SHIFT) - 1
+
 
 # ---------------------------------------------------------------------------
 # sizes (all exact word counts of real buffers, not analytic formulas)
@@ -124,6 +132,17 @@ def xor_fold(words: Array) -> Array:
                           jax.lax.bitwise_xor, (words.ndim - 1,))
 
 
+def verify_frame(words: Array) -> Array:
+    """Fold check over the last axis (batched over leading axes): the
+    xor-fold of header + payload must equal the trailing CRC word.
+
+    Equivalently: the xor of *all* words including the CRC is zero, so a
+    received buffer passes iff the channel's flip mask has even parity in
+    every one of the 32 bit columns — the property the bit-level channel
+    calibration (repro.core.bitchannel) is built on."""
+    return xor_fold(words[..., :-1]) == words[..., -1]
+
+
 def _u32(x) -> Array:
     return jnp.asarray(x).astype(jnp.uint32)
 
@@ -144,10 +163,32 @@ def frame(header_fields, payload: Array) -> Array:
     return jnp.concatenate([body, xor_fold(body)[None]])
 
 
+def stamp_round(round_idx, attempt=0) -> Array:
+    """Round header word: [attempt:8 | round:24]."""
+    return ((_u32(round_idx) & jnp.uint32(ROUND_MASK))
+            | (_u32(attempt) << jnp.uint32(RETX_SHIFT)))
+
+
+def round_of(word: Array) -> Array:
+    return word.astype(jnp.uint32) & jnp.uint32(ROUND_MASK)
+
+
+def attempt_of(word: Array) -> Array:
+    return word.astype(jnp.uint32) >> jnp.uint32(RETX_SHIFT)
+
+
+def restamp_word(words: Array, idx: int, new_word) -> Array:
+    """Rewrite one header word and patch the CRC in O(1): the xor-fold is
+    linear, so crc' = crc ^ old ^ new.  Batched over leading axes."""
+    new_word = jnp.broadcast_to(_u32(new_word), words[..., idx].shape)
+    crc = words[..., -1] ^ words[..., idx] ^ new_word
+    return words.at[..., idx].set(new_word).at[..., -1].set(crc)
+
+
 def sign_header(client_id, round_idx, n: int):
-    return (SIGN_MAGIC, client_id, round_idx, n)
+    return (SIGN_MAGIC, client_id, stamp_round(round_idx), n)
 
 
 def modulus_header(client_id, round_idx, n: int, bits: int, g_min, g_max):
-    return (MOD_MAGIC, client_id, round_idx, n, bits,
+    return (MOD_MAGIC, client_id, stamp_round(round_idx), n, bits,
             f32_to_word(g_min), f32_to_word(g_max))

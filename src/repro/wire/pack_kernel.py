@@ -7,7 +7,7 @@ VPU streams with zero cross-group communication.  Arrays enter as
 group-major 2-D tiles — values ``(G, 32)``, words ``(G, bits)`` — and the
 grid runs over blocks of ``BLOCK_GROUPS`` groups.
 
-Four kernels:
+Five kernels:
 
 * ``pack_bits_kernel``      — values -> payload words.
 * ``unpack_bits_kernel``    — payload words -> values.
@@ -20,6 +20,14 @@ Four kernels:
 * ``unpack_dequant_kernel`` — the fused PS-side pass: unpack both packets
                               + knob reconstruction + compensation select
                               + 1/q weighting (eq. (15)-(17)) in one pass.
+* ``fold_words_kernel``     — per-client xor-fold of a (K, W) word
+                              buffer, accumulated across word-block grid
+                              steps: the on-chip form of the CRC
+                              reduction (format.xor_fold).  Validated
+                              against the reference (tests/test_wire.py)
+                              but not yet wired into the verify path —
+                              the transports still fold in jnp; see the
+                              ROADMAP item on TPU-side verification.
 
 Per-client scalars travel as (1, 1) blocks exactly like
 ``kernels.quantize_kernel``.  Everything is validated against the
@@ -37,6 +45,7 @@ from repro.kernels.quantize_kernel import quantize_body
 from repro.wire.format import GROUP
 
 BLOCK_GROUPS = 256           # groups (of 32 values) per grid step
+BLOCK_FOLD_WORDS = 512       # words per grid step of the fold reduction
 
 
 def _scalar_spec():
@@ -115,6 +124,22 @@ def unpack_dequant_kernel(gmin_ref, gmax_ref, mod_ok_ref, weight_ref,
     out_ref[...] = w * sign * modulus
 
 
+def fold_words_kernel(w_ref, f_ref):
+    """Xor-fold one (K, BLOCK_FOLD_WORDS) block into the (K, 1)
+    accumulator; grid step 0 initializes, later steps accumulate (xor is
+    associative/commutative, so block order is irrelevant)."""
+    fold = jax.lax.reduce(w_ref[...].astype(jnp.uint32), jnp.uint32(0),
+                          jax.lax.bitwise_xor, (1,))[:, None]
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        f_ref[...] = fold
+
+    @pl.when(pl.program_id(0) != 0)
+    def _acc():
+        f_ref[...] = f_ref[...] ^ fold
+
+
 # ---------------------------------------------------------------------------
 # pallas_call builders (group-major 2-D inputs, grid over group blocks)
 # ---------------------------------------------------------------------------
@@ -168,6 +193,22 @@ def quantize_pack_2d(g, rand, gmin, gmax, *, bits: int,
         ],
         interpret=interpret,
     )(gmin, gmax, g, rand)
+
+
+@functools.partial(jax.jit, static_argnames=('interpret',))
+def fold_words_2d(words, *, interpret: bool = False):
+    """words: (K, W) uint32 with W a BLOCK_FOLD_WORDS multiple
+    -> (K, 1) per-client xor-fold."""
+    k, w_n = words.shape
+    assert w_n % BLOCK_FOLD_WORDS == 0, w_n
+    return pl.pallas_call(
+        fold_words_kernel,
+        grid=(w_n // BLOCK_FOLD_WORDS,),
+        in_specs=[pl.BlockSpec((k, BLOCK_FOLD_WORDS), lambda j: (0, j))],
+        out_specs=pl.BlockSpec((k, 1), lambda j: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((k, 1), jnp.uint32),
+        interpret=interpret,
+    )(words)
 
 
 @functools.partial(jax.jit, static_argnames=('bits', 'interpret'))

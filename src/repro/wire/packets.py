@@ -56,27 +56,50 @@ def encode_client_uplink(sign: Array, qidx: Array, g_min, g_max,
     return sign_words, mod_words
 
 
+def verify_sign_words(sign_words: Array, *, n: int) -> Array:
+    """PS-side acceptance of a (possibly bit-flipped) sign packet: magic,
+    coordinate count, and the xor-fold CRC.  Batched over leading axes."""
+    return ((sign_words[..., 0] == fmt.SIGN_MAGIC)
+            & (sign_words[..., 3] == jnp.uint32(n))
+            & fmt.verify_frame(sign_words))
+
+
+def verify_mod_words(mod_words: Array, *, n: int, bits: int) -> Array:
+    """PS-side acceptance of a modulus packet (magic, n, bit width, CRC)."""
+    return ((mod_words[..., 0] == fmt.MOD_MAGIC)
+            & (mod_words[..., 3] == jnp.uint32(n))
+            & (mod_words[..., 4] == jnp.uint32(bits))
+            & fmt.verify_frame(mod_words))
+
+
+def restamp_sign_retx(sign_words: Array, attempt) -> Array:
+    """Re-encode a sign packet for retransmission attempt ``attempt``:
+    byte-identical payload, fresh [attempt | round] header stamp, CRC
+    patched to match.  Batched over leading axes."""
+    old = sign_words[..., 2]
+    return fmt.restamp_word(sign_words, 2,
+                            fmt.stamp_round(fmt.round_of(old), attempt))
+
+
 def decode_client_uplink(sign_words: Array, mod_words: Array, *, n: int,
                          bits: int) -> DecodedUplink:
     """Parse + verify both packets.  Payloads are decoded unconditionally
     (shapes are static); the *_ok flags say whether they can be trusted."""
     sh = sign_words[:fmt.SIGN_HEADER_WORDS]
     sp = sign_words[fmt.SIGN_HEADER_WORDS:-1]
-    sign_ok = ((sh[0] == fmt.SIGN_MAGIC) & (sh[3] == jnp.uint32(n))
-               & (fmt.xor_fold(sign_words[:-1]) == sign_words[-1]))
+    sign_ok = verify_sign_words(sign_words, n=n)
     sign = fmt.bits_to_sign(fmt.unpack_bits_ref(sp, n, 1))
 
     mh = mod_words[:fmt.MOD_HEADER_WORDS]
     mp = mod_words[fmt.MOD_HEADER_WORDS:-1]
-    mod_ok = ((mh[0] == fmt.MOD_MAGIC) & (mh[3] == jnp.uint32(n))
-              & (mh[4] == jnp.uint32(bits))
-              & (fmt.xor_fold(mod_words[:-1]) == mod_words[-1]))
+    mod_ok = verify_mod_words(mod_words, n=n, bits=bits)
     qidx = fmt.unpack_bits_ref(mp, n, bits).astype(jnp.int32)
 
     return DecodedUplink(
         sign=sign, qidx=qidx,
         g_min=fmt.word_to_f32(mh[5]), g_max=fmt.word_to_f32(mh[6]),
-        client_id=sh[1], round_idx=sh[2], sign_ok=sign_ok, mod_ok=mod_ok)
+        client_id=sh[1], round_idx=fmt.round_of(sh[2]),
+        sign_ok=sign_ok, mod_ok=mod_ok)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,387 @@
+"""Bit-level channel: BER calibration, CRC-driven erasures over flipped
+buffers, and materialized sign retransmission (ISSUE 2 acceptance)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import FLConfig
+from repro.core import bitchannel as BC
+from repro.core import channel as CH
+from repro.core import transport as TR
+from repro.wire import corrupt as WC
+from repro.wire import format as fmt
+from repro.wire import packets
+
+FL = FLConfig()
+
+
+def _grads(k, l, seed=0):
+    g = jax.random.normal(jax.random.PRNGKey(seed), (k, l)) * 0.02
+    return jnp.where(g == 0, 1e-4, g)
+
+
+def _encode(k, l, bits=3, seed=0, round_idx=0):
+    rng = np.random.RandomState(seed)
+    sign = jnp.asarray(rng.choice([-1, 1], (k, l)), jnp.int8)
+    qidx = jnp.asarray(rng.randint(0, 2 ** bits, (k, l)), jnp.int32)
+    g_min = jnp.full((k,), 0.125)
+    g_max = jnp.full((k,), 0.875)
+    return packets.encode_uplink_batch(sign, qidx, g_min, g_max, bits=bits,
+                                       round_idx=round_idx)
+
+
+# ---------------------------------------------------------------------------
+# calibration: ber_for_success inverts the fold-pass closed form
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize('n_words', [21, 99, 513])
+def test_ber_calibration_inverts_fold_pass(n_words):
+    for prob in (0.999, 0.95, 0.7, 0.5, 0.2, 0.05, 1e-3):
+        ber = float(BC.ber_for_success(prob, n_words))
+        assert 0.0 <= ber <= 0.5
+        back = float(BC.fold_pass_prob(ber, n_words))
+        assert abs(back - prob) < 2e-3, (prob, ber, back)
+
+
+def test_ber_calibration_edges():
+    assert float(BC.ber_for_success(1.0, 99)) == 0.0
+    # prob below the 2^-32 fold floor saturates: pass prob ~ 2^-32 ~ 0
+    ber0 = float(BC.ber_for_success(0.0, 99))
+    assert 0.0 < ber0 <= 0.5
+    assert float(BC.fold_pass_prob(ber0, 99)) < 1e-6
+    # monotone: better channel -> fewer flips
+    bers = [float(BC.ber_for_success(pr, 99))
+            for pr in (0.1, 0.5, 0.9, 0.99)]
+    assert bers == sorted(bers, reverse=True)
+
+
+def test_ber_calibration_stable_at_model_scale():
+    """f32 must not underflow to ber = 0 for large packets on good
+    channels (l ~ 1e6 coords -> ~31k sign words at q ~ 1): a lossless
+    bit channel would silently break the 1/q_eff unbiasing."""
+    for n_words, prob in ((31_250, 0.99), (31_250, 0.999), (250_000, 0.99)):
+        ber = float(BC.ber_for_success(prob, n_words))
+        assert ber > 0.0, (n_words, prob)
+        back = float(BC.fold_pass_prob(ber, n_words))
+        assert abs(back - prob) < 2e-3, (n_words, prob, ber, back)
+
+
+def test_corrupt_words_mask_statistics():
+    key = jax.random.PRNGKey(0)
+    words = jnp.asarray(
+        np.random.RandomState(0).randint(0, 2 ** 32, (4, 64), np.int64),
+        jnp.uint32)
+    clean, mask0 = WC.corrupt_words(key, words, jnp.zeros(4))
+    assert jnp.array_equal(clean, words)
+    assert int(jnp.sum(WC.count_flips(mask0))) == 0
+    flipped, mask1 = WC.corrupt_words(key, words, jnp.ones(4))
+    assert jnp.array_equal(flipped, ~words)
+    assert jnp.array_equal(WC.count_flips(mask1), jnp.full(4, 64 * 32))
+    # interior rate: mean flips tracks ber * bits (loose 5-sigma band)
+    _, mask = WC.corrupt_words(key, jnp.zeros((64, 64), jnp.uint32),
+                               jnp.full(64, 0.1))
+    n_bits = 64 * 32
+    got = float(jnp.mean(WC.count_flips(mask)))
+    sd = np.sqrt(0.1 * 0.9 * n_bits)
+    assert abs(got - 0.1 * n_bits) < 5 * sd / np.sqrt(64)
+
+
+# ---------------------------------------------------------------------------
+# the mechanism: verification of flipped buffers drives erasures
+# ---------------------------------------------------------------------------
+
+def test_clean_channel_is_lossless():
+    sw, mw = _encode(4, 500)
+    rep = BC.transmit_uplink(jax.random.PRNGKey(1), sw, mw,
+                             jnp.ones(4), jnp.ones(4), n=500, bits=3)
+    assert jnp.array_equal(rep.sign_words, sw)
+    assert jnp.array_equal(rep.mod_words, mw)
+    assert bool(jnp.all(rep.sign_ok)) and bool(jnp.all(rep.mod_ok))
+    assert int(jnp.sum(rep.sign_flips + rep.mod_flips)) == 0
+
+
+def test_hopeless_channel_erases_everything():
+    sw, mw = _encode(4, 500)
+    rep = BC.transmit_uplink(jax.random.PRNGKey(2), sw, mw,
+                             jnp.zeros(4), jnp.zeros(4), n=500, bits=3)
+    assert not bool(jnp.any(rep.sign_ok))
+    assert not bool(jnp.any(rep.mod_ok))
+    assert int(jnp.min(rep.sign_flips)) > 0
+
+
+def test_single_flip_is_always_detected_batch():
+    """A 1-bit flip changes exactly one fold column parity -> erasure."""
+    sw, mw = _encode(3, 321)
+    for widx, bit in ((0, 0), (7, 13), (-1, 31)):
+        bad = sw.at[:, widx].set(sw[:, widx] ^ jnp.uint32(1 << bit))
+        assert not bool(jnp.any(packets.verify_sign_words(bad, n=321)))
+
+
+def test_even_parity_flips_are_the_checksum_miss():
+    """Two flips in the same bit column cancel in the fold: the packet
+    passes and the corrupted payload is used — the miss rate any 32-bit
+    checksum has, and why the calibration targets *detected* erasures."""
+    sw, _ = _encode(1, 500)
+    sw = sw[0]
+    bad = (sw.at[5].set(sw[5] ^ jnp.uint32(1 << 3))
+             .at[6].set(sw[6] ^ jnp.uint32(1 << 3)))
+    assert bool(packets.verify_sign_words(bad, n=500))
+    assert not bool(packets.verify_sign_words(
+        sw.at[5].set(sw[5] ^ jnp.uint32(1 << 3)), n=500))
+
+
+# ---------------------------------------------------------------------------
+# satellite: empirical CRC erasure rates match the analytic (q, p) of
+# eq. (11)/(13) at >= 3 SNR operating points (CLT tolerance; mirrors
+# tests/test_channel.py::test_empirical_matches_analytic)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize('tx_power_dbm', [-65.0, -62.0, -58.0])
+def test_erasure_rate_matches_analytic_channel(tx_power_dbm):
+    k, l, bits = 8, 512, 3
+    fl = dataclasses.replace(FL, tx_power_dbm=tx_power_dbm)
+    dist = CH.sample_distances(jax.random.PRNGKey(0), k, 500.0)
+    gains = CH.path_gain(np.asarray(dist), fl.path_loss_exp)
+    p_w = np.full(k, fl.tx_power_w)
+    alpha = np.full(k, 0.6)
+    beta = np.full(k, 1.0 / k)
+    q, p = CH.success_probs(alpha, beta, p_w, gains, l, fl)
+    q, p = jnp.asarray(q, jnp.float32), jnp.asarray(p, jnp.float32)
+
+    sw, mw = _encode(k, l, bits=bits)
+    trial = jax.jit(lambda kk: BC.transmit_uplink(
+        kk, sw, mw, q, p, n=l, bits=bits)[2:4])   # (sign_ok, mod_ok)
+    oks = [jax.vmap(trial)(ck)
+           for ck in jnp.split(jax.random.split(jax.random.PRNGKey(3),
+                                                1500), 5)]
+    emp_q = np.mean(np.concatenate([np.asarray(o[0]) for o in oks]), axis=0)
+    emp_p = np.mean(np.concatenate([np.asarray(o[1]) for o in oks]), axis=0)
+    assert np.max(np.abs(emp_q - np.asarray(q))) < 0.05, (emp_q, q)
+    assert np.max(np.abs(emp_p - np.asarray(p))) < 0.05, (emp_p, p)
+
+
+def test_tree_erasure_rate_matches_analytic():
+    """The leaf-scattered fold accumulation of the tree path is the same
+    verification: marginal erasure rates match (q, p) there too."""
+    k = 8
+    grads = _grads(k, 160, seed=4)
+    tree = {'a': grads[:, :64], 'b': grads[:, 64:]}
+    gbar = jnp.abs(_grads(1, 160, seed=5)[0])
+    gbar_tree = {'a': gbar[:64], 'b': gbar[64:]}
+    q = jnp.linspace(0.3, 0.9, k)
+    p = jnp.linspace(0.25, 0.85, k)
+    agg = jax.jit(lambda kk: TR.spfl_aggregate_tree(
+        tree, gbar_tree, q, p, FL, kk, wire='packed',
+        channel='bitlevel')[2][:2])
+    keys = jax.random.split(jax.random.PRNGKey(6), 600)
+    sign_ok, mod_ok = jax.vmap(agg)(keys)
+    emp_q = np.mean(np.asarray(sign_ok), axis=0)
+    emp_p = np.mean(np.asarray(mod_ok), axis=0)
+    assert np.max(np.abs(emp_q - np.asarray(q))) < 0.07, (emp_q, q)
+    assert np.max(np.abs(emp_p - np.asarray(p))) < 0.07, (emp_p, p)
+
+
+# ---------------------------------------------------------------------------
+# satellite: materialized sign retransmission
+# ---------------------------------------------------------------------------
+
+def test_retx_restamp_is_same_payload_fresh_stamp():
+    sw, mw = _encode(1, 777, seed=1, round_idx=5)
+    sw = sw[0]
+    r = packets.restamp_sign_retx(sw, 1)
+    h = fmt.SIGN_HEADER_WORDS
+    # byte-identical payload, untouched magic/id/n
+    assert jnp.array_equal(r[h:-1], sw[h:-1])
+    assert int(r[0]) == int(sw[0]) and int(r[1]) == int(sw[1])
+    assert int(r[3]) == int(sw[3])
+    # fresh stamp: attempt byte set, round preserved, CRC re-patched
+    assert int(r[2]) != int(sw[2])
+    assert int(fmt.attempt_of(r[2])) == 1
+    assert int(fmt.round_of(r[2])) == 5
+    assert int(r[-1]) != int(sw[-1])
+    assert bool(packets.verify_sign_words(r, n=777))
+    # the PS decodes the resent packet to the identical payload
+    dec = packets.decode_client_uplink(r, mw[0], n=777, bits=3)
+    orig = packets.decode_client_uplink(sw, mw[0], n=777, bits=3)
+    assert jnp.array_equal(dec.sign, orig.sign)
+    assert int(dec.round_idx) == 5
+
+
+def test_retx_mechanism_counts_and_measured_bits():
+    """Deterministic mechanism check: client 0's sign packet fails CRC
+    (q ~ 0 -> ~48 expected flips), resends exactly once, and the resend's
+    *measured* size lands in payload_bits; client 1 (q = 1) never
+    retransmits."""
+    l = 777
+    grads = _grads(2, l, seed=7)
+    gbar = jnp.abs(_grads(1, l, seed=8)[0])
+    q = jnp.asarray([1e-9, 1.0])
+    p = jnp.ones(2)
+    _, d = TR.spfl_aggregate(grads, gbar, q, p, 3, 64,
+                             jax.random.PRNGKey(9), n_retx=1,
+                             wire='packed', channel='bitlevel')
+    np.testing.assert_array_equal(np.asarray(d.retx_attempts), [1, 0])
+    assert float(d.retransmissions) == 1.0
+    base = fmt.measured_uplink_bits(l, 3, 2)
+    assert float(d.payload_bits) == base + (fmt.sign_packet_words(l)
+                                            * fmt.WORD_BITS)
+    assert not bool(d.sign_ok[0]) and bool(d.sign_ok[1])
+    assert not bool(d.sign_crc_ok[0]) and bool(d.sign_crc_ok[1])
+    assert int(d.sign_flips[1]) == 0 and int(d.sign_flips[0]) > 0
+
+
+def test_retx_rescues_clients_and_their_contribution():
+    k, l = 48, 320
+    grads = _grads(k, l, seed=10)
+    gbar = jnp.abs(_grads(1, l, seed=11)[0])
+    q = jnp.full((k,), 0.5)
+    p = jnp.ones(k)
+    key = jax.random.PRNGKey(12)
+    _, d = TR.spfl_aggregate(grads, gbar, q, p, 3, 64, key, n_retx=1,
+                             wire='packed', channel='bitlevel')
+    rescued = np.asarray(d.sign_ok & ~d.sign_crc_ok)
+    assert rescued.any()                      # some first-fail, retx-ok
+    # every rescued client performed exactly one resend and is accepted
+    att = np.asarray(d.retx_attempts)
+    assert (att[rescued] == 1).all()
+    assert np.asarray(d.accepted)[rescued].all()
+    # resends counted at their measured size
+    base = fmt.measured_uplink_bits(l, 3, k)
+    expect = base + att.sum() * fmt.sign_packet_words(l) * fmt.WORD_BITS
+    assert float(d.payload_bits) == expect
+
+
+def test_tree_retx_resends_pristine_payload(monkeypatch):
+    """A rescued client's accepted payload must be the re-encoded
+    *original* words, not the first attempt's corrupted receive.  Masks
+    are scripted: the first sign transmission flips one bit of client 0
+    (CRC fails), the retransmission is clean — the aggregate must then
+    be bit-identical to an entirely clean channel."""
+    from repro.wire import corrupt as WC_mod
+    k = 4
+    grads = _grads(k, 96, seed=30)
+    tree = {'a': grads}
+    gbar_tree = {'a': jnp.abs(_grads(1, 96, seed=31)[0])}
+    q = jnp.full((k,), 0.6)
+    p = jnp.ones(k)
+    key = jax.random.PRNGKey(32)
+
+    calls = {'n': 0}
+
+    def fake_corrupt(kk, words, ber):
+        calls['n'] += 1
+        mask = jnp.zeros_like(words)
+        if calls['n'] == 2:      # the first sign transmission's leaf
+            mask = mask.at[0, 0].set(jnp.uint32(1 << 7))
+        return words ^ mask, mask
+
+    monkeypatch.setattr(WC_mod, 'corrupt_words', fake_corrupt)
+    monkeypatch.setattr(WC_mod, 'flip_mask',
+                        lambda kk, shape, ber: jnp.zeros(shape, jnp.uint32))
+    run = lambda: TR.spfl_aggregate_tree(tree, gbar_tree, q, p, FL, key,
+                                         n_retx=1, wire='packed',
+                                         channel='bitlevel')
+    ghat, _, d = run()
+    assert not bool(d.sign_crc_ok[0]) and bool(d.sign_ok[0])   # rescued
+    assert int(d.retx_attempts[0]) == 1
+    assert bool(jnp.all(d.sign_ok))
+
+    calls['n'] = 100                      # all masks zero: clean channel
+    ghat_clean, _, d2 = run()
+    assert int(jnp.sum(d2.retx_attempts)) == 0
+    for a, b in zip(jax.tree.leaves(ghat), jax.tree.leaves(ghat_clean)):
+        assert jnp.array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# transport integration
+# ---------------------------------------------------------------------------
+
+def test_bitlevel_requires_packed_wire():
+    grads = _grads(4, 100)
+    with pytest.raises(ValueError):
+        TR.spfl_aggregate(grads, jnp.abs(grads[0]), jnp.ones(4),
+                          jnp.ones(4), 3, 64, jax.random.PRNGKey(0),
+                          channel='bitlevel')
+    with pytest.raises(ValueError):
+        TR.spfl_aggregate_tree({'a': grads}, {'a': jnp.abs(grads[0])},
+                               jnp.ones(4), jnp.ones(4), FL,
+                               jax.random.PRNGKey(0), channel='bitlevel')
+
+
+def test_bitlevel_perfect_channel_bit_exact_with_bernoulli():
+    """At q = p = 1 no bits flip, so bitlevel == packed bernoulli
+    bit-for-bit (same quantizer keys, all packets accepted)."""
+    k, l = 6, 3000
+    grads = _grads(k, l, seed=13)
+    gbar = jnp.abs(_grads(1, l, seed=14)[0])
+    ones = jnp.ones(k)
+    key = jax.random.PRNGKey(15)
+    ga, _ = TR.spfl_aggregate(grads, gbar, ones, ones, 3, 64, key,
+                              wire='packed')
+    gb, db = TR.spfl_aggregate(grads, gbar, ones, ones, 3, 64, key,
+                               wire='packed', channel='bitlevel')
+    assert jnp.array_equal(ga, gb)
+    assert float(db.payload_bits) == fmt.measured_uplink_bits(l, 3, k)
+    tree = {'a': grads[:, :1000], 'b': grads[:, 1000:]}
+    gbar_tree = {'a': gbar[:1000], 'b': gbar[1000:]}
+    ta, _, _ = TR.spfl_aggregate_tree(tree, gbar_tree, ones, ones, FL,
+                                      key, wire='packed')
+    tb, _, _ = TR.spfl_aggregate_tree(tree, gbar_tree, ones, ones, FL,
+                                      key, wire='packed',
+                                      channel='bitlevel')
+    for xa, xb in zip(jax.tree.leaves(ta), jax.tree.leaves(tb)):
+        assert jnp.array_equal(xa, xb)
+
+
+def test_bitlevel_erased_mod_uses_compensation():
+    """mod CRC failure -> compensated modulus, exactly like the analytic
+    model (accepted sign, gbar modulus)."""
+    k, l = 6, 1200
+    grads = _grads(k, l, seed=16)
+    gbar = jnp.abs(_grads(1, l, seed=17)[0])
+    ghat, d = TR.spfl_aggregate(grads, gbar, jnp.ones(k), jnp.zeros(k),
+                                3, 64, jax.random.PRNGKey(18),
+                                wire='packed', channel='bitlevel')
+    assert bool(jnp.all(d.sign_ok)) and not bool(jnp.any(d.mod_ok))
+    expect = jnp.mean(jnp.sign(grads) * gbar, axis=0)
+    np.testing.assert_allclose(np.asarray(ghat), np.asarray(expect),
+                               atol=1e-6)
+
+
+def test_diagnostics_crc_state_only_on_bitlevel():
+    k, l = 4, 500
+    grads = _grads(k, l, seed=19)
+    gbar = jnp.abs(_grads(1, l, seed=20)[0])
+    q = p = jnp.full((k,), 0.8)
+    _, da = TR.spfl_aggregate(grads, gbar, q, p, 3, 64,
+                              jax.random.PRNGKey(21))
+    assert da.sign_flips is None and da.retx_attempts is None
+    _, db = TR.spfl_aggregate(grads, gbar, q, p, 3, 64,
+                              jax.random.PRNGKey(21), wire='packed',
+                              channel='bitlevel')
+    for f in (db.sign_flips, db.mod_flips, db.sign_crc_ok, db.mod_crc_ok,
+              db.retx_attempts):
+        assert f is not None and f.shape == (k,)
+    assert jnp.array_equal(db.sign_crc_ok, db.sign_ok)   # n_retx = 0
+
+
+def test_fl_config_channel_is_plumbed():
+    """FLConfig.channel='bitlevel' reaches the transport through the FL
+    loop's transport dispatcher arguments (spfl path)."""
+    fl = dataclasses.replace(FL, wire='packed', channel='bitlevel',
+                             n_devices=4)
+    grads = _grads(4, 600, seed=22)
+    gbar = jnp.abs(_grads(1, 600, seed=23)[0])
+    q = p = jnp.full((4,), 0.7)
+    _, diag = TR.spfl_aggregate(grads, gbar, q, p, fl.quant_bits,
+                                fl.b0_bits, jax.random.PRNGKey(24),
+                                wire=fl.wire, channel=fl.channel)
+    assert diag.sign_flips is not None
+    tree = {'a': grads}
+    _, _, dt = TR.spfl_aggregate_tree(tree, {'a': gbar}, q, p, fl,
+                                      jax.random.PRNGKey(25))
+    assert dt.sign_flips is not None                     # fl defaults used

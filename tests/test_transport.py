@@ -62,6 +62,37 @@ def test_spfl_modulus_failure_uses_compensation(data):
     assert jnp.allclose(ghat, expect, atol=1e-6)
 
 
+def test_retx_accounting_counts_every_resend(data):
+    """`retransmissions` (and the payload bits it prices) must count the
+    actual resend attempts, not just whether any retx was configured —
+    the old `min(n_retx, 1)` undercounted every n_retx > 1 round."""
+    grads, gbar = data
+    sign_bits = L                                  # analytic sign packet
+    base = K * (L + L * 3 + 64)
+    for n_retx in (1, 2, 3):
+        _, diag = TR.spfl_aggregate(grads, gbar, jnp.zeros(K), jnp.ones(K),
+                                    3, 64, jax.random.PRNGKey(40),
+                                    n_retx=n_retx)
+        # q = 0: every client exhausts all n_retx resends
+        assert float(diag.retransmissions) == K * n_retx
+        np.testing.assert_array_equal(np.asarray(diag.retx_attempts),
+                                      np.full(K, n_retx))
+        assert float(diag.payload_bits) == base + K * n_retx * sign_bits
+    # q = 1: first attempt always lands -> zero resends
+    _, diag = TR.spfl_aggregate(grads, gbar, jnp.ones(K), jnp.ones(K),
+                                3, 64, jax.random.PRNGKey(41), n_retx=3)
+    assert float(diag.retransmissions) == 0.0
+    assert float(diag.payload_bits) == base
+    # tree path: same contract
+    tree = {'a': grads[:, :1000], 'b': grads[:, 1000:]}
+    gbar_tree = {'a': gbar[:1000], 'b': gbar[1000:]}
+    _, _, dt = TR.spfl_aggregate_tree(tree, gbar_tree, jnp.zeros(K),
+                                      jnp.ones(K), FL,
+                                      jax.random.PRNGKey(42), n_retx=2)
+    assert float(dt.retransmissions) == K * 2
+    assert float(dt.payload_bits) == base + K * 2 * sign_bits
+
+
 def test_retransmission_improves_sign_rate(data):
     grads, gbar = data
     q = jnp.full((K,), 0.5)

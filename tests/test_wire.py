@@ -6,6 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from _hypothesis_compat import given, settings, st
 
 from repro.configs.base import FLConfig
 from repro.core import transport as TR
@@ -53,6 +54,58 @@ def test_pack_batched_matches_per_row():
     w = fmt.pack_bits_ref(v, 3)
     for i in range(5):
         assert jnp.array_equal(w[i], fmt.pack_bits_ref(v[i], 3))
+
+
+# ---------------------------------------------------------------------------
+# property tests (hypothesis; skip via _hypothesis_compat when absent)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(n=st.integers(1, 300), bits=st.integers(1, 8),
+       k=st.integers(1, 3), seed=st.integers(0, 2 ** 31 - 1))
+def test_property_pack_unpack_roundtrip(n, bits, k, seed):
+    """Round-trip exactness over random shapes, bit widths 1..8, and
+    non-word-aligned lengths (leading batch axis included)."""
+    rng = np.random.RandomState(seed)
+    v = jnp.asarray(rng.randint(0, 2 ** bits, (k, n)), jnp.uint32)
+    w = fmt.pack_bits_ref(v, bits)
+    assert w.shape == (k, fmt.payload_words(n, bits))
+    assert jnp.array_equal(fmt.unpack_bits_ref(w, n, bits), v)
+
+
+@settings(max_examples=40, deadline=None)
+@given(n=st.integers(1, 300), seed=st.integers(0, 2 ** 31 - 1))
+def test_property_sign_bits_roundtrip(n, seed):
+    """sign -> wire bit -> sign is the identity on {-1, +1} (0 rides as
+    +1, the documented 1-bit-wire convention), through packing too."""
+    rng = np.random.RandomState(seed)
+    sign = jnp.asarray(rng.choice([-1, 0, 1], n), jnp.int8)
+    back = fmt.bits_to_sign(fmt.unpack_bits_ref(
+        fmt.pack_bits_ref(fmt.sign_to_bits(sign), 1), n, 1))
+    expect = jnp.where(sign == 0, jnp.int8(1), sign)
+    assert jnp.array_equal(back, expect)
+
+
+@settings(max_examples=60, deadline=None)
+@given(n=st.integers(1, 200), bits=st.integers(1, 8),
+       pos=st.integers(0, 2 ** 31 - 1), bit=st.integers(0, 31),
+       seed=st.integers(0, 2 ** 31 - 1))
+def test_property_xor_fold_detects_any_single_flip(n, bits, pos, bit, seed):
+    """Any 1-bit flip — payload, header, or the CRC word itself — changes
+    the fold, so verification must fail on both packet kinds."""
+    rng = np.random.RandomState(seed)
+    sign = jnp.asarray(rng.choice([-1, 1], n), jnp.int8)
+    qidx = jnp.asarray(rng.randint(0, 2 ** bits, n), jnp.int32)
+    sw, mw = packets.encode_client_uplink(sign, qidx, 0.25, 0.75, 1,
+                                          bits=bits, round_idx=9)
+    for words, verify in (
+            (sw, lambda b: packets.verify_sign_words(b, n=n)),
+            (mw, lambda b: packets.verify_mod_words(b, n=n, bits=bits))):
+        idx = pos % words.shape[0]
+        bad = words.at[idx].set(words[idx] ^ jnp.uint32(1 << bit))
+        assert int(fmt.xor_fold(bad)) != int(fmt.xor_fold(words))
+        assert not bool(verify(bad))
+        assert bool(verify(words))
 
 
 # ---------------------------------------------------------------------------
@@ -233,6 +286,26 @@ def test_pallas_fused_unpack_dequant_matches_ref(mod_ok):
     # weak f64 — one ULP on the knob step
     np.testing.assert_allclose(np.asarray(out), np.asarray(out_r),
                                atol=1e-6)
+
+
+@pytest.mark.parametrize('k,w', [(1, 512), (3, 100), (5, 1537)])
+def test_pallas_fold_words_matches_ref(k, w):
+    """The on-chip CRC reduction equals the jnp xor_fold — including on
+    non-block-aligned widths (zero padding is the xor identity)."""
+    rng = np.random.RandomState(k * 1000 + w)
+    words = jnp.asarray(rng.randint(0, 2 ** 32, (k, w), np.int64),
+                        jnp.uint32)
+    got = ops.fold_words(words, interpret=True)
+    assert jnp.array_equal(got, fmt.xor_fold(words))
+    # and it verifies real framed packets: fold of all words incl. the
+    # CRC is zero exactly when the frame is intact
+    sign = jnp.asarray(rng.choice([-1, 1], (k, 200)), jnp.int8)
+    qidx = jnp.asarray(rng.randint(0, 8, (k, 200)), jnp.int32)
+    sw, _ = packets.encode_uplink_batch(
+        sign, qidx, jnp.zeros(k), jnp.ones(k), bits=3)
+    assert not jnp.any(ops.fold_words(sw, interpret=True))
+    bad = sw.at[:, 2].set(sw[:, 2] ^ jnp.uint32(4))
+    assert jnp.all(ops.fold_words(bad, interpret=True))
 
 
 def test_packed_buffers_shrink_vs_int_arrays():
