@@ -1,4 +1,5 @@
-"""Materialized wire format: bytes-on-wire and pack/unpack throughput.
+"""Materialized wire format: bytes-on-wire, pack/unpack throughput, and
+the packed-domain (decode-once) collective.
 
 The acceptance numbers for the wire subsystem:
 
@@ -6,11 +7,19 @@ The acceptance numbers for the wire subsystem:
   ``payload_bits`` formula (l + l*b + b0 per client);
 * packed device buffers >= 8x (sign, int8 -> 1 bit) and >= 10x (modulus,
   int32 -> b=3 bits) smaller than the arrays they replace;
+* the decode-once collective (ISSUE 3): the cross-client reduce consumes
+  the packed (K, W) word buffers directly — vs the seed path, which
+  unpacked per client and reduced a (K, l) float tensor, it moves >= 8x
+  fewer bytes than even the bf16 reduce (bf16 contributions + the f32
+  signed intermediate that produces them) and needs ONE kernel launch
+  instead of K unpack passes;
 * pack/unpack wall-times for the jnp reference and the Pallas kernels
   (interpret mode on CPU — TPU wall-times require hardware, but the HBM
   byte accounting is machine-independent).
 
-Rows: name,us_per_call,derived (see common.py).
+Rows: name,us_per_call,derived (see common.py).  BENCH_SMOKE=1 shrinks
+dims for the CI kernel-shape smoke (byte accounting still asserted;
+wall-time claims are not).
 """
 from __future__ import annotations
 
@@ -20,12 +29,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from common import emit
+from common import SMOKE, emit
 
 from repro.configs.base import FLConfig
 from repro.core import transport as TR
 from repro.core.quantize import packet_bits
-from repro.kernels import ops
+from repro.kernels import ops, ref
 from repro.wire import format as fmt
 
 
@@ -42,7 +51,7 @@ def _time(fn, *args, reps=5):
 def main() -> None:
     fl = FLConfig()
     bits = fl.quant_bits
-    l = 1 << 20
+    l = 1 << 17 if SMOKE else 1 << 20
     k = 8
     key = jax.random.PRNGKey(0)
 
@@ -96,10 +105,59 @@ def main() -> None:
         s_, q_, gbar, gmin, gmax, 1.0, 1.0, l, bits), sw2, qw2)
     emit('wire_unpack_dequant_fused', 1e6 * t, f'{l / t / 1e9:.2f} Gelem/s')
 
+    # --------------------- decode-once collective: bytes moved + speed
+    kl = 1 << 13 if SMOKE else 1 << 16
+    ws = fmt.sign_packet_words(kl)
+    wm = fmt.modulus_packet_words(kl, bits)
+    packed_b = k * (ws + wm) * 4                   # the (K, W) word buffers
+    f32_b = k * kl * 4                             # (K, l) signed f32 reduce
+    bf16_b = k * kl * 2 + f32_b                    # bf16 contribs + the f32
+    #   signed intermediate the seed per-client decode materializes first
+    emit('wire_collective_bytes_packed', 0.0, f'{packed_b} B (K={k} l={kl})')
+    emit('wire_collective_vs_f32_reduce', 0.0,
+         f'{f32_b / packed_b:.2f}x fewer bytes than the (K, l) f32 reduce')
+    emit('wire_collective_vs_bf16_reduce', 0.0,
+         f'{bf16_b / packed_b:.2f}x fewer bytes than the bf16 reduce path '
+         f'(bf16 contribs {k * kl * 2} B + f32 intermediate {f32_b} B)')
+    emit('wire_collective_vs_bf16_payload_only', 0.0,
+         f'{(k * kl * 2) / packed_b:.2f}x vs bf16 words alone')
+    assert bf16_b / packed_b >= 8.0, (bf16_b, packed_b)
+
+    rngk = np.random.RandomState(1)
+    sk = jnp.asarray(rngk.choice([-1, 1], (k, kl)), jnp.int8)
+    qk_i = jnp.asarray(rngk.randint(0, 2 ** bits, (k, kl)), jnp.int32)
+    swk = fmt.pack_bits_ref(fmt.sign_to_bits(sk), 1)
+    qwk = fmt.pack_bits_ref(qk_i, bits)
+    gmin_k = jnp.full((k,), 1e-4)
+    gmax_k = jnp.full((k,), 2e-2)
+    w_k = jnp.asarray(rngk.uniform(0.8, 1.4, k), jnp.float32)
+    ok_k = jnp.ones((k,))
+    gbar_k = jnp.abs(jax.random.normal(jax.random.fold_in(key, 5), (kl,)))
+
+    once = jax.jit(lambda s_, q_: ops.spfl_aggregate_packed(
+        s_, q_, gbar_k, gmin_k, gmax_k, ok_k, w_k, ok_k, kl, bits)[0])
+    t_once = _time(once, swk, qwk)
+    emit('wire_decode_once_live', 1e6 * t_once,
+         f'{k * kl / t_once / 1e9:.2f} Gelem/s (dispatched path: kernel '
+         f'on TPU, jnp twin on {jax.default_backend()})')
+
+    kern = jax.jit(lambda s_, q_: ops.spfl_aggregate_packed(
+        s_, q_, gbar_k, gmin_k, gmax_k, ok_k, w_k, ok_k, kl, bits,
+        use_kernel=True)[0])
+    t_kern = _time(kern, swk, qwk)
+    emit('wire_decode_once_kernel', 1e6 * t_kern,
+         f'{k * kl / t_kern / 1e9:.2f} Gelem/s (1 launch, K={k}; '
+         f'interpret-mode wall-time is validation-only off-TPU)')
+
+    per_client = jax.jit(lambda s_, q_: ref.spfl_packed_aggregate_ref(
+        s_, q_, gbar_k, gmin_k, gmax_k, ok_k, w_k, ok_k, kl, bits)[0])
+    t_ref = _time(per_client, swk, qwk)
+    emit('wire_decode_per_client_ref', 1e6 * t_ref,
+         f'{t_ref / t_once:.2f}x the live decode-once pass '
+         f'(seed: K unpack passes + (K, l) float intermediate)')
+
     # --------------------------------- end-to-end transport, both wires
-    kl = 1 << 16
     grads = jax.random.normal(jax.random.fold_in(key, 3), (k, kl)) * 0.01
-    gbar_k = jnp.abs(jax.random.normal(jax.random.fold_in(key, 4), (kl,)))
     q = jnp.full((k,), 0.9)
     p = jnp.full((k,), 0.6)
     for wire in ('analytic', 'packed'):

@@ -23,11 +23,18 @@ from repro.configs.base import FLConfig  # noqa: E402
 from repro.training.fl_loop import build_simulator  # noqa: E402
 
 FULL = os.environ.get('BENCH_FULL', '0') == '1'
+# BENCH_SMOKE=1: tiny dims / few trials for the CI kernel-shape smoke —
+# wall-times are meaningless there, so suites skip perf assertions
+SMOKE = os.environ.get('BENCH_SMOKE', '0') == '1'
 ROUNDS = int(os.environ.get('BENCH_ROUNDS', '150' if FULL else '24'))
 DEVICES = int(os.environ.get('BENCH_DEVICES', '20' if FULL else '8'))
 PER_DEVICE = int(os.environ.get('BENCH_PER_DEVICE',
                                 '2000' if FULL else '80'))
 N_TEST = int(os.environ.get('BENCH_TEST', '4000' if FULL else '400'))
+
+# rows of the suite currently running, for benchmarks/run.py --json
+# (emit() appends; run.py clears between suites and writes BENCH_<tag>.json)
+ROWS: list = []
 
 
 def run_fl(name: str, rounds: int = None, compute_bound: bool = False,
@@ -47,6 +54,8 @@ def run_fl(name: str, rounds: int = None, compute_bound: bool = False,
 
 
 def emit(name: str, us_per_call: float, derived):
+    ROWS.append({'name': name, 'us_per_call': round(float(us_per_call), 1),
+                 'derived': str(derived)})
     print(f'{name},{us_per_call:.1f},{derived}', flush=True)
 
 

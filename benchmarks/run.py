@@ -4,11 +4,20 @@ Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.py).
 
   PYTHONPATH=src python -m benchmarks.run            # everything
   PYTHONPATH=src python -m benchmarks.run fig7 bound # substring filter
-Scale via BENCH_ROUNDS / BENCH_DEVICES / BENCH_PER_DEVICE / BENCH_FULL=1.
+  PYTHONPATH=src python -m benchmarks.run wire --json  # + BENCH_wire.json
+
+``--json`` writes one ``BENCH_<tag>.json`` per executed suite into the
+repo root — the tracked perf-trajectory baseline (rows + the environment
+they were measured in), so perf PRs diff numbers instead of prose.
+Scale via BENCH_ROUNDS / BENCH_DEVICES / BENCH_PER_DEVICE / BENCH_FULL=1;
+BENCH_SMOKE=1 shrinks dims/trials for the CI kernel-shape smoke (perf
+assertions are skipped there).
 """
 from __future__ import annotations
 
+import json
 import os
+import platform
 import sys
 import time
 import traceback
@@ -33,9 +42,35 @@ SUITES = [
     ('roofline', 'roofline'),                # deliverable (g)
 ]
 
+_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), '..'))
+
+
+def _write_json(tag: str, rows, elapsed_s: float) -> str:
+    import jax
+    import common
+    payload = {
+        'suite': tag,
+        'rows': rows,
+        'elapsed_s': round(elapsed_s, 1),
+        'env': {
+            'backend': jax.default_backend(),
+            'jax': jax.__version__,
+            'python': platform.python_version(),
+            'smoke': common.SMOKE,
+            'full': common.FULL,
+        },
+    }
+    path = os.path.join(_ROOT, f'BENCH_{tag}.json')
+    with open(path, 'w') as f:
+        json.dump(payload, f, indent=1)
+        f.write('\n')
+    return path
+
 
 def main() -> None:
+    json_mode = '--json' in sys.argv
     filters = [a for a in sys.argv[1:] if not a.startswith('-')]
+    import common
     print('name,us_per_call,derived')
     failures = 0
     for tag, module in SUITES:
@@ -43,9 +78,13 @@ def main() -> None:
             continue
         t0 = time.time()
         print(f'# --- {tag} ({module}) ---', flush=True)
+        common.ROWS.clear()
         try:
             mod = __import__(module)
             mod.main()
+            if json_mode and common.ROWS:
+                path = _write_json(tag, list(common.ROWS), time.time() - t0)
+                print(f'# wrote {os.path.relpath(path, _ROOT)}', flush=True)
         except Exception as e:
             failures += 1
             print(f'# {tag} FAILED: {e}', flush=True)

@@ -55,11 +55,26 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.wire import corrupt as wire_corrupt
+from repro.kernels import ops as kops
 from repro.wire import format as wire_fmt
 from repro.wire import packets as wire_packets
 
 Array = jax.Array
+
+
+def verify_sign_fold(sign_words: Array, *, n: int) -> Array:
+    """PS-side acceptance of (K, Ws) received sign buffers with the fold
+    computed by the Pallas CRC kernel (kernels.ops.fold_words): the same
+    predicate as ``wire.packets.verify_sign_words`` (whose header check
+    it shares), which stays as the jnp reference."""
+    return (wire_packets.sign_header_ok(sign_words, n=n)
+            & (kops.fold_words(sign_words) == 0))
+
+
+def verify_mod_fold(mod_words: Array, *, n: int, bits: int) -> Array:
+    """Kernel-fold acceptance of (K, Wm) received modulus buffers."""
+    return (wire_packets.mod_header_ok(mod_words, n=n, bits=bits)
+            & (kops.fold_words(mod_words) == 0))
 
 
 def fold_pass_prob(ber, n_words: int) -> Array:
@@ -125,24 +140,23 @@ def transmit_uplink(key, sign_words: Array, mod_words: Array, q: Array,
     ber_v = ber_for_success(p, wm)
     ks, kv = jax.random.split(key)
 
-    sw, s_mask = wire_corrupt.corrupt_words(ks, sign_words, ber_s)
-    mw, m_mask = wire_corrupt.corrupt_words(kv, mod_words, ber_v)
-    sign_ok = wire_packets.verify_sign_words(sw, n=n)
-    mod_ok = wire_packets.verify_mod_words(mw, n=n, bits=bits)
+    # fused corrupt+fold (one pass, no 32x random tensor) ...
+    sw, _, sign_flips = kops.corrupt_fold_words(ks, sign_words, ber_s)
+    mw, _, mod_flips = kops.corrupt_fold_words(kv, mod_words, ber_v)
+    # ... and the PS folds what it received through the CRC kernel
+    sign_ok = verify_sign_fold(sw, n=n)
+    mod_ok = verify_mod_fold(mw, n=n, bits=bits)
     sign_crc_ok = sign_ok
-    sign_flips = wire_corrupt.count_flips(s_mask)
-    mod_flips = wire_corrupt.count_flips(m_mask)
 
     retx_attempts = jnp.zeros(q.shape, jnp.int32)
     for attempt in range(1, n_retx + 1):
         failed = ~sign_ok
         resent = wire_packets.restamp_sign_retx(sign_words, attempt)
-        rx, mask = wire_corrupt.corrupt_words(
+        rx, _, flips = kops.corrupt_fold_words(
             jax.random.fold_in(ks, attempt), resent, ber_s)
-        ok = wire_packets.verify_sign_words(rx, n=n)
+        ok = verify_sign_fold(rx, n=n)
         sw = jnp.where((failed & ok)[..., None], rx, sw)
-        sign_flips = sign_flips + jnp.where(
-            failed, wire_corrupt.count_flips(mask), 0)
+        sign_flips = sign_flips + jnp.where(failed, flips, 0)
         retx_attempts = retx_attempts + failed.astype(jnp.int32)
         sign_ok = sign_ok | (failed & ok)
 

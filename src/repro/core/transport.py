@@ -28,12 +28,26 @@ model is sharded.
 
 Wire materialization (``wire='packed'``): ``spfl`` and ``error_free`` can
 route the quantized gradient through the real bit-packed packet layer
-(repro.wire) — encode to framed uint32 word buffers, decode on the PS
-side, aggregate from the decoded packets.  The aggregation math is
-identical (the decode is exact), and ``payload_bits`` becomes the
-*measured* size of the materialized buffers instead of the analytic
-formula.  ``wire='analytic'`` (default) keeps the original count-only
-path.
+(repro.wire) — encode to framed uint32 word buffers and aggregate
+straight from them.  The aggregation math is identical (the decode is
+exact), and ``payload_bits`` becomes the *measured* size of the
+materialized buffers instead of the analytic formula.
+``wire='analytic'`` (default) keeps the original count-only path.
+
+Decode-once hot path: the packed transports never unpack per client.
+The PS decodes only the O(K) header words (the b0 range side-channel)
+and hands the K stacked payload buffers to ONE fused kernel launch
+(``kernels.ops.spfl_aggregate_packed``) that unpacks, dequantizes,
+compensates, 1/q-weights and accumulates all K clients over a client
+grid — so the cross-client collective moves ~(1+b)-bit/coordinate words
+instead of f32/bf16 leaves and no (K, n) float intermediate exists.
+Decoded signs/knobs/votes are bit-exact vs the retained
+unpack-per-client reference (``kernels.ref.spfl_packed_aggregate_ref``);
+the f32 reconstruction agrees to within a couple of ulp — the backend
+contracts the kernel's fused mul+add chains into FMAs (fewer roundings,
+not reproducible op-by-op from uncompiled jnp), and the analytic paths
+accumulate clients in the same sequential order (``_seq_client_mean``)
+so that bounded FMA wobble is the *only* difference.
 
 Bit-level channel (``channel='bitlevel'``, packed wire only): decode
 stops being lossless — the buffers take calibrated per-bit flips
@@ -58,6 +72,7 @@ from repro.core.quantize import (
     QuantizedGradient, dequantize_modulus, packet_bits,
     quantization_error_bound, stochastic_quantize,
 )
+from repro.kernels import ops as kops
 from repro.wire import corrupt as wire_corrupt
 from repro.wire import format as wire_fmt
 from repro.wire import packets as wire_packets
@@ -84,6 +99,9 @@ class TransportDiagnostics(NamedTuple):
     sign_crc_ok: Optional[Array] = None   # (K,) first-attempt CRC verify
     mod_crc_ok: Optional[Array] = None    # (K,) modulus CRC verify
     retx_attempts: Optional[Array] = None  # (K,) per-client resend count
+    sign_votes: Optional[Array] = None    # (l,) int32 — +1 sign votes among
+    #   accepted clients, computed in the packed domain (flat packed wire
+    #   with K <= 32 only; the signSGD-style agreement telemetry)
 
 
 # ---------------------------------------------------------------------------
@@ -111,6 +129,26 @@ def _inverse_prob(accept: Array, q: Array) -> Array:
     """accept/q with the q->0 guard (accept ~ Bernoulli(q))."""
     safe = jnp.maximum(q, _Q_FLOOR)
     return jnp.where(q > _Q_FLOOR, accept.astype(jnp.float32) / safe, 0.0)
+
+
+def _seq_client_mean(vals: Array) -> Array:
+    """Mean over the leading client axis by *sequential* accumulation.
+
+    The decode-once kernel sums clients over a sequential grid dimension
+    (k = 0, 1, ..., K-1); f32 addition is order-sensitive, so the FLAT
+    analytic paths associate the same way to keep the packed-vs-analytic
+    difference down to the bounded FMA-contraction wobble (jnp.mean's
+    tree reduction adds its own last-ulp reordering on top).
+
+    Flat (paper-scale, unsharded) paths only: the tree transports keep
+    ``jnp.sum`` so GSPMD can lower the sharded client axis to ONE
+    cross-client all-reduce (see training/distributed.py) instead of a
+    serial chain of per-slice gathers."""
+    k = vals.shape[0]
+    acc = vals[0]
+    for i in range(1, k):
+        acc = acc + vals[i]
+    return acc / k
 
 
 # ---------------------------------------------------------------------------
@@ -149,7 +187,9 @@ def decode_wire(qg: QuantizedGradient, sign_words: Array, mod_words: Array
 
 def materialize_wire(qg: QuantizedGradient, round_idx: int = 0
                      ) -> Tuple[QuantizedGradient, int, Array]:
-    """Round-trip a (K, l) quantized gradient through the packed wire.
+    """Round-trip a (K, l) quantized gradient through the packed wire —
+    the retained unpack-per-client *reference* path (the live transports
+    decode once via ``kernels.ops.spfl_aggregate_packed`` instead).
 
     Encodes every client's sign/modulus packets into framed uint32 word
     buffers (repro.wire.packets), decodes them back on the "PS side", and
@@ -163,19 +203,6 @@ def materialize_wire(qg: QuantizedGradient, round_idx: int = 0
     sign_words, mod_words, measured = encode_wire(qg, round_idx)
     rec, dec = decode_wire(qg, sign_words, mod_words)
     return rec, measured, dec.sign_ok & dec.mod_ok
-
-
-def _wire_leaf_roundtrip(sign: Array, qidx: Array, bits: int
-                         ) -> Tuple[Array, Array, int]:
-    """Payload-word round-trip for one (K, d) tree leaf: pack both
-    payloads into wire words and decode them back (per-client framing is
-    accounted once per client in the tree aggregators)."""
-    sw = wire_fmt.pack_bits_ref(wire_fmt.sign_to_bits(sign), 1)
-    qw = wire_fmt.pack_bits_ref(qidx, bits)
-    d = sign.shape[-1]
-    sign_rec = wire_fmt.bits_to_sign(wire_fmt.unpack_bits_ref(sw, d, 1))
-    qidx_rec = wire_fmt.unpack_bits_ref(qw, d, bits).astype(jnp.int32)
-    return sign_rec, qidx_rec, sw.shape[-1] + qw.shape[-1]
 
 
 # ---------------------------------------------------------------------------
@@ -212,11 +239,13 @@ def spfl_aggregate(grads: Array, gbar: Array, q: Array, p: Array,
     q_eff = 1.0 - (1.0 - q) ** (n_retx + 1)      # sign retransmission(s)
 
     extras = {}
-    if channel == 'bitlevel':
+    sign_words = mod_words = None
+    if wire == 'packed':
         sign_words, mod_words, measured = encode_wire(qg, round_idx)
+    if channel == 'bitlevel':
         rep = bitchannel.transmit_uplink(ko, sign_words, mod_words, q, p,
                                          n=l, bits=bits, n_retx=n_retx)
-        qg, _dec = decode_wire(qg, rep.sign_words, rep.mod_words)
+        sign_words, mod_words = rep.sign_words, rep.mod_words
         sign_ok, mod_ok = rep.sign_ok, rep.mod_ok
         retx = jnp.sum(rep.retx_attempts).astype(jnp.float32)
         payload = float(measured) + rep.retx_bits
@@ -225,9 +254,8 @@ def spfl_aggregate(grads: Array, gbar: Array, q: Array, p: Array,
                       retx_attempts=rep.retx_attempts)
     else:
         if wire == 'packed':
-            qg, measured_bits, _crc_ok = materialize_wire(qg, round_idx)
             sign_bits = wire_fmt.WORD_BITS * wire_fmt.sign_packet_words(l)
-            payload_base = float(measured_bits)
+            payload_base = float(measured)
         else:
             sign_bits, mod_bits = packet_bits(l, bits, b0)
             payload_base = float(K * (sign_bits + mod_bits))
@@ -242,13 +270,27 @@ def spfl_aggregate(grads: Array, gbar: Array, q: Array, p: Array,
             extras = dict(retx_attempts=retx_k)
         payload = payload_base + retx * sign_bits
 
-    modulus = dequantize_modulus(qg)                       # (K, l)
-    gbar_k = jnp.broadcast_to(gbar, grads.shape) if gbar.ndim == 1 else gbar
-    modulus = jnp.where(mod_ok[:, None], modulus, gbar_k)
-    signed = qg.sign.astype(jnp.float32) * modulus
-
-    w = _inverse_prob(sign_ok, q_eff)[:, None]             # (K, 1)
-    ghat = jnp.mean(w * signed, axis=0)
+    w = _inverse_prob(sign_ok, q_eff)
+    if wire == 'packed':
+        # decode-once: O(K) header words, then ONE fused kernel pass over
+        # the K stacked payload buffers — no per-client unpack, no (K, l)
+        # float intermediate (kernels.ops.spfl_aggregate_packed)
+        g_min, g_max = wire_packets.mod_header_ranges(mod_words)
+        acc, votes = kops.spfl_aggregate_packed(
+            wire_packets.sign_payload(sign_words),
+            wire_packets.mod_payload(mod_words),
+            jnp.asarray(gbar, jnp.float32), g_min, g_max, mod_ok, w,
+            sign_ok, l, bits)
+        ghat = acc / K
+        if votes is not None:
+            extras['sign_votes'] = votes
+    else:
+        modulus = dequantize_modulus(qg)                   # (K, l)
+        gbar_k = (jnp.broadcast_to(gbar, grads.shape)
+                  if gbar.ndim == 1 else gbar)
+        modulus = jnp.where(mod_ok[:, None], modulus, gbar_k)
+        signed = qg.sign.astype(jnp.float32) * modulus
+        ghat = _seq_client_mean(w[:, None] * signed)
 
     return ghat, TransportDiagnostics(sign_ok, mod_ok, sign_ok,
                                       jnp.asarray(payload, jnp.float32),
@@ -327,16 +369,28 @@ def error_free_aggregate(grads: Array, fl: FLConfig, key,
     assert wire in WIRE_KINDS, wire
     K, l = grads.shape
     qg = _per_client_quantize(grads, fl.quant_bits, key)
+    ok = jnp.ones((K,), bool)
+    extras = {}
     if wire == 'packed':
-        qg, measured_bits, _crc_ok = materialize_wire(qg, round_idx)
-        payload = jnp.asarray(measured_bits, jnp.float32)
+        sign_words, mod_words, measured = encode_wire(qg, round_idx)
+        payload = jnp.asarray(measured, jnp.float32)
+        ones = jnp.ones((K,), jnp.float32)
+        g_min, g_max = wire_packets.mod_header_ranges(mod_words)
+        acc, votes = kops.spfl_aggregate_packed(
+            wire_packets.sign_payload(sign_words),
+            wire_packets.mod_payload(mod_words),
+            jnp.zeros((l,), jnp.float32), g_min, g_max, ones, ones, ok,
+            l, fl.quant_bits)
+        ghat = acc / K
+        if votes is not None:
+            extras['sign_votes'] = votes
     else:
         payload = jnp.asarray(K * (l * (fl.quant_bits + 1) + fl.b0_bits),
                               jnp.float32)
-    ghat = jnp.mean(qg.sign.astype(jnp.float32) * dequantize_modulus(qg),
-                    axis=0)
-    ok = jnp.ones((K,), bool)
-    return ghat, TransportDiagnostics(ok, ok, ok, payload, jnp.zeros(()))
+        ghat = _seq_client_mean(qg.sign.astype(jnp.float32)
+                                * dequantize_modulus(qg))
+    return ghat, TransportDiagnostics(ok, ok, ok, payload, jnp.zeros(()),
+                                      **extras)
 
 
 # ---------------------------------------------------------------------------
@@ -378,11 +432,13 @@ def _bitlevel_tree_pass(key, word_leaves, ber, frame_words: int, k: int):
     flips = jnp.zeros((k,), jnp.int32)
     rx = []
     for i, wl in enumerate(word_leaves):
-        cw, mask = wire_corrupt.corrupt_words(
+        # fused corrupt + mask-fold + popcount in one pass (the Pallas
+        # corruption kernel on TPU, its bit-identical jnp twin elsewhere)
+        cw, f, nf = kops.corrupt_fold_words(
             jax.random.fold_in(key, i), wl, ber)
         rx.append(cw)
-        fold = fold ^ wire_fmt.xor_fold(mask)
-        flips = flips + wire_corrupt.count_flips(mask)
+        fold = fold ^ f
+        flips = flips + nf
     fmask = wire_corrupt.flip_mask(
         jax.random.fold_in(key, len(word_leaves)), (k, frame_words), ber)
     fold = fold ^ wire_fmt.xor_fold(fmask)
@@ -401,10 +457,18 @@ def spfl_aggregate_tree(grads_tree, gbar_tree, q: Array, p: Array,
     applied leaf-wise.  Returns (ghat_tree, stats, diagnostics).
 
     ``wire='packed'`` (default: ``fl.wire``) bit-packs each leaf's sign
-    and knob payloads into wire words and decodes from them.  The
-    per-client framing (headers + b0 range + checksums) is one packet
-    pair per client per round regardless of leaf count, so the measured
-    ``payload_bits`` charges it once per client.
+    and knob payloads into wire words and aggregates straight from them:
+    the cross-client reduce per leaf is one decode-once kernel launch
+    over the (K, W) word buffers (``kernels.ops.spfl_aggregate_packed``)
+    — no per-client unpack, no (K, d) float intermediate, and the
+    ``uplink_reduce_dtype`` knob is subsumed (packed words are 4x
+    narrower than bf16 at b=3).  Caveat at mesh scale: the kernel wants
+    the full (K, W) buffers on one device, so a sharded client axis gets
+    all-gathered — see the ROADMAP item on a sharded packed collective
+    (the analytic path keeps a jnp.sum reduce for exactly that reason).  The per-client framing (headers + b0
+    range + checksums) is one packet pair per client per round
+    regardless of leaf count, so the measured ``payload_bits`` charges
+    it once per client.
 
     ``channel='bitlevel'`` (default: ``fl.channel``; requires the packed
     wire) flips bits of the leaf word buffers at the (q, p)-calibrated
@@ -428,8 +492,10 @@ def spfl_aggregate_tree(grads_tree, gbar_tree, q: Array, p: Array,
 
     g_min, g_max = stats['g_min'], stats['g_max']
     bits = fl.quant_bits
-    # beyond-paper §Perf: the payload is already b-bit quantized, so the
-    # cross-client reduction can run in bf16, halving uplink bytes
+    # beyond-paper §Perf (analytic wire only — the packed wire reduces
+    # packed words, narrower than any float dtype): the payload is
+    # already b-bit quantized, so the cross-client reduction can run in
+    # bf16, halving uplink bytes
     rdt = jnp.bfloat16 if fl.uplink_reduce_dtype == 'bfloat16' \
         else jnp.float32
 
@@ -495,29 +561,38 @@ def spfl_aggregate_tree(grads_tree, gbar_tree, q: Array, p: Array,
         extras = dict(retx_attempts=retx_k)
     w = _inverse_prob(sign_ok, q_eff)
 
-    # ---- PS: decode (possibly damaged) payloads + aggregate ----
+    # ---- PS: decode-once aggregate per leaf ----
     out = []
     for i, (lf, gbar_leaf) in enumerate(zip(leaves, gbar_leaves)):
         qg = qgs[i]
         shape = lf.shape
         Kd = shape[0]
-        sign, qidx = qg.sign, qg.qidx
-        if wire == 'packed':
-            d = sign.shape[-1]
-            sign = wire_fmt.bits_to_sign(wire_fmt.unpack_bits_ref(
-                sws[i], d, 1))
-            qidx = wire_fmt.unpack_bits_ref(qws[i], d, bits).astype(
-                jnp.int32)
-        modulus = dequantize_modulus(qg._replace(sign=sign, qidx=qidx))
         gb = gbar_leaf.astype(jnp.float32)
-        if gb.shape == shape:                       # per-client (last_local)
+        per_client_gb = gb.shape == shape           # last_local vs shared
+        if wire == 'packed':
+            # the cross-client collective consumes the packed (K, W)
+            # payload words directly: one fused unpack->dequant->weight->
+            # accumulate kernel launch per leaf, no K unpack passes and
+            # no (K, d) float intermediate (the bf16 reduce is subsumed —
+            # the packed words are 4x narrower than bf16 at b=3)
+            d = qg.sign.shape[-1]
+            acc, _ = kops.spfl_aggregate_packed(
+                sws[i], qws[i],
+                gb.reshape(Kd, -1) if per_client_gb else gb.reshape(-1),
+                g_min, g_max, mod_ok, w, sign_ok, d, bits)
+            out.append((acc / Kd).reshape(shape[1:]))
+            continue
+        modulus = dequantize_modulus(qg)
+        if per_client_gb:
             gb = gb.reshape(Kd, -1)
-        else:                                       # shared (last_global...)
+        else:
             gb = jnp.broadcast_to(gb.reshape(1, -1), modulus.shape)
         modulus = jnp.where(mod_ok[:, None], modulus, gb)
-        signed = sign.astype(jnp.float32) * modulus
+        signed = qg.sign.astype(jnp.float32) * modulus
         contrib = (w[:, None] * signed).astype(rdt)
-        # keep the reduction itself (-> cross-client all-reduce) in rdt
+        # keep the reduction itself (-> cross-client all-reduce) in rdt,
+        # and as a parallel jnp.sum: the client axis is mesh-sharded at
+        # LLM scale and must lower to ONE all-reduce
         out.append((jnp.sum(contrib, axis=0) / Kd).astype(
             jnp.float32).reshape(shape[1:]))
     ghat = jax.tree.unflatten(treedef, out)
@@ -555,18 +630,25 @@ def error_free_aggregate_tree(grads_tree, fl: FLConfig, key,
     keys = jax.random.split(key, len(leaves))
     K = leaves[0].shape[0]
     payload_words = [0]
+    ones = jnp.ones((K,), jnp.float32)
 
     def leaf(gleaf, lkey):
         Kd = gleaf.shape[0]
         flat = gleaf.astype(jnp.float32).reshape(Kd, -1)
         qg = stochastic_quantize(flat, bits, lkey,
                                  g_min[:, None], g_max[:, None])
-        sign, qidx = qg.sign, qg.qidx
         if wire == 'packed':
-            sign, qidx, n_words = _wire_leaf_roundtrip(sign, qidx, bits)
-            payload_words[0] += n_words
-        modulus = dequantize_modulus(qg._replace(sign=sign, qidx=qidx))
-        signed = sign.astype(jnp.float32) * modulus
+            # packed collective + decode-once kernel, as in the spfl tree
+            d = flat.shape[-1]
+            sw = wire_fmt.pack_bits_ref(wire_fmt.sign_to_bits(qg.sign), 1)
+            qw = wire_fmt.pack_bits_ref(qg.qidx, bits)
+            payload_words[0] += sw.shape[-1] + qw.shape[-1]
+            acc, _ = kops.spfl_aggregate_packed(
+                sw, qw, jnp.zeros((d,), jnp.float32), g_min, g_max,
+                ones, ones, ones, d, bits)
+            return (acc / Kd).reshape(gleaf.shape[1:])
+        signed = qg.sign.astype(jnp.float32) * dequantize_modulus(qg)
+        # parallel reduce: sharded client axis -> one all-reduce
         return jnp.mean(signed, axis=0).reshape(gleaf.shape[1:])
 
     out = [leaf(lf, k) for lf, k in zip(leaves, keys)]

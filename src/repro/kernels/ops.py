@@ -16,7 +16,9 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.quantize import knob_step
 from repro.kernels import quantize_kernel as qk
+from repro.wire import corrupt as wire_corrupt
 from repro.wire import format as wire_fmt
 from repro.wire import pack_kernel as wk
 
@@ -154,18 +156,158 @@ def unpack_dequant_flat(sign_words: Array, qidx_words: Array, gbar: Array,
     s2, g_exact = _words_to_grid(sign_words, n, 1)
     q2, _ = _words_to_grid(qidx_words, n, bits)
     b2, _, _ = _to_groups(gbar, jnp.float32)
-    out = wk.unpack_dequant_2d(s2, q2, b2, _s(gmin), _s(gmax), _s(mod_ok),
+    step = knob_step(_s(gmin), _s(gmax), bits)
+    out = wk.unpack_dequant_2d(s2, q2, b2, _s(gmin), step, _s(mod_ok),
                                _s(weight), bits=bits, interpret=interpret)
     return out.reshape(-1)[:n]
 
 
+def _spfl_aggregate_packed_jnp(sign_payload: Array, qidx_payload: Array,
+                               gbar: Array, gmin: Array, gmax: Array,
+                               mod_ok: Array, weight: Array, sign_ok: Array,
+                               n: int, bits: int
+                               ) -> Tuple[Array, Array | None]:
+    """Vectorized jnp twin of the decode-once kernel — the live path
+    off-TPU, where interpret-mode Pallas is validation-only (same policy
+    as the transports using the reference packers on CPU).  Identical
+    elementwise op sequence to the analytic aggregation, accumulated in
+    the kernel's sequential client order; votes are the same integers."""
+    k = sign_payload.shape[0]
+    gmin = jnp.asarray(gmin, jnp.float32).reshape(k, 1)
+    gmax = jnp.asarray(gmax, jnp.float32).reshape(k, 1)
+    sbits = wire_fmt.unpack_bits_ref(sign_payload, n, 1)       # (K, n)
+    sign = jnp.where(sbits > 0, 1.0, -1.0)
+    qidx = wire_fmt.unpack_bits_ref(qidx_payload, n, bits).astype(
+        jnp.float32)
+    modulus = gmin + qidx * knob_step(gmin, gmax, bits)
+    gb = gbar.astype(jnp.float32)
+    gb = gb if gb.ndim == 2 else gb[None, :]
+    modulus = jnp.where(jnp.asarray(mod_ok).reshape(k, 1) > 0, modulus, gb)
+    contrib = jnp.asarray(weight, jnp.float32).reshape(k, 1) \
+        * (sign * modulus)
+    acc = contrib[0]
+    for i in range(1, k):
+        acc = acc + contrib[i]
+    votes = None
+    if k <= wk.MAX_VOTE_CLIENTS:
+        gate = jnp.asarray(sign_ok).reshape(k, 1).astype(jnp.int32)
+        votes = jnp.sum(sbits.astype(jnp.int32) * gate, axis=0)
+    return acc, votes
+
+
+def spfl_aggregate_packed(sign_payload: Array, qidx_payload: Array,
+                          gbar: Array, gmin: Array, gmax: Array,
+                          mod_ok: Array, weight: Array, sign_ok: Array,
+                          n: int, bits: int,
+                          interpret: bool | None = None,
+                          use_kernel: bool | None = None
+                          ) -> Tuple[Array, Array | None]:
+    """Decode-once PS aggregation, eq. (15)-(17), straight from the
+    packed domain: ONE kernel launch over a client grid consumes every
+    client's payload words and returns
+
+        (sum_k w_k * s(g_k) ⊙ (mod_ok_k ? Q_v(g_k) : gbar),  sign votes)
+
+    with no (K, n) float intermediate and no per-client unpack passes
+    (pack_kernel.spfl_accumulate_kernel).  ``sign_payload`` (K, ceil(n/32))
+    and ``qidx_payload`` (K, ceil(n/32)*bits) are payload words in the
+    canonical layout; ``gbar`` is the shared (n,) or per-client (K, n)
+    compensation modulus; the per-client scalars are (K,) arrays.
+
+    Sign votes are the per-coordinate count of clients with an accepted
+    sign packet voting +1, computed in the packed domain (transposed
+    vote words + one ``lax.population_count`` per bit-plane); ``None``
+    when K exceeds the 32-client vote word capacity.  The caller divides
+    the sum by K for the mean — the kernel's client accumulation order
+    matches ``transport._seq_client_mean``, so the only difference from
+    the jnp paths is the backend FMA-contracting the kernel's fused
+    mul+add chains (a couple of ulp; decoded integers and votes are
+    bit-exact).
+
+    Dispatch: the Pallas kernel on TPU — or when ``use_kernel`` forces
+    it (interpret-mode parity tests) — otherwise the vectorized jnp twin
+    (interpret-mode Pallas on CPU is validation, not a fast path; same
+    policy as the transports' reference packers)."""
+    interpret = default_interpret() if interpret is None else interpret
+    if use_kernel is None:
+        use_kernel = not interpret
+    if not use_kernel:
+        return _spfl_aggregate_packed_jnp(
+            sign_payload, qidx_payload, gbar, gmin, gmax, mod_ok, weight,
+            sign_ok, n, bits)
+    k = sign_payload.shape[0]
+    g = wire_fmt.n_groups(n)
+    g_pad = -(-g // wk.BLOCK_GROUPS) * wk.BLOCK_GROUPS
+
+    def to_grid(words: Array, width: int) -> Array:
+        w = words.astype(jnp.uint32).reshape(k, g, width)
+        return jnp.pad(w, ((0, 0), (0, g_pad - g), (0, 0))).reshape(
+            k * g_pad, width)
+
+    per_client = gbar.ndim == 2
+    gb = gbar.astype(jnp.float32).reshape(k if per_client else 1, -1)
+    gb = jnp.pad(gb, ((0, 0), (0, g_pad * wire_fmt.GROUP - n)))
+    gb = gb.reshape(-1, wire_fmt.GROUP)
+
+    def col(x, dt) -> Array:
+        return jnp.asarray(x).astype(dt).reshape(k, 1)
+
+    # knob step precomputed with the analytic dequantizer's own
+    # quantize.knob_step — an in-kernel constant division would
+    # strength-reduce to a reciprocal multiply and drift a ulp
+    step = knob_step(col(gmin, jnp.float32), col(gmax, jnp.float32), bits)
+    with_votes = k <= wk.MAX_VOTE_CLIENTS
+    acc, votes = wk.spfl_accumulate_2d(
+        to_grid(sign_payload, 1), to_grid(qidx_payload, bits), gb,
+        col(gmin, jnp.float32), step,
+        col(mod_ok, jnp.float32), col(weight, jnp.float32),
+        col(sign_ok, jnp.uint32), bits=bits, n_clients=k,
+        gbar_per_client=per_client, with_votes=with_votes,
+        interpret=interpret)
+    votes_out = (votes.reshape(-1)[:n].astype(jnp.int32)
+                 if with_votes else None)
+    return acc.reshape(-1)[:n], votes_out
+
+
+def corrupt_fold_words(key, words: Array, ber,
+                       interpret: bool | None = None,
+                       use_kernel: bool | None = None
+                       ) -> Tuple[Array, Array, Array]:
+    """Fused bit-channel pass over (K, W) word buffers:
+    -> (received, per-client flip-mask xor-fold, per-client flip count).
+
+    Dispatch: the fused Pallas kernel (pack_kernel.corrupt_fold_2d) by
+    default — on CPU it runs in interpret mode, where the pallas_call
+    boundary also stops the XLA CPU fusion pass from re-running the
+    32-round hash chain once per downstream consumer (measured 2.3x on
+    the composed bitlevel round).  ``use_kernel=False`` selects the
+    bit-identical jnp twin (wire.corrupt.corrupt_fold); both run the
+    same counter PRF over the same global bit indices, so the choice
+    never changes a single bit, and neither materializes a (..., W, 32)
+    random tensor."""
+    interpret = default_interpret() if interpret is None else interpret
+    if use_kernel is None:
+        use_kernel = True
+    if not use_kernel:
+        return wire_corrupt.corrupt_fold(key, words, ber)
+    k, w_n = words.shape
+    w_pad = -(-w_n // wk.BLOCK_CORRUPT_WORDS) * wk.BLOCK_CORRUPT_WORDS
+    padded = jnp.pad(words.astype(jnp.uint32), ((0, 0), (0, w_pad - w_n)))
+    seeds = wire_corrupt.seeds_from_key(key).reshape(1, 2)
+    thresh, allf = wire_corrupt.flip_threshold(
+        jnp.broadcast_to(jnp.asarray(ber, jnp.float32), (k,)))
+    rx, fold, flips = wk.corrupt_fold_2d(
+        seeds, thresh.reshape(k, 1), allf.astype(jnp.uint32).reshape(k, 1),
+        padded, n_words=w_n, interpret=interpret)
+    return rx[:, :w_n], fold.reshape(k), flips.reshape(k)
+
+
 def fold_words(words: Array, interpret: bool | None = None) -> Array:
     """Per-client xor-fold of (K, W) word buffers -> (K,) uint32: the
-    Pallas form of repro.wire.format.xor_fold, for moving the bit-level
-    channel's packet verification on-chip at transport scale (validated
-    against the reference; the transports themselves still fold in jnp —
-    see ROADMAP).  Pads W to the fold-block grid with zeros (the xor
-    identity)."""
+    Pallas form of repro.wire.format.xor_fold — the live PS-side CRC
+    reduction of the bit-level transports (repro.core.bitchannel folds
+    received buffers through it).  Pads W to the fold-block grid with
+    zeros (the xor identity)."""
     interpret = default_interpret() if interpret is None else interpret
     k, w_n = words.shape
     w_pad = -(-w_n // wk.BLOCK_FOLD_WORDS) * wk.BLOCK_FOLD_WORDS

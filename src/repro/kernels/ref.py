@@ -2,6 +2,7 @@
 sweep in tests/test_kernels.py asserts against)."""
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 
@@ -31,3 +32,33 @@ def dequant_ref(sign, qidx, gbar, gmin, gmax, mod_ok, weight, bits: int):
 def roundtrip_ref(g, rand, gbar, gmin, gmax, mod_ok, weight, bits: int):
     sign, qidx = quantize_ref(g, rand, gmin, gmax, bits)
     return dequant_ref(sign, qidx, gbar, gmin, gmax, mod_ok, weight, bits)
+
+
+def spfl_packed_aggregate_ref(sign_payload, qidx_payload, gbar, gmin, gmax,
+                              mod_ok, weight, sign_ok, n: int, bits: int):
+    """The seed unpack-per-client PS path, retained as the oracle for the
+    decode-once kernel (ops.spfl_aggregate_packed): decode every client's
+    payload words, dequantize, compensate, weight, and accumulate
+    *sequentially* in client order — the kernel's client-grid
+    association.  -> (client-sum (n,) f32, sign votes (n,) int32)."""
+    from repro.core.quantize import knob_step
+    from repro.wire import format as fmt
+    k = sign_payload.shape[0]
+    votes = jnp.zeros((n,), jnp.int32)
+    acc = jnp.zeros((n,), jnp.float32)
+    steps = knob_step(jnp.asarray(gmin, jnp.float32),
+                      jnp.asarray(gmax, jnp.float32), bits)
+    for i in range(k):
+        sign = fmt.bits_to_sign(
+            fmt.unpack_bits_ref(sign_payload[i], n, 1)).astype(jnp.float32)
+        qidx = fmt.unpack_bits_ref(qidx_payload[i], n, bits).astype(
+            jnp.float32)
+        modulus = gmin[i] + qidx * steps[i]
+        gb = gbar[i] if gbar.ndim == 2 else gbar
+        modulus = jnp.where(mod_ok[i] > 0, modulus,
+                            gb.astype(jnp.float32))
+        contrib = weight[i] * (sign * modulus)
+        acc = contrib if i == 0 else acc + contrib
+        votes = votes + (jnp.asarray(sign_ok[i], jnp.int32)
+                         * (sign > 0).astype(jnp.int32))
+    return acc, votes

@@ -5,9 +5,14 @@ The FL client axis is the mesh's (pod, data) extent: ``jax.vmap(jax.grad)``
 over a leading client axis of the batch produces stacked per-client
 gradients whose client dim shards over ('pod','data') and whose parameter
 dims shard over 'model' — so the K× gradient memory is fully distributed.
-The transport then runs vectorized over clients and its final mean over the
-client axis is what GSPMD lowers to the cross-client all-reduce (the
-"uplink").
+The transport then runs vectorized over clients and its client-axis
+reduction is what GSPMD lowers to the cross-client all-reduce (the
+"uplink").  With ``fl.wire='packed'`` that reduction happens in the
+packed domain: the per-leaf collective consumes the bit-packed (K, W)
+uint32 payload words through the decode-once kernel
+(``repro.kernels.ops.spfl_aggregate_packed``), so the wire traffic is
+~(1+b) bits/coordinate instead of the f32 (or bf16, via
+``fl.uplink_reduce_dtype``) leaves of the analytic path.
 
 The wireless channel success probabilities (q, p) enter as *inputs*: the
 hierarchical allocator (repro.core.allocation) runs host-side between
@@ -89,6 +94,7 @@ def make_fl_train_step(cfg: ModelConfig, fl: FLConfig,
             'sign_ok': diag.sign_ok,
             'mod_ok': diag.mod_ok,
             'payload_bits': diag.payload_bits,
+            'retransmissions': diag.retransmissions,
         }
         return new_params, new_gbar, metrics
 

@@ -41,6 +41,7 @@ class FLHistory:
     payload_bits: List[float] = field(default_factory=list)
     sign_ok_frac: List[float] = field(default_factory=list)
     mod_ok_frac: List[float] = field(default_factory=list)
+    sign_agreement: List[float] = field(default_factory=list)  # packed wire
     retransmissions: List[float] = field(default_factory=list)
     alloc_time_s: List[float] = field(default_factory=list)
     round_time_s: List[float] = field(default_factory=list)
@@ -230,6 +231,23 @@ class FLSimulator:
                 diag.sign_ok.astype(jnp.float32))))
             hist.mod_ok_frac.append(float(jnp.mean(
                 diag.mod_ok.astype(jnp.float32))))
+            if (fl.wire == 'packed'
+                    and kind in ('spfl', 'spfl_retx', 'error_free')):
+                # packed-domain consensus: mean |2 v_i - K_ok| / K_ok is 1
+                # when every accepted client agrees on every coordinate's
+                # sign, ~0 under a split vote (signSGD-style telemetry,
+                # computed without unpacking — see ops.spfl_aggregate_packed).
+                # Exactly one entry per round on the packed wire — NaN when
+                # no sign packet survived or votes are unavailable (K > 32
+                # exceeds the vote word) — so the list stays aligned with
+                # the other per-round histories.
+                n_ok = float(jnp.sum(diag.sign_ok.astype(jnp.float32)))
+                if diag.sign_votes is not None and n_ok > 0:
+                    v = diag.sign_votes.astype(jnp.float32)
+                    hist.sign_agreement.append(float(
+                        jnp.mean(jnp.abs(2.0 * v - n_ok)) / n_ok))
+                else:
+                    hist.sign_agreement.append(float('nan'))
             hist.retransmissions.append(float(diag.retransmissions))
             hist.alloc_time_s.append(alloc_t)
             hist.round_time_s.append(time.time() - t0)

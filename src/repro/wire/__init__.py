@@ -42,8 +42,10 @@ Modules:
                     ``decode_uplink_batch``; standalone ``verify_*`` CRC
                     checks and the ``restamp_sign_retx`` retransmission
                     re-encode.
-* ``corrupt``     — Bernoulli bit-flip masks over word buffers: the write
-                    side of the bit-level channel
+* ``corrupt``     — Bernoulli bit-flip masks over word buffers via a
+                    counter PRF (bit-identical in jnp and in the fused
+                    Pallas corrupt+fold kernel — no 32x-inflated random
+                    tensor): the write side of the bit-level channel
                     (``repro.core.bitchannel``), which turns the xor-fold
                     checksum from a test artifact into a modeled erasure
                     mechanism (see README.md).
@@ -58,7 +60,8 @@ instead of 0) — a measure-zero event for real-valued gradients.
 """
 from repro.wire import corrupt, format, packets  # noqa: F401
 from repro.wire.corrupt import (  # noqa: F401
-    corrupt_words, count_flips, flip_mask,
+    corrupt_fold, corrupt_words, count_flips, flip_mask, flip_mask_ref,
+    hash_bits,
 )
 from repro.wire.format import (  # noqa: F401
     GROUP, MOD_HEADER_WORDS, SIGN_HEADER_WORDS, WORD_BITS,
@@ -67,6 +70,7 @@ from repro.wire.format import (  # noqa: F401
 )
 from repro.wire.packets import (  # noqa: F401
     DecodedUplink, decode_client_uplink, decode_uplink_batch,
-    encode_client_uplink, encode_uplink_batch, restamp_sign_retx,
-    verify_mod_words, verify_sign_words,
+    encode_client_uplink, encode_uplink_batch, mod_header_ranges,
+    mod_payload, restamp_sign_retx, sign_payload, verify_mod_words,
+    verify_sign_words,
 )

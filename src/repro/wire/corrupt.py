@@ -4,8 +4,24 @@ The analytic stack decides packet fate with one Bernoulli draw per packet
 (eq. (11)/(13)); the bit-level channel (``repro.core.bitchannel``) instead
 flips individual bits of the materialized uint32 buffers at a calibrated
 per-bit error rate and lets the xor-fold integrity word *detect* the
-damage on the PS side.  This module is the flip machinery: i.i.d.
-Bernoulli(ber) masks over every bit of a word buffer, applied by xor.
+damage on the PS side.  This module is the flip machinery.
+
+RNG: counter-based, not ``jax.random``.  Every bit of the buffer is
+addressed by its (word index, bit plane) pair; its flip decision is a
+threshold test of a murmur3-fmix32 double-mix — the first round mixes
+the uint32 word counter with one seed word, the second folds in the
+other seed word salted by the bit plane — so the counter spans 2^32
+*words* (16 GB per buffer) rather than 2^32 bits and cannot wrap at LLM
+dims.  The same integer arithmetic runs in three places and is
+bit-identical across them:
+
+* :func:`flip_mask` — the live jnp path: loops the 32 bit planes,
+  keeping only word-shaped arrays (no ``(..., W, 32)`` intermediate);
+* ``repro.wire.pack_kernel.corrupt_fold_kernel`` — the Pallas TPU
+  kernel: draws, thresholds, packs, xors into the payload and
+  accumulates the xor-fold + popcount in one VMEM pass;
+* :func:`flip_mask_ref` — the materialized ``(..., W, 32)`` reference
+  retained purely so tests can prove the other two against it.
 
 All functions are pure jnp (jit/vmap-safe) and batched over arbitrary
 leading axes; ``ber`` broadcasts against the leading (per-client) axes so
@@ -18,9 +34,69 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.wire.format import WORD_BITS
+from repro.wire.format import WORD_BITS, xor_fold
 
 Array = jax.Array
+
+# fmix32 constants (murmur3 finalizer) + the golden-ratio increment that
+# decorrelates consecutive counter values before the first mix, + an odd
+# salt separating the 32 bit-plane streams of one word
+_MIX1 = 0x85EBCA6B
+_MIX2 = 0xC2B2AE35
+_GOLDEN = 0x9E3779B9
+_PLANE_SALT = 0x9E3779B1
+# largest f32 below 2^32: the threshold clamp for ber -> uint32 scaling
+_THRESH_MAX = 4294967040.0
+
+
+def _fmix32(x: Array) -> Array:
+    """Murmur3 32-bit finalizer: a bijective full-avalanche mixer."""
+    x = x ^ (x >> jnp.uint32(16))
+    x = x * jnp.uint32(_MIX1)
+    x = x ^ (x >> jnp.uint32(13))
+    x = x * jnp.uint32(_MIX2)
+    x = x ^ (x >> jnp.uint32(16))
+    return x
+
+
+def hash_bits(word_idx: Array, plane, seed0, seed1) -> Array:
+    """Counter-based PRF: (uint32 word index, bit plane 0..31) -> uint32
+    hash.  Two fmix32 rounds — seed0 enters with the word counter, seed1
+    salted by the plane in between — identical arithmetic in jnp and
+    inside the Pallas kernel, which is what makes the fused corruption
+    bit-exact against the jnp reference.  Addressing words (not bits)
+    keeps the counter from wrapping below 2^32 words per buffer."""
+    s0 = jnp.asarray(seed0).astype(jnp.uint32)
+    s1 = jnp.asarray(seed1).astype(jnp.uint32)
+    p = jnp.asarray(plane).astype(jnp.uint32) * jnp.uint32(_PLANE_SALT)
+    h = _fmix32((word_idx.astype(jnp.uint32) + jnp.uint32(_GOLDEN)) ^ s0)
+    return _fmix32(h ^ s1 ^ p)
+
+
+def seeds_from_key(key) -> Array:
+    """Derive the two uint32 seed words of the counter PRF from a jax
+    PRNG key (shape (2,))."""
+    return jax.random.bits(key, (2,), jnp.uint32)
+
+
+def flip_threshold(ber) -> Tuple[Array, Array]:
+    """ber (f32, any shape) -> (uint32 threshold, all-flips flag).
+
+    A bit flips iff ``hash < threshold`` (P = threshold / 2^32, within
+    one part in 2^32 of ``ber``) or the flag is set (``ber >= 1`` cannot
+    be expressed as a uint32 threshold; the flag keeps the ber=1 edge
+    exact, which tests rely on)."""
+    ber = jnp.asarray(ber, jnp.float32)
+    t = jnp.round(jnp.clip(ber, 0.0, 1.0) * 4294967296.0)
+    return jnp.clip(t, 0.0, _THRESH_MAX).astype(jnp.uint32), ber >= 1.0
+
+
+def _word_index(shape: Tuple[int, ...]) -> Array:
+    """Global uint32 word index over ``shape`` (row-major)."""
+    n = 1
+    for s in shape:
+        n *= s
+    return jnp.arange(n, dtype=jnp.uint32).reshape(shape)
 
 
 def flip_mask(key, shape: Tuple[int, ...], ber) -> Array:
@@ -29,12 +105,40 @@ def flip_mask(key, shape: Tuple[int, ...], ber) -> Array:
     Each of the ``32 * prod(shape)`` bits is set independently with
     probability ``ber`` (broadcast over the leading axes of ``shape``,
     e.g. per-client rates of shape (K,) against words (K, W)).
+
+    Counter-PRF implementation: loops the 32 bit planes accumulating
+    ``mask |= bit_j << j`` so only word-shaped arrays are ever live —
+    no ``(..., W, 32)`` intermediate (the seed implementation drew a
+    32x-inflated uniform tensor per call; see :func:`flip_mask_ref` for
+    the retained materialized form).
     """
-    ber = jnp.asarray(ber, jnp.float32)
-    draws = jax.random.uniform(key, (*shape, WORD_BITS))
-    ber = ber.reshape(ber.shape + (1,) * (draws.ndim - ber.ndim))
-    bits = (draws < ber).astype(jnp.uint32)
+    seeds = seeds_from_key(key)
+    thresh, allf = flip_threshold(ber)
+    bshape = thresh.shape + (1,) * (len(shape) - thresh.ndim)
+    thresh = thresh.reshape(bshape)
+    allf = allf.reshape(bshape)
+    base = _word_index(shape)
+    mask = jnp.zeros(shape, jnp.uint32)
+    for j in range(WORD_BITS):
+        h = hash_bits(base, j, seeds[0], seeds[1])
+        bit = ((h < thresh) | allf).astype(jnp.uint32)
+        mask = mask | (bit << jnp.uint32(j))
+    return mask
+
+
+def flip_mask_ref(key, shape: Tuple[int, ...], ber) -> Array:
+    """Materialized ``(..., W, 32)`` reference of :func:`flip_mask`:
+    every bit's hash/threshold drawn as one big tensor then packed.
+    Test-only ground truth — the live paths must equal it bit-for-bit."""
+    seeds = seeds_from_key(key)
+    thresh, allf = flip_threshold(ber)
+    bshape = thresh.shape + (1,) * (len(shape) + 1 - thresh.ndim)
     lane = jnp.arange(WORD_BITS, dtype=jnp.uint32)
+    idx = jnp.broadcast_to(_word_index(shape)[..., None],
+                           shape + (WORD_BITS,))
+    bits = ((hash_bits(idx, lane, seeds[0], seeds[1])
+             < thresh.reshape(bshape))
+            | allf.reshape(bshape)).astype(jnp.uint32)
     return jnp.sum(bits << lane, axis=-1, dtype=jnp.uint32)
 
 
@@ -53,3 +157,15 @@ def corrupt_words(key, words: Array, ber) -> Tuple[Array, Array]:
     """
     mask = flip_mask(key, words.shape, ber)
     return words ^ mask, mask
+
+
+def corrupt_fold(key, words: Array, ber
+                 ) -> Tuple[Array, Array, Array]:
+    """Fused transmit + channel-side bookkeeping for (K, W) buffers:
+    -> (received, per-client xor-fold of the flip mask, per-client flip
+    count).  This is the jnp form of the fused Pallas corruption kernel
+    (``pack_kernel.corrupt_fold_2d``) and is bit-identical to it; the
+    mask fold is what the tree transport accumulates across leaves to
+    verify its leaf-scattered virtual packets."""
+    rx, mask = corrupt_words(key, words, ber)
+    return rx, xor_fold(mask), count_flips(mask)

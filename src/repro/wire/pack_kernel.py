@@ -7,7 +7,7 @@ VPU streams with zero cross-group communication.  Arrays enter as
 group-major 2-D tiles — values ``(G, 32)``, words ``(G, bits)`` — and the
 grid runs over blocks of ``BLOCK_GROUPS`` groups.
 
-Five kernels:
+Kernels:
 
 * ``pack_bits_kernel``      — values -> payload words.
 * ``unpack_bits_kernel``    — payload words -> values.
@@ -23,15 +23,41 @@ Five kernels:
 * ``fold_words_kernel``     — per-client xor-fold of a (K, W) word
                               buffer, accumulated across word-block grid
                               steps: the on-chip form of the CRC
-                              reduction (format.xor_fold).  Validated
-                              against the reference (tests/test_wire.py)
-                              but not yet wired into the verify path —
-                              the transports still fold in jnp; see the
-                              ROADMAP item on TPU-side verification.
+                              reduction (format.xor_fold).  Live in the
+                              PS verify path of the bit-level transports
+                              (repro.core.bitchannel) since the
+                              packed-domain hot-path PR.
+* ``spfl_accumulate_kernel`` — the decode-once PS pass: extends
+                              ``unpack_dequant_kernel`` with a client
+                              grid dimension, so ONE kernel launch
+                              unpacks, dequantizes, compensates,
+                              1/q-weights and *accumulates* all K
+                              clients' packed payloads into the f32
+                              aggregate — the cross-client reduce never
+                              materializes a (K, n) float intermediate.
+                              Sign votes ride along in the packed
+                              domain: each client's sign bit-plane is
+                              transposed into a per-coordinate vote word
+                              (bit k = client k's sign) and a single
+                              ``lax.population_count`` at the last
+                              client-grid step turns it into counts.
+* ``corrupt_fold_kernel``   — the on-chip bit channel: draws counter-PRF
+                              random bits (repro.wire.corrupt.hash_bits),
+                              thresholds them against the per-client BER,
+                              packs the flip mask in-register, xors it
+                              into the payload, and accumulates both the
+                              mask's xor-fold (fusing fold_words_kernel's
+                              reduction into the same pass) and its
+                              popcount — no (..., W, 32) random tensor
+                              ever exists.  Off-TPU the interpret-mode
+                              pallas_call doubles as a fusion boundary,
+                              stopping XLA CPU from re-running the hash
+                              chain once per downstream consumer.
 
 Per-client scalars travel as (1, 1) blocks exactly like
 ``kernels.quantize_kernel``.  Everything is validated against the
-``format`` reference packers in interpret mode (tests/test_wire.py).
+``format``/``corrupt`` references in interpret mode (tests/test_wire.py,
+tests/test_bitchannel.py).
 """
 from __future__ import annotations
 
@@ -42,10 +68,13 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.kernels.quantize_kernel import quantize_body
-from repro.wire.format import GROUP
+from repro.wire.corrupt import hash_bits
+from repro.wire.format import GROUP, WORD_BITS
 
 BLOCK_GROUPS = 256           # groups (of 32 values) per grid step
 BLOCK_FOLD_WORDS = 512       # words per grid step of the fold reduction
+BLOCK_CORRUPT_WORDS = 512    # words per grid step of the fused corruption
+MAX_VOTE_CLIENTS = 32        # vote word capacity: one bit per client
 
 
 def _scalar_spec():
@@ -105,23 +134,121 @@ def quantize_pack_kernel(gmin_ref, gmax_ref, g_ref, r_ref,
     qw_ref[...] = _pack(qidx.astype(jnp.uint32), bits)
 
 
-def unpack_dequant_kernel(gmin_ref, gmax_ref, mod_ok_ref, weight_ref,
+def _dequant_contrib(sw, qw, gbar, gmin, step, mod_ok, w, bits: int):
+    """Shared decode body of the PS-side kernels: unpack both payload
+    tiles, reconstruct w * s(g) ⊙ (mod_ok ? Q_v(g) : gbar).  The knob
+    step arrives precomputed (a constant-divisor division in-kernel gets
+    strength-reduced to a reciprocal multiply, drifting a ulp from the
+    jnp dequantizer).  -> (sign bit tile (BG, 32) uint32, contribution
+    tile (BG, 32) f32)."""
+    sign_bits = _unpack(sw.astype(jnp.uint32), 1)
+    sign = jnp.where(sign_bits > 0, 1.0, -1.0)
+    qidx = _unpack(qw.astype(jnp.uint32), bits).astype(jnp.float32)
+    modulus = gmin + qidx * step
+    modulus = jnp.where(mod_ok > 0.0, modulus, gbar.astype(jnp.float32))
+    return sign_bits, w * (sign * modulus)
+
+
+def unpack_dequant_kernel(gmin_ref, step_ref, mod_ok_ref, weight_ref,
                           sw_ref, qw_ref, gbar_ref, out_ref, *, bits: int):
     """Fused PS decode, eq. (15)-(17):
     out = w * s(g) ⊙ (mod_ok ? Q_v(g) : gbar) straight from packed words."""
-    gmin = gmin_ref[0, 0]
-    gmax = gmax_ref[0, 0]
-    mod_ok = mod_ok_ref[0, 0]
-    w = weight_ref[0, 0]
-    nk = float(2 ** bits - 1)
-    step = (gmax - gmin) / nk
-    sign = jnp.where(_unpack(sw_ref[...].astype(jnp.uint32), 1) > 0,
-                     1.0, -1.0)
-    qidx = _unpack(qw_ref[...].astype(jnp.uint32), bits).astype(jnp.float32)
-    modulus = gmin + qidx * step
-    modulus = jnp.where(mod_ok > 0.0, modulus,
-                        gbar_ref[...].astype(jnp.float32))
-    out_ref[...] = w * sign * modulus
+    _, contrib = _dequant_contrib(
+        sw_ref[...], qw_ref[...], gbar_ref[...], gmin_ref[0, 0],
+        step_ref[0, 0], mod_ok_ref[0, 0], weight_ref[0, 0], bits)
+    out_ref[...] = contrib
+
+
+def spfl_accumulate_kernel(gmin_ref, step_ref, mod_ok_ref, weight_ref,
+                           vote_gate_ref, sw_ref, qw_ref, gbar_ref,
+                           acc_ref, votes_ref, *, bits: int,
+                           n_clients: int, with_votes: bool):
+    """Decode-once eq. (15)-(17) over the client grid (axis 1): for every
+    group block, unpack client k's packed payloads, reconstruct
+    w_k * s_k ⊙ (mod_ok_k ? Q_v(g_k) : gbar), and accumulate into the
+    f32 aggregate — grid step (i, 0) initializes, (i, k>0) adds, so the
+    cross-client sum happens in VMEM without a (K, n) intermediate.
+
+    Votes stay packed: client k's sign bits are or'ed into bit k of a
+    per-coordinate vote word (gated by vote_gate = sign_ok), and the
+    final client step converts the transposed word to counts with one
+    ``lax.population_count`` per bit-plane.  ``with_votes`` is static —
+    False (K beyond the 32-client vote word) skips all vote work at
+    trace time and only zero-fills the output once.
+
+    The knob step arrives precomputed (see ``_dequant_contrib``).
+    """
+    k = pl.program_id(1)
+    sign_bits, contrib = _dequant_contrib(
+        sw_ref[...], qw_ref[...], gbar_ref[...], gmin_ref[0, 0],
+        step_ref[0, 0], mod_ok_ref[0, 0], weight_ref[0, 0], bits)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = contrib
+        if not with_votes:
+            votes_ref[...] = jnp.zeros(votes_ref.shape, jnp.uint32)
+
+    @pl.when(k != 0)
+    def _acc():
+        acc_ref[...] = acc_ref[...] + contrib
+
+    if with_votes:
+        voted = sign_bits * vote_gate_ref[0, 0]
+
+        @pl.when(k == 0)
+        def _init_votes():
+            votes_ref[...] = voted
+
+        @pl.when(k != 0)
+        def _acc_votes():
+            votes_ref[...] = votes_ref[...] | (
+                voted << k.astype(jnp.uint32))
+
+        @pl.when(k == n_clients - 1)
+        def _finalize_votes():
+            votes_ref[...] = jax.lax.population_count(votes_ref[...])
+
+
+def corrupt_fold_kernel(seed_ref, thresh_ref, allflip_ref, w_ref,
+                        rx_ref, fold_ref, flips_ref, *, n_words: int):
+    """Fused bit channel: counter-PRF draw -> threshold -> in-register
+    pack -> xor into the payload, with the flip mask's xor-fold
+    (fold_words_kernel's reduction) and popcount accumulated in the same
+    pass.  ``n_words`` is the true (unpadded) buffer width: the global
+    word index matches the jnp reference exactly and padding columns
+    never flip."""
+    j = pl.program_id(0)
+    words = w_ref[...].astype(jnp.uint32)
+    k_row = jax.lax.broadcasted_iota(jnp.uint32, words.shape, 0)
+    col = (jax.lax.broadcasted_iota(jnp.uint32, words.shape, 1)
+           + jnp.uint32(j * BLOCK_CORRUPT_WORDS))
+    valid = (col < jnp.uint32(n_words)).astype(jnp.uint32)
+    base = k_row * jnp.uint32(n_words) + col
+    thresh = thresh_ref[...].astype(jnp.uint32)          # (K, 1)
+    allf = allflip_ref[...].astype(jnp.uint32)           # (K, 1)
+    s0 = seed_ref[0, 0]
+    s1 = seed_ref[0, 1]
+    mask = jnp.zeros(words.shape, jnp.uint32)
+    for b in range(WORD_BITS):
+        h = hash_bits(base, b, s0, s1)
+        bit = (((h < thresh).astype(jnp.uint32) | allf) & valid)
+        mask = mask | (bit << jnp.uint32(b))
+    rx_ref[...] = words ^ mask
+    fold = jax.lax.reduce(mask, jnp.uint32(0), jax.lax.bitwise_xor,
+                          (1,))[:, None]
+    flips = jnp.sum(jax.lax.population_count(mask), axis=1,
+                    dtype=jnp.int32)[:, None]
+
+    @pl.when(j == 0)
+    def _init():
+        fold_ref[...] = fold
+        flips_ref[...] = flips
+
+    @pl.when(j != 0)
+    def _acc():
+        fold_ref[...] = fold_ref[...] ^ fold
+        flips_ref[...] = flips_ref[...] + flips
 
 
 def fold_words_kernel(w_ref, f_ref):
@@ -211,10 +338,73 @@ def fold_words_2d(words, *, interpret: bool = False):
     )(words)
 
 
+@functools.partial(jax.jit, static_argnames=('bits', 'n_clients',
+                                             'gbar_per_client',
+                                             'with_votes', 'interpret'))
+def spfl_accumulate_2d(sign_words, qidx_words, gbar, gmin, step, mod_ok,
+                       weight, vote_gate, *, bits: int, n_clients: int,
+                       gbar_per_client: bool, with_votes: bool = True,
+                       interpret: bool = False):
+    """Decode-once aggregation over the client grid.
+
+    sign_words (K*G_pad, 1) / qidx_words (K*G_pad, bits): every client's
+    padded group-major payload stacked along rows; gbar (G_pad, 32)
+    shared or (K*G_pad, 32) per-client; per-client scalars (K, 1)
+    (vote_gate uint32 0/1 = sign_ok, ``step`` the precomputed knob step,
+    the rest f32).
+    -> (client-sum (G_pad, 32) f32, sign votes (G_pad, 32) uint32).
+    """
+    rows = sign_words.shape[0] // n_clients
+    gb = rows // BLOCK_GROUPS            # group blocks per client
+    assert gb * BLOCK_GROUPS == rows, (sign_words.shape, n_clients)
+    scal = pl.BlockSpec((1, 1), lambda i, k: (k, 0))
+    pay = lambda width: pl.BlockSpec((BLOCK_GROUPS, width),
+                                     lambda i, k: (k * gb + i, 0))
+    gbar_spec = pay(GROUP) if gbar_per_client else \
+        pl.BlockSpec((BLOCK_GROUPS, GROUP), lambda i, k: (i, 0))
+    out_spec = pl.BlockSpec((BLOCK_GROUPS, GROUP), lambda i, k: (i, 0))
+    return pl.pallas_call(
+        functools.partial(spfl_accumulate_kernel, bits=bits,
+                          n_clients=n_clients, with_votes=with_votes),
+        grid=(gb, n_clients),            # clients innermost: accumulation
+        in_specs=[scal] * 5 + [pay(1), pay(bits), gbar_spec],
+        out_specs=[out_spec, out_spec],
+        out_shape=[jax.ShapeDtypeStruct((rows, GROUP), jnp.float32),
+                   jax.ShapeDtypeStruct((rows, GROUP), jnp.uint32)],
+        interpret=interpret,
+    )(gmin, step, mod_ok, weight, vote_gate, sign_words, qidx_words, gbar)
+
+
+@functools.partial(jax.jit, static_argnames=('n_words', 'interpret'))
+def corrupt_fold_2d(seeds, thresh, allflip, words, *, n_words: int,
+                    interpret: bool = False):
+    """Fused corruption of (K, W_pad) word buffers (W_pad a
+    BLOCK_CORRUPT_WORDS multiple; columns >= n_words never flip).
+    seeds (1, 2) uint32; thresh/allflip (K, 1) uint32.
+    -> (received (K, W_pad), mask xor-fold (K, 1), flip count (K, 1))."""
+    k, w_pad = words.shape
+    assert w_pad % BLOCK_CORRUPT_WORDS == 0, w_pad
+    acc_spec = pl.BlockSpec((k, 1), lambda j: (0, 0))
+    return pl.pallas_call(
+        functools.partial(corrupt_fold_kernel, n_words=n_words),
+        grid=(w_pad // BLOCK_CORRUPT_WORDS,),
+        in_specs=[pl.BlockSpec((1, 2), lambda j: (0, 0)),
+                  acc_spec, acc_spec,
+                  pl.BlockSpec((k, BLOCK_CORRUPT_WORDS), lambda j: (0, j))],
+        out_specs=[pl.BlockSpec((k, BLOCK_CORRUPT_WORDS), lambda j: (0, j)),
+                   acc_spec, acc_spec],
+        out_shape=[jax.ShapeDtypeStruct((k, w_pad), jnp.uint32),
+                   jax.ShapeDtypeStruct((k, 1), jnp.uint32),
+                   jax.ShapeDtypeStruct((k, 1), jnp.int32)],
+        interpret=interpret,
+    )(seeds, thresh, allflip, words)
+
+
 @functools.partial(jax.jit, static_argnames=('bits', 'interpret'))
-def unpack_dequant_2d(sign_words, qidx_words, gbar, gmin, gmax, mod_ok,
+def unpack_dequant_2d(sign_words, qidx_words, gbar, gmin, step, mod_ok,
                       weight, *, bits: int, interpret: bool = False):
-    """sign_words (G, 1), qidx_words (G, bits), gbar (G, 32) -> (G, 32) f32."""
+    """sign_words (G, 1), qidx_words (G, bits), gbar (G, 32), precomputed
+    knob step (1, 1) -> (G, 32) f32."""
     n_rows = sign_words.shape[0]
     return pl.pallas_call(
         functools.partial(unpack_dequant_kernel, bits=bits),
@@ -224,4 +414,4 @@ def unpack_dequant_2d(sign_words, qidx_words, gbar, gmin, gmax, mod_ok,
         out_specs=_value_spec(),
         out_shape=jax.ShapeDtypeStruct((n_rows, GROUP), jnp.float32),
         interpret=interpret,
-    )(gmin, gmax, mod_ok, weight, sign_words, qidx_words, gbar)
+    )(gmin, step, mod_ok, weight, sign_words, qidx_words, gbar)

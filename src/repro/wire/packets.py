@@ -56,20 +56,54 @@ def encode_client_uplink(sign: Array, qidx: Array, g_min, g_max,
     return sign_words, mod_words
 
 
+def sign_header_ok(sign_words: Array, *, n: int) -> Array:
+    """Header part of sign-packet acceptance (magic + coordinate count).
+    The single source of the predicate — shared by the jnp reference
+    verify below and the kernel-fold verify in ``repro.core.bitchannel``
+    so the two acceptance paths cannot drift apart."""
+    return ((sign_words[..., 0] == fmt.SIGN_MAGIC)
+            & (sign_words[..., 3] == jnp.uint32(n)))
+
+
+def mod_header_ok(mod_words: Array, *, n: int, bits: int) -> Array:
+    """Header part of modulus-packet acceptance (magic, n, bit width)."""
+    return ((mod_words[..., 0] == fmt.MOD_MAGIC)
+            & (mod_words[..., 3] == jnp.uint32(n))
+            & (mod_words[..., 4] == jnp.uint32(bits)))
+
+
 def verify_sign_words(sign_words: Array, *, n: int) -> Array:
     """PS-side acceptance of a (possibly bit-flipped) sign packet: magic,
     coordinate count, and the xor-fold CRC.  Batched over leading axes."""
-    return ((sign_words[..., 0] == fmt.SIGN_MAGIC)
-            & (sign_words[..., 3] == jnp.uint32(n))
-            & fmt.verify_frame(sign_words))
+    return sign_header_ok(sign_words, n=n) & fmt.verify_frame(sign_words)
 
 
 def verify_mod_words(mod_words: Array, *, n: int, bits: int) -> Array:
     """PS-side acceptance of a modulus packet (magic, n, bit width, CRC)."""
-    return ((mod_words[..., 0] == fmt.MOD_MAGIC)
-            & (mod_words[..., 3] == jnp.uint32(n))
-            & (mod_words[..., 4] == jnp.uint32(bits))
+    return (mod_header_ok(mod_words, n=n, bits=bits)
             & fmt.verify_frame(mod_words))
+
+
+def sign_payload(sign_words: Array) -> Array:
+    """Payload word region of a framed sign packet (header/CRC stripped).
+    Batched over leading axes — the (K, Ws) buffer view the decode-once
+    aggregation kernel consumes without per-client unpacking."""
+    return sign_words[..., fmt.SIGN_HEADER_WORDS:-fmt.CRC_WORDS]
+
+
+def mod_payload(mod_words: Array) -> Array:
+    """Payload word region of a framed modulus packet."""
+    return mod_words[..., fmt.MOD_HEADER_WORDS:-fmt.CRC_WORDS]
+
+
+def mod_header_ranges(mod_words: Array) -> tuple:
+    """(g_min, g_max) bitcast back out of the modulus header — the only
+    per-client decode the packed-domain PS pass performs (O(K) words;
+    the payloads go straight to the accumulation kernel).  On a damaged
+    header the values are garbage, exactly like the full decode — they
+    are only *used* when the packet verified."""
+    return (fmt.word_to_f32(mod_words[..., 5]),
+            fmt.word_to_f32(mod_words[..., 6]))
 
 
 def restamp_sign_retx(sign_words: Array, attempt) -> Array:

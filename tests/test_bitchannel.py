@@ -257,9 +257,10 @@ def test_retx_rescues_clients_and_their_contribution():
 def test_tree_retx_resends_pristine_payload(monkeypatch):
     """A rescued client's accepted payload must be the re-encoded
     *original* words, not the first attempt's corrupted receive.  Masks
-    are scripted: the first sign transmission flips one bit of client 0
-    (CRC fails), the retransmission is clean — the aggregate must then
-    be bit-identical to an entirely clean channel."""
+    are scripted through the fused corrupt+fold seam the tree pass uses
+    (ops.corrupt_fold_words): the first sign transmission flips one bit
+    of client 0 (CRC fails), the retransmission is clean — the aggregate
+    must then be bit-identical to an entirely clean channel."""
     from repro.wire import corrupt as WC_mod
     k = 4
     grads = _grads(k, 96, seed=30)
@@ -271,14 +272,14 @@ def test_tree_retx_resends_pristine_payload(monkeypatch):
 
     calls = {'n': 0}
 
-    def fake_corrupt(kk, words, ber):
+    def fake_corrupt_fold(kk, words, ber, **kw):
         calls['n'] += 1
         mask = jnp.zeros_like(words)
         if calls['n'] == 2:      # the first sign transmission's leaf
             mask = mask.at[0, 0].set(jnp.uint32(1 << 7))
-        return words ^ mask, mask
+        return words ^ mask, fmt.xor_fold(mask), WC_mod.count_flips(mask)
 
-    monkeypatch.setattr(WC_mod, 'corrupt_words', fake_corrupt)
+    monkeypatch.setattr(TR.kops, 'corrupt_fold_words', fake_corrupt_fold)
     monkeypatch.setattr(WC_mod, 'flip_mask',
                         lambda kk, shape, ber: jnp.zeros(shape, jnp.uint32))
     run = lambda: TR.spfl_aggregate_tree(tree, gbar_tree, q, p, FL, key,

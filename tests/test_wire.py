@@ -168,9 +168,20 @@ def test_measured_bits_close_to_analytic():
 
 # ---------------------------------------------------------------------------
 # packed-vs-analytic transport equivalence (the headline test)
+#
+# The decode-once kernel recovers the identical signs and knob indices
+# (integer domain: bit-exact, pinned below and in the decode-once parity
+# tests), but its fused f32 mul+add chains get FMA-contracted by the
+# compiler — one fewer rounding than the uncompiled analytic ops.  The
+# aggregates therefore agree to a couple of ulp, not bit-for-bit; _ULP
+# pins that bound (a real decode bug — wrong knob, wrong weight, wrong
+# client — shows up at the knob-step scale, ~1e-2, six orders above it).
 # ---------------------------------------------------------------------------
 
-def test_spfl_flat_packed_bit_exact():
+_ULP = 3e-8
+
+
+def test_spfl_flat_packed_matches_analytic():
     grads = _grads()
     gbar = jnp.abs(_grads(seed=1)[0])
     q = jnp.linspace(0.4, 0.95, K)
@@ -180,21 +191,26 @@ def test_spfl_flat_packed_bit_exact():
         ga, da = TR.spfl_aggregate(grads, gbar, q, p, 3, 64, k)
         gp, dp = TR.spfl_aggregate(grads, gbar, q, p, 3, 64, k,
                                    wire='packed')
-        assert jnp.array_equal(ga, gp)
+        np.testing.assert_allclose(np.asarray(ga), np.asarray(gp),
+                                   atol=_ULP, rtol=0)
         assert jnp.array_equal(da.sign_ok, dp.sign_ok)
         assert float(dp.payload_bits) == fmt.measured_uplink_bits(L, 3, K)
+        # the packed path also surfaces packed-domain sign votes
+        assert dp.sign_votes is not None and dp.sign_votes.shape == (L,)
+        assert da.sign_votes is None
 
 
-def test_error_free_flat_packed_bit_exact():
+def test_error_free_flat_packed_matches_analytic():
     grads = _grads(seed=3)
     k = jax.random.PRNGKey(9)
     ga, _ = TR.error_free_aggregate(grads, FL, k)
     gp, dp = TR.error_free_aggregate(grads, FL, k, wire='packed')
-    assert jnp.array_equal(ga, gp)
+    np.testing.assert_allclose(np.asarray(ga), np.asarray(gp),
+                               atol=_ULP, rtol=0)
     assert float(dp.payload_bits) == fmt.measured_uplink_bits(L, 3, K)
 
 
-def test_spfl_tree_packed_bit_exact():
+def test_spfl_tree_packed_matches_analytic():
     grads = _grads(seed=4)
     gbar = jnp.abs(_grads(seed=5)[0])
     tree = {'a': grads[:, :1000].reshape(K, 10, 100), 'b': grads[:, 1000:]}
@@ -206,19 +222,37 @@ def test_spfl_tree_packed_bit_exact():
     gp, _, dp = TR.spfl_aggregate_tree(tree, gbar_tree, q, p, FL, k,
                                        wire='packed')
     for xa, xp in zip(jax.tree.leaves(ga), jax.tree.leaves(gp)):
-        assert jnp.array_equal(xa, xp)
+        np.testing.assert_allclose(np.asarray(xa), np.asarray(xp),
+                                   atol=_ULP, rtol=0)
     assert float(dp.payload_bits) > float(da.payload_bits)      # framing
     assert float(dp.payload_bits) < 1.05 * float(da.payload_bits)
 
 
-def test_error_free_tree_packed_bit_exact():
+def test_error_free_tree_packed_matches_analytic():
     grads = _grads(seed=6)
     tree = {'a': grads[:, :512], 'b': grads[:, 512:]}
     k = jax.random.PRNGKey(13)
     ga, _, _ = TR.error_free_aggregate_tree(tree, FL, k)
     gp, _, _ = TR.error_free_aggregate_tree(tree, FL, k, wire='packed')
     for xa, xp in zip(jax.tree.leaves(ga), jax.tree.leaves(gp)):
-        assert jnp.array_equal(xa, xp)
+        np.testing.assert_allclose(np.asarray(xa), np.asarray(xp),
+                                   atol=_ULP, rtol=0)
+
+
+def test_materialize_wire_reference_roundtrip_exact():
+    """The retained unpack-per-client reference round-trip
+    (TR.materialize_wire / TR.decode_wire) is exact: knobs, ±1 signs and
+    the bitcast range survive bit-for-bit, and the measured size is the
+    real buffer size."""
+    grads = _grads(seed=8)
+    qg = TR._per_client_quantize(grads, 3, jax.random.PRNGKey(17))
+    rec, measured, crc_ok = TR.materialize_wire(qg, round_idx=4)
+    assert jnp.array_equal(rec.qidx, qg.qidx)
+    assert jnp.array_equal(rec.sign, jnp.where(qg.sign == 0, 1, qg.sign))
+    assert jnp.array_equal(rec.g_min, qg.g_min)
+    assert jnp.array_equal(rec.g_max, qg.g_max)
+    assert bool(jnp.all(crc_ok))
+    assert measured == fmt.measured_uplink_bits(L, 3, K)
 
 
 def test_fl_config_wire_switch_is_plumbed():
@@ -229,7 +263,8 @@ def test_fl_config_wire_switch_is_plumbed():
     fl_packed = dataclasses.replace(FL, wire='packed')
     ga, da = TR.error_free_aggregate(grads, FL, k)
     gp, dp = TR.error_free_aggregate(grads, fl_packed, k)
-    assert jnp.array_equal(ga, gp)
+    np.testing.assert_allclose(np.asarray(ga), np.asarray(gp),
+                               atol=_ULP, rtol=0)
     assert float(dp.payload_bits) != float(da.payload_bits)
 
 
