@@ -1,7 +1,11 @@
 """§IV-C complexity analysis — allocator wall-time vs device count K.
 
 Derived: solver time per call for the SCA-based Algorithm 1 vs the
-low-complexity §IV-D barrier method (paper: O(K^3.5) vs O(K m)).
+low-complexity §IV-D barrier method (paper: O(K^3.5) vs O(K m)).  The
+``alternating`` wall-clock-vs-K rows are the tracked perf baseline for
+the SCA hot loop (BENCH_allocation.json via ``run.py --json``) — the
+bit-count hoist in ``AllocationProblem.sign_bits``/``mod_bits`` lands
+here.  BENCH_SMOKE=1 shrinks the K sweep.
 """
 from __future__ import annotations
 
@@ -9,7 +13,7 @@ import time
 
 import numpy as np
 
-from common import emit
+from common import SMOKE, emit
 
 import jax
 from repro.configs.base import FLConfig
@@ -32,7 +36,7 @@ def _problem(k, seed=0):
 
 
 def main() -> None:
-    for k in (10, 20, 40, 80):
+    for k in ((10, 20) if SMOKE else (10, 20, 40, 80)):
         prob = _problem(k)
         for method in ('alternating', 'barrier'):
             reps = 1 if method == 'alternating' else 3

@@ -150,6 +150,55 @@ def main() -> None:
     if not SMOKE:
         assert ratio <= 2.0, ratio
 
+    # --------------- baselines through the shared calibration pipeline
+    # dds/onebit/scheduling stay analytic (no buffers), but under
+    # channel='bitlevel' their single-packet success draws route through
+    # bitchannel.calibrated_success_prob — same ber_for_success inverse,
+    # same fold-pass forward model, same floors — so their packet-fate
+    # statistics are apples-to-apples with the materialized spfl rounds
+    # above.  The calibration residual is deterministic: identity to f32
+    # rounding at operating points, 2^-32 floor below the fold's reach.
+    qgrid = jnp.concatenate([jnp.linspace(1e-3, 0.999, 64),
+                             jnp.asarray([0.0, 1e-12, 1.0])])
+    for name, nb in (('dds', kl * (bits + 1) + fl.b0_bits),
+                     ('onebit', kl),
+                     ('scheduling', kl * (bits + 1) + fl.b0_bits)):
+        qcal = BC.calibrated_success_prob(qgrid, nb)
+        mid = float(jnp.max(jnp.abs(qcal[:64] - qgrid[:64])))
+        floor = float(qcal[64])                  # image of q = 0
+        emit(f'bitchannel_calibration_{name}', 0.0,
+             f'packet={nb}b max|cal-q|={mid:.2e} over q in [1e-3,.999]; '
+             f'floor(q=0)={floor:.2e} (the 2^-32 fold miss rate)')
+        if not SMOKE:
+            assert mid < 5e-4, (name, mid)
+
+    # sampled: the bitlevel draw reproduces the bernoulli accept rate
+    fl_bit = FLConfig(channel='bitlevel')
+    beta8 = jnp.full((8,), 1.0 / 8)
+    p_w8 = jnp.full((8,), fl.tx_power_w)
+    # pick gains putting the dds success prob mid-range
+    lo, hi = 1e-22, 1e-10
+    nb = kl * (fl.quant_bits + 1) + fl.b0_bits
+    for _ in range(60):
+        mid_g = np.sqrt(lo * hi)
+        qm = float(jnp.mean(TR.single_packet_success_prob(
+            beta8, p_w8, jnp.full((8,), mid_g), nb, fl)))
+        lo, hi = (mid_g, hi) if qm < 0.7 else (lo, mid_g)
+    gains8 = jnp.full((8,), np.sqrt(lo * hi))
+    accept = {}
+    for tag, flc in (('bernoulli', fl), ('bitlevel', fl_bit)):
+        run = jax.jit(lambda kk, c=flc: TR.dds_aggregate(
+            grads, beta8, gains8, p_w8, c, kk)[1].accepted)
+        oks = jax.vmap(run)(jax.random.split(key, trials))
+        accept[tag] = float(jnp.mean(oks.astype(jnp.float32)))
+    dacc = abs(accept['bernoulli'] - accept['bitlevel'])
+    emit('bitchannel_dds_accept_rates', 0.0,
+         f'bernoulli={accept["bernoulli"]:.3f} '
+         f'bitlevel={accept["bitlevel"]:.3f} (|diff|={dacc:.3f}, '
+         f'CLT ~ {3.0 * np.sqrt(0.25 / (8 * trials)):.3f})')
+    if not SMOKE:
+        assert dacc < 3.0 * np.sqrt(0.25 / (8 * trials)) + 0.01, accept
+
 
 if __name__ == '__main__':
     main()

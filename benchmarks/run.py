@@ -8,7 +8,11 @@ Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.py).
 
 ``--json`` writes one ``BENCH_<tag>.json`` per executed suite into the
 repo root — the tracked perf-trajectory baseline (rows + the environment
-they were measured in), so perf PRs diff numbers instead of prose.
+they were measured in), so perf PRs diff numbers instead of prose.  The
+top-level ``rows`` are always the latest run; every run also appends a
+dated entry (keyed by git SHA — re-running at the same SHA replaces its
+entry) to the ``history`` list, so BENCH files accumulate the perf
+trajectory across PRs instead of overwriting it.
 Scale via BENCH_ROUNDS / BENCH_DEVICES / BENCH_PER_DEVICE / BENCH_FULL=1;
 BENCH_SMOKE=1 shrinks dims/trials for the CI kernel-shape smoke (perf
 assertions are skipped there).
@@ -18,6 +22,7 @@ from __future__ import annotations
 import json
 import os
 import platform
+import subprocess
 import sys
 import time
 import traceback
@@ -39,17 +44,46 @@ SUITES = [
     ('kernels', 'bench_kernels'),            # Pallas hot path
     ('wire', 'bench_wire'),                  # materialized packet layer
     ('bitchannel', 'bench_bitchannel'),      # CRC-driven erasures + retx
+    ('distributed', 'bench_distributed'),    # sharded packed collective
     ('roofline', 'roofline'),                # deliverable (g)
 ]
 
 _ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), '..'))
 
 
+def _git_sha() -> str:
+    try:
+        return subprocess.check_output(
+            ['git', 'rev-parse', '--short', 'HEAD'], cwd=_ROOT,
+            text=True, stderr=subprocess.DEVNULL).strip()
+    except Exception:
+        return 'unknown'
+
+
+def _load_history(path: str) -> list:
+    """Prior runs of this suite; a pre-history file's top-level rows
+    become its first entry so no measurement is ever dropped."""
+    if not os.path.exists(path):
+        return []
+    try:
+        with open(path) as f:
+            old = json.load(f)
+    except Exception:
+        return []
+    history = old.get('history', [])
+    if not history and old.get('rows'):
+        history = [{'date': 'pre-history', 'sha': 'unknown',
+                    'rows': old['rows'], 'elapsed_s': old.get('elapsed_s'),
+                    'env': old.get('env')}]
+    return history
+
+
 def _write_json(tag: str, rows, elapsed_s: float) -> str:
     import jax
     import common
-    payload = {
-        'suite': tag,
+    entry = {
+        'date': time.strftime('%Y-%m-%d'),
+        'sha': _git_sha(),
         'rows': rows,
         'elapsed_s': round(elapsed_s, 1),
         'env': {
@@ -61,6 +95,11 @@ def _write_json(tag: str, rows, elapsed_s: float) -> str:
         },
     }
     path = os.path.join(_ROOT, f'BENCH_{tag}.json')
+    history = _load_history(path)
+    if entry['sha'] != 'unknown':        # dedup re-runs at the same commit
+        history = [h for h in history if h.get('sha') != entry['sha']]
+    history = history + [entry]
+    payload = {'suite': tag, **entry, 'history': history}
     with open(path, 'w') as f:
         json.dump(payload, f, indent=1)
         f.write('\n')

@@ -242,7 +242,22 @@ class FLConfig:
     individual bits of the materialized buffers at a BER calibrated to
     the same (q, p) and lets the xor-fold checksum drive erasures on the
     PS side (repro.core.bitchannel) — sign retransmissions then resend
-    real buffers and their measured bits land in ``payload_bits``.
+    real buffers and their measured bits land in ``payload_bits``.  The
+    analytic baselines (dds/onebit/scheduling) honor the knob too: their
+    single-packet success draws route through the same BER calibration
+    (``bitchannel.calibrated_success_prob``) without materializing
+    buffers, so cross-framework comparisons share one channel model.
+
+    ``collective``: how the packed-wire cross-client reduction lowers
+    when the client axis is mesh-sharded.  'gather' (default) feeds the
+    full (K, W) word buffers to one decode-once kernel launch — the
+    right shape on one chip, but GSPMD all-gathers every client's packed
+    payload on a sharded mesh.  'sharded' runs the decode-once
+    accumulation shard-locally over each device's K_local clients and
+    finishes with a single f32 psum of the n-coordinate partials
+    (``kernels.ops.spfl_aggregate_packed_sharded``), keeping the ~12x
+    packed-domain byte win at mesh scale; requires the caller to pass
+    the mesh through (training/distributed.py does).
     """
     n_devices: int = 20                  # K
     bandwidth_hz: float = 10e6           # B
@@ -271,6 +286,7 @@ class FLConfig:
     alpha_max: float = 1.0
     wire: str = 'analytic'               # analytic | packed
     channel: str = 'bernoulli'           # bernoulli | bitlevel
+    collective: str = 'gather'           # gather | sharded (packed wire)
 
     @property
     def noise_psd_w(self) -> float:

@@ -31,6 +31,7 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass
+from functools import cached_property
 from typing import NamedTuple, Tuple
 
 import numpy as np
@@ -83,11 +84,17 @@ class AllocationProblem:
     def n(self) -> int:
         return len(self.gains)
 
-    @property
+    # packet sizes as cached_property, not property: h_s/h_v sit inside
+    # the SCA surrogate's golden-section inner loop (~2 evals/iteration
+    # x 48 iterations x K clients x dual-bisection steps), so the bit
+    # counts are computed once per problem instead of once per eval
+    # (cached_property writes the instance __dict__ directly, which a
+    # frozen dataclass permits)
+    @cached_property
     def sign_bits(self) -> float:
         return float(self.dim)
 
-    @property
+    @cached_property
     def mod_bits(self) -> float:
         return float(self.dim * self.fl.quant_bits + self.fl.b0_bits)
 

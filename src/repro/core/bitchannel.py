@@ -62,19 +62,25 @@ from repro.wire import packets as wire_packets
 Array = jax.Array
 
 
-def verify_sign_fold(sign_words: Array, *, n: int) -> Array:
+def verify_sign_fold(sign_words: Array, *, n: int, mesh=None,
+                     client_axes=None) -> Array:
     """PS-side acceptance of (K, Ws) received sign buffers with the fold
     computed by the Pallas CRC kernel (kernels.ops.fold_words): the same
     predicate as ``wire.packets.verify_sign_words`` (whose header check
-    it shares), which stays as the jnp reference."""
+    it shares), which stays as the jnp reference.  ``mesh`` keeps the
+    fold shard-local when the client axis is sharded (the verdicts are
+    per-client partial CRC state; nothing cross-client to reduce)."""
     return (wire_packets.sign_header_ok(sign_words, n=n)
-            & (kops.fold_words(sign_words) == 0))
+            & (kops.fold_words(sign_words, mesh=mesh,
+                               client_axes=client_axes) == 0))
 
 
-def verify_mod_fold(mod_words: Array, *, n: int, bits: int) -> Array:
+def verify_mod_fold(mod_words: Array, *, n: int, bits: int, mesh=None,
+                    client_axes=None) -> Array:
     """Kernel-fold acceptance of (K, Wm) received modulus buffers."""
     return (wire_packets.mod_header_ok(mod_words, n=n, bits=bits)
-            & (kops.fold_words(mod_words) == 0))
+            & (kops.fold_words(mod_words, mesh=mesh,
+                               client_axes=client_axes) == 0))
 
 
 def fold_pass_prob(ber, n_words: int) -> Array:
@@ -109,6 +115,25 @@ def ber_for_success(prob, n_words: int) -> Array:
     return -0.5 * jnp.expm1(log_r / n_words)
 
 
+def calibrated_success_prob(prob, n_bits) -> Array:
+    """Analytic packet success probability -> the success probability the
+    shared bit-channel calibration *realizes* for a virtual packet of
+    ``ceil(n_bits / 32)`` payload words plus the CRC word: ``prob`` maps
+    through :func:`ber_for_success` and back through the fold-pass
+    forward model.
+
+    At operating points this is the identity to f32 rounding; what it
+    adds are the floors a real 32-bit fold has — success probabilities
+    at or below 2^-32 saturate (the BER clamps at 1/2), exactly as the
+    materialized packets experience.  Baseline frameworks whose uplinks
+    stay analytic (dds/onebit/scheduling single-packet draws) route
+    their success probabilities through this under
+    ``FLConfig.channel='bitlevel'`` so cross-framework comparisons share
+    one calibration pipeline without materializing their buffers."""
+    n_words = -(-int(n_bits) // wire_fmt.WORD_BITS) + wire_fmt.CRC_WORDS
+    return fold_pass_prob(ber_for_success(prob, n_words), n_words)
+
+
 class UplinkReport(NamedTuple):
     """What the PS saw of one round's uplink through the bit channel."""
     sign_words: Array    # (K, Ws) received sign buffers (accepted attempt)
@@ -125,7 +150,8 @@ class UplinkReport(NamedTuple):
 
 def transmit_uplink(key, sign_words: Array, mod_words: Array, q: Array,
                     p: Array, *, n: int, bits: int,
-                    n_retx: int = 0) -> UplinkReport:
+                    n_retx: int = 0, mesh=None,
+                    client_axes=None) -> UplinkReport:
     """Send every client's framed packet pair through the bit channel.
 
     ``sign_words`` (K, Ws) / ``mod_words`` (K, Wm) are the encoded
@@ -133,19 +159,30 @@ def transmit_uplink(key, sign_words: Array, mod_words: Array, q: Array,
     probabilities the flip rates are calibrated to.  Failed sign packets
     are re-encoded (same payload, fresh stamp) and resent up to
     ``n_retx`` times, each resend re-verified under a fresh channel draw.
+
+    ``mesh`` runs every buffer-shaped pass (corruption, CRC fold) shard-
+    locally over the client axes: the channel's counter PRF addresses
+    global bit indices, so the received bits, verdicts and flip counts
+    are identical to the gathered draw while no (K, W) buffer ever
+    crosses devices — the partial CRC/erasure state of the sharded
+    collective (everything else here is per-client rowwise arithmetic
+    GSPMD keeps sharded on its own).
     """
     ws = sign_words.shape[-1]
     wm = mod_words.shape[-1]
     ber_s = ber_for_success(q, ws)
     ber_v = ber_for_success(p, wm)
     ks, kv = jax.random.split(key)
+    shard = dict(mesh=mesh, client_axes=client_axes)
 
     # fused corrupt+fold (one pass, no 32x random tensor) ...
-    sw, _, sign_flips = kops.corrupt_fold_words(ks, sign_words, ber_s)
-    mw, _, mod_flips = kops.corrupt_fold_words(kv, mod_words, ber_v)
+    sw, _, sign_flips = kops.corrupt_fold_words(ks, sign_words, ber_s,
+                                                **shard)
+    mw, _, mod_flips = kops.corrupt_fold_words(kv, mod_words, ber_v,
+                                               **shard)
     # ... and the PS folds what it received through the CRC kernel
-    sign_ok = verify_sign_fold(sw, n=n)
-    mod_ok = verify_mod_fold(mw, n=n, bits=bits)
+    sign_ok = verify_sign_fold(sw, n=n, **shard)
+    mod_ok = verify_mod_fold(mw, n=n, bits=bits, **shard)
     sign_crc_ok = sign_ok
 
     retx_attempts = jnp.zeros(q.shape, jnp.int32)
@@ -153,8 +190,8 @@ def transmit_uplink(key, sign_words: Array, mod_words: Array, q: Array,
         failed = ~sign_ok
         resent = wire_packets.restamp_sign_retx(sign_words, attempt)
         rx, _, flips = kops.corrupt_fold_words(
-            jax.random.fold_in(ks, attempt), resent, ber_s)
-        ok = verify_sign_fold(rx, n=n)
+            jax.random.fold_in(ks, attempt), resent, ber_s, **shard)
+        ok = verify_sign_fold(rx, n=n, **shard)
         sw = jnp.where((failed & ok)[..., None], rx, sw)
         sign_flips = sign_flips + jnp.where(failed, flips, 0)
         retx_attempts = retx_attempts + failed.astype(jnp.int32)

@@ -55,7 +55,26 @@ stops being lossless — the buffers take calibrated per-bit flips
 xor-fold verification outcomes of the damaged words, with the marginal
 packet-error rates still matching eq. (11)/(13).  ``spfl_retx`` then
 resends *materialized* sign buffers (same payload, fresh header stamp,
-fresh draw) and the diagnostics carry per-client CRC state.
+fresh draw) and the diagnostics carry per-client CRC state.  The
+analytic baselines (dds/onebit/scheduling) honor the knob too: their
+single-packet success probabilities route through the same calibration
+(``bitchannel.calibrated_success_prob``) so all frameworks share one
+channel model in cross-framework comparisons.
+
+Sharded collective (``collective='sharded'``, packed wire + a mesh):
+the decode-once kernel consumes full (K, W) buffers, which GSPMD can
+only satisfy on a client-sharded mesh by all-gathering every client's
+packed payload — forfeiting the ~12x byte win at exactly the scale it
+targets.  With ``collective='sharded'`` the packed transports instead
+run the decode-once pass shard-locally over each device's K_local
+clients and finish with ONE f32 psum of the n-coordinate partials
+(``kernels.ops.spfl_aggregate_packed_sharded``): per leaf the only
+cross-device traffic is n floats (plus n int32 vote partials on the
+flat path) instead of K*W payload words.  Integer state (votes, CRC
+folds, flip counts) is bit-exact vs the gathered path — the bit
+channel's counter PRF addresses global bit indices, so even the
+corrupted buffers are identical — and the f32 aggregate differs only
+by the documented few-ulp partial-sum reassociation.
 """
 from __future__ import annotations
 
@@ -156,6 +175,40 @@ def _seq_client_mean(vals: Array) -> Array:
 # ---------------------------------------------------------------------------
 
 WIRE_KINDS = ('analytic', 'packed')
+COLLECTIVE_KINDS = ('gather', 'sharded')
+
+
+def _resolve_collective(collective: Optional[str], wire: str, mesh,
+                        client_axes) -> Tuple[str, Optional[tuple]]:
+    """Validate the collective knob: 'sharded' needs the packed wire and
+    a mesh to shard over.  Returns (collective, resolved client_axes)."""
+    collective = 'gather' if collective is None else collective
+    assert collective in COLLECTIVE_KINDS, collective
+    if collective == 'sharded':
+        if wire != 'packed':
+            raise ValueError("collective='sharded' requires wire='packed'")
+        if mesh is None:
+            raise ValueError("collective='sharded' requires a mesh "
+                             "(training/distributed.py passes it through)")
+        if client_axes is None:
+            client_axes = kops.default_client_axes(mesh)
+        return collective, tuple(client_axes)
+    return collective, None
+
+
+def _client_constrain(x: Array, mesh, client_axes) -> Array:
+    """Pin a leading-K array to the client-sharded layout so GSPMD hands
+    the sharded collective already-local payload rows (skipped when the
+    mesh cannot divide K — the shard_map pad handles raggedness)."""
+    axes = client_axes if len(client_axes) > 1 else client_axes[0]
+    shards = 1
+    for a in client_axes:
+        shards *= mesh.shape[a]
+    if x.shape[0] % shards != 0:
+        return x
+    spec = jax.sharding.PartitionSpec(axes, *([None] * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(mesh, spec))
 
 
 def encode_wire(qg: QuantizedGradient, round_idx: int = 0
@@ -212,7 +265,9 @@ def materialize_wire(qg: QuantizedGradient, round_idx: int = 0
 def spfl_aggregate(grads: Array, gbar: Array, q: Array, p: Array,
                    bits: int, b0: int, key, n_retx: int = 0,
                    wire: str = 'analytic', round_idx=0,
-                   channel: str = 'bernoulli'
+                   channel: str = 'bernoulli',
+                   collective: str = 'gather', mesh=None,
+                   client_axes: Optional[tuple] = None
                    ) -> Tuple[Array, TransportDiagnostics]:
     """Eq. (15)-(17).  grads: (K, l); gbar: (l,) or (K, l); q, p: (K,).
 
@@ -228,11 +283,21 @@ def spfl_aggregate(grads: Array, gbar: Array, q: Array, p: Array,
     failed sign packets are *resent as real buffers* (same payload, fresh
     header stamp, fresh channel draw) up to ``n_retx`` times, and the
     measured resend bits land in ``payload_bits``.
+
+    ``collective='sharded'`` (packed wire + ``mesh``) keeps every
+    (K, W)-shaped pass shard-local over the mesh's client axes — the
+    decode-once aggregation becomes per-device partials + one psum, the
+    bit channel corrupts and CRC-folds each shard's own rows — so no
+    client payload is ever all-gathered (see the module docstring for
+    the exactness contract vs 'gather').
     """
     assert wire in WIRE_KINDS, wire
     assert channel in chan.CHANNEL_KINDS, channel
     if channel == 'bitlevel' and wire != 'packed':
         raise ValueError("channel='bitlevel' requires wire='packed'")
+    collective, client_axes = _resolve_collective(collective, wire, mesh,
+                                                  client_axes)
+    sharded = collective == 'sharded'
     K, l = grads.shape
     kq, ko = jax.random.split(key)
     qg = _per_client_quantize(grads, bits, kq)
@@ -242,9 +307,14 @@ def spfl_aggregate(grads: Array, gbar: Array, q: Array, p: Array,
     sign_words = mod_words = None
     if wire == 'packed':
         sign_words, mod_words, measured = encode_wire(qg, round_idx)
+        if sharded:
+            sign_words = _client_constrain(sign_words, mesh, client_axes)
+            mod_words = _client_constrain(mod_words, mesh, client_axes)
     if channel == 'bitlevel':
-        rep = bitchannel.transmit_uplink(ko, sign_words, mod_words, q, p,
-                                         n=l, bits=bits, n_retx=n_retx)
+        rep = bitchannel.transmit_uplink(
+            ko, sign_words, mod_words, q, p, n=l, bits=bits,
+            n_retx=n_retx, mesh=mesh if sharded else None,
+            client_axes=client_axes)
         sign_words, mod_words = rep.sign_words, rep.mod_words
         sign_ok, mod_ok = rep.sign_ok, rep.mod_ok
         retx = jnp.sum(rep.retx_attempts).astype(jnp.float32)
@@ -274,13 +344,21 @@ def spfl_aggregate(grads: Array, gbar: Array, q: Array, p: Array,
     if wire == 'packed':
         # decode-once: O(K) header words, then ONE fused kernel pass over
         # the K stacked payload buffers — no per-client unpack, no (K, l)
-        # float intermediate (kernels.ops.spfl_aggregate_packed)
+        # float intermediate (kernels.ops.spfl_aggregate_packed); under
+        # 'sharded' the pass is per-device partials + one psum instead
         g_min, g_max = wire_packets.mod_header_ranges(mod_words)
-        acc, votes = kops.spfl_aggregate_packed(
-            wire_packets.sign_payload(sign_words),
-            wire_packets.mod_payload(mod_words),
-            jnp.asarray(gbar, jnp.float32), g_min, g_max, mod_ok, w,
-            sign_ok, l, bits)
+        if sharded:
+            acc, votes = kops.spfl_aggregate_packed_sharded(
+                wire_packets.sign_payload(sign_words),
+                wire_packets.mod_payload(mod_words),
+                jnp.asarray(gbar, jnp.float32), g_min, g_max, mod_ok, w,
+                sign_ok, l, bits, mesh=mesh, client_axes=client_axes)
+        else:
+            acc, votes = kops.spfl_aggregate_packed(
+                wire_packets.sign_payload(sign_words),
+                wire_packets.mod_payload(mod_words),
+                jnp.asarray(gbar, jnp.float32), g_min, g_max, mod_ok, w,
+                sign_ok, l, bits)
         ghat = acc / K
         if votes is not None:
             extras['sign_votes'] = votes
@@ -301,6 +379,25 @@ def spfl_aggregate(grads: Array, gbar: Array, q: Array, p: Array,
 # baselines (flat)
 # ---------------------------------------------------------------------------
 
+def _baseline_packet_fate(key, q: Array, n_bits: int, fl: FLConfig
+                          ) -> Array:
+    """One success draw per client for the single-packet baselines.
+
+    ``fl.channel='bernoulli'`` draws straight from the analytic q;
+    'bitlevel' first routes q through the shared bit-channel calibration
+    (``bitchannel.calibrated_success_prob`` for a virtual packet of
+    ``n_bits``) and draws through the shared attempt machinery — the
+    payload stays analytic (nothing materialized), but the packet fate
+    now carries the same calibration floors as the materialized spfl
+    transports, making cross-framework bitlevel comparisons
+    apples-to-apples."""
+    if fl.channel == 'bitlevel':
+        q = bitchannel.calibrated_success_prob(q, n_bits)
+        ok, _ = chan.simulate_attempts(key, q, 0)
+        return ok
+    return jax.random.uniform(key, jnp.shape(q)) < q
+
+
 def dds_aggregate(grads: Array, beta: Array, gains: Array, p_w: Array,
                   fl: FLConfig, key) -> Tuple[Array, TransportDiagnostics]:
     """[29]: one packet of l(b+1)+b0 bits; failures discarded; mean over
@@ -310,7 +407,7 @@ def dds_aggregate(grads: Array, beta: Array, gains: Array, p_w: Array,
     qg = _per_client_quantize(grads, fl.quant_bits, kq)
     n_bits = l * (fl.quant_bits + 1) + fl.b0_bits
     q = single_packet_success_prob(beta, p_w, gains, n_bits, fl)
-    ok = jax.random.uniform(ko, (K,)) < q
+    ok = _baseline_packet_fate(ko, q, n_bits, fl)
     vals = qg.sign.astype(jnp.float32) * dequantize_modulus(qg)
     denom = jnp.maximum(jnp.sum(ok.astype(jnp.float32)), 1.0)
     ghat = jnp.sum(jnp.where(ok[:, None], vals, 0.0), axis=0) / denom
@@ -326,7 +423,7 @@ def onebit_aggregate(grads: Array, beta: Array, gains: Array, p_w: Array,
     with modulus-carrying schemes."""
     K, l = grads.shape
     q = single_packet_success_prob(beta, p_w, gains, float(l), fl)
-    ok = jax.random.uniform(key, (K,)) < q
+    ok = _baseline_packet_fate(key, q, l, fl)
     scale = jnp.mean(jnp.abs(grads), axis=1, keepdims=True)    # (K, 1)
     vals = jnp.sign(grads) * scale
     denom = jnp.maximum(jnp.sum(ok.astype(jnp.float32)), 1.0)
@@ -354,7 +451,7 @@ def scheduling_aggregate(grads: Array, gains: Array, p_w: Array,
     qg = _per_client_quantize(grads, fl.quant_bits, kq)
     n_bits = l * (fl.quant_bits + 1) + fl.b0_bits
     q = single_packet_success_prob(beta, p_w, gains, n_bits, fl)
-    ok = (jax.random.uniform(ko, (K,)) < q) & sched
+    ok = _baseline_packet_fate(ko, q, n_bits, fl) & sched
     vals = qg.sign.astype(jnp.float32) * dequantize_modulus(qg)
     denom = jnp.maximum(jnp.sum(ok.astype(jnp.float32)), 1.0)
     ghat = jnp.sum(jnp.where(ok[:, None], vals, 0.0), axis=0) / denom
@@ -363,10 +460,15 @@ def scheduling_aggregate(grads: Array, gains: Array, p_w: Array,
 
 
 def error_free_aggregate(grads: Array, fl: FLConfig, key,
-                         wire: Optional[str] = None, round_idx=0
+                         wire: Optional[str] = None, round_idx=0,
+                         collective: Optional[str] = None, mesh=None,
+                         client_axes: Optional[tuple] = None
                          ) -> Tuple[Array, TransportDiagnostics]:
     wire = fl.wire if wire is None else wire
     assert wire in WIRE_KINDS, wire
+    collective, client_axes = _resolve_collective(
+        fl.collective if collective is None else collective, wire, mesh,
+        client_axes)
     K, l = grads.shape
     qg = _per_client_quantize(grads, fl.quant_bits, key)
     ok = jnp.ones((K,), bool)
@@ -376,11 +478,20 @@ def error_free_aggregate(grads: Array, fl: FLConfig, key,
         payload = jnp.asarray(measured, jnp.float32)
         ones = jnp.ones((K,), jnp.float32)
         g_min, g_max = wire_packets.mod_header_ranges(mod_words)
-        acc, votes = kops.spfl_aggregate_packed(
-            wire_packets.sign_payload(sign_words),
-            wire_packets.mod_payload(mod_words),
-            jnp.zeros((l,), jnp.float32), g_min, g_max, ones, ones, ok,
-            l, fl.quant_bits)
+        if collective == 'sharded':
+            acc, votes = kops.spfl_aggregate_packed_sharded(
+                _client_constrain(wire_packets.sign_payload(sign_words),
+                                  mesh, client_axes),
+                _client_constrain(wire_packets.mod_payload(mod_words),
+                                  mesh, client_axes),
+                jnp.zeros((l,), jnp.float32), g_min, g_max, ones, ones,
+                ok, l, fl.quant_bits, mesh=mesh, client_axes=client_axes)
+        else:
+            acc, votes = kops.spfl_aggregate_packed(
+                wire_packets.sign_payload(sign_words),
+                wire_packets.mod_payload(mod_words),
+                jnp.zeros((l,), jnp.float32), g_min, g_max, ones, ones,
+                ok, l, fl.quant_bits)
         ghat = acc / K
         if votes is not None:
             extras['sign_votes'] = votes
@@ -414,7 +525,8 @@ def tree_client_stats(grads_tree) -> dict:
     return {'g2': g2, 'g_min': g_min, 'g_max': g_max, 'dim': dim}
 
 
-def _bitlevel_tree_pass(key, word_leaves, ber, frame_words: int, k: int):
+def _bitlevel_tree_pass(key, word_leaves, ber, frame_words: int, k: int,
+                        mesh=None, client_axes=None):
     """One transmission of every client's *virtual* framed packet whose
     payload words are scattered across per-leaf buffers (K, W_i).
 
@@ -426,6 +538,10 @@ def _bitlevel_tree_pass(key, word_leaves, ber, frame_words: int, k: int):
     accumulating the mask fold across leaves computes exactly the
     xor-fold verification the flat path runs on real buffers.
 
+    ``mesh`` keeps each leaf's corruption shard-local (same bits — the
+    counter PRF is globally indexed); the (K, frame_words) framing draw
+    stays unsharded, it is O(K) words.
+
     Returns (corrupted leaf buffers, verify_ok (K,), flips (K,)).
     """
     fold = jnp.zeros((k,), jnp.uint32)
@@ -435,7 +551,8 @@ def _bitlevel_tree_pass(key, word_leaves, ber, frame_words: int, k: int):
         # fused corrupt + mask-fold + popcount in one pass (the Pallas
         # corruption kernel on TPU, its bit-identical jnp twin elsewhere)
         cw, f, nf = kops.corrupt_fold_words(
-            jax.random.fold_in(key, i), wl, ber)
+            jax.random.fold_in(key, i), wl, ber, mesh=mesh,
+            client_axes=client_axes)
         rx.append(cw)
         fold = fold ^ f
         flips = flips + nf
@@ -449,7 +566,9 @@ def _bitlevel_tree_pass(key, word_leaves, ber, frame_words: int, k: int):
 def spfl_aggregate_tree(grads_tree, gbar_tree, q: Array, p: Array,
                         fl: FLConfig, key, stats: Optional[dict] = None,
                         n_retx: int = 0, wire: Optional[str] = None,
-                        channel: Optional[str] = None):
+                        channel: Optional[str] = None,
+                        collective: Optional[str] = None, mesh=None,
+                        client_axes: Optional[tuple] = None):
     """SP-FL over per-client gradient pytrees (leaves (K, ...)).
 
     The quantizer range, the packet outcomes and the 1/q weights are
@@ -462,10 +581,13 @@ def spfl_aggregate_tree(grads_tree, gbar_tree, q: Array, p: Array,
     over the (K, W) word buffers (``kernels.ops.spfl_aggregate_packed``)
     — no per-client unpack, no (K, d) float intermediate, and the
     ``uplink_reduce_dtype`` knob is subsumed (packed words are 4x
-    narrower than bf16 at b=3).  Caveat at mesh scale: the kernel wants
+    narrower than bf16 at b=3).  At mesh scale the gathered kernel wants
     the full (K, W) buffers on one device, so a sharded client axis gets
-    all-gathered — see the ROADMAP item on a sharded packed collective
-    (the analytic path keeps a jnp.sum reduce for exactly that reason).  The per-client framing (headers + b0
+    all-gathered; ``collective='sharded'`` (default ``fl.collective``,
+    needs ``mesh``) runs each leaf's decode-once pass shard-locally and
+    finishes with one n-float psum of the partials instead — the
+    analytic path keeps a jnp.sum reduce, which already lowers to one
+    all-reduce.  The per-client framing (headers + b0
     range + checksums) is one packet pair per client per round
     regardless of leaf count, so the measured ``payload_bits`` charges
     it once per client.
@@ -484,6 +606,10 @@ def spfl_aggregate_tree(grads_tree, gbar_tree, q: Array, p: Array,
     assert channel in chan.CHANNEL_KINDS, channel
     if channel == 'bitlevel' and wire != 'packed':
         raise ValueError("channel='bitlevel' requires wire='packed'")
+    collective, client_axes = _resolve_collective(
+        fl.collective if collective is None else collective, wire, mesh,
+        client_axes)
+    sharded = collective == 'sharded'
     if stats is None:
         stats = tree_client_stats(grads_tree)
     K = q.shape[0]
@@ -513,13 +639,19 @@ def spfl_aggregate_tree(grads_tree, gbar_tree, q: Array, p: Array,
                                  g_min[:, None], g_max[:, None])
         qgs.append(qg)
         if wire == 'packed':
-            sws.append(wire_fmt.pack_bits_ref(
-                wire_fmt.sign_to_bits(qg.sign), 1))
-            qws.append(wire_fmt.pack_bits_ref(qg.qidx, bits))
+            sw = wire_fmt.pack_bits_ref(wire_fmt.sign_to_bits(qg.sign), 1)
+            qw = wire_fmt.pack_bits_ref(qg.qidx, bits)
+            if sharded:
+                sw = _client_constrain(sw, mesh, client_axes)
+                qw = _client_constrain(qw, mesh, client_axes)
+            sws.append(sw)
+            qws.append(qw)
             payload_words += sws[-1].shape[-1] + qws[-1].shape[-1]
 
     # ---- channel: packet fate (and, bit-level, payload damage) ----
     extras = {}
+    shard_kw = dict(mesh=mesh if sharded else None,
+                    client_axes=client_axes)
     if channel == 'bitlevel':
         sign_frame = wire_fmt.SIGN_HEADER_WORDS + wire_fmt.CRC_WORDS
         mod_frame = wire_fmt.MOD_HEADER_WORDS + wire_fmt.CRC_WORDS
@@ -529,17 +661,17 @@ def spfl_aggregate_tree(grads_tree, gbar_tree, q: Array, p: Array,
         ber_v = bitchannel.ber_for_success(p, wm)
         ks, kv = jax.random.split(ko)
         qws, mod_ok, mod_flips = _bitlevel_tree_pass(
-            kv, qws, ber_v, mod_frame, K)
+            kv, qws, ber_v, mod_frame, K, **shard_kw)
         orig_sws = sws      # pristine payloads: retransmissions resend these
         sws, sign_ok, sign_flips = _bitlevel_tree_pass(
-            ks, sws, ber_s, sign_frame, K)
+            ks, sws, ber_s, sign_frame, K, **shard_kw)
         sign_crc_ok = sign_ok
         retx_k = jnp.zeros((K,), jnp.int32)
         for attempt in range(1, n_retx + 1):
             failed = ~sign_ok
             rx_a, ok_a, flips_a = _bitlevel_tree_pass(
                 jax.random.fold_in(ks, attempt), orig_sws, ber_s,
-                sign_frame, K)
+                sign_frame, K, **shard_kw)
             rescued = failed & ok_a
             sws = [jnp.where(rescued[:, None], a, r)
                    for a, r in zip(rx_a, sws)]
@@ -574,12 +706,22 @@ def spfl_aggregate_tree(grads_tree, gbar_tree, q: Array, p: Array,
             # payload words directly: one fused unpack->dequant->weight->
             # accumulate kernel launch per leaf, no K unpack passes and
             # no (K, d) float intermediate (the bf16 reduce is subsumed —
-            # the packed words are 4x narrower than bf16 at b=3)
+            # the packed words are 4x narrower than bf16 at b=3); under
+            # 'sharded' each device accumulates its local clients and
+            # ONE d-float psum finishes the leaf (no vote psum: the tree
+            # path discards votes, so the partial traffic stays d floats)
             d = qg.sign.shape[-1]
-            acc, _ = kops.spfl_aggregate_packed(
-                sws[i], qws[i],
-                gb.reshape(Kd, -1) if per_client_gb else gb.reshape(-1),
-                g_min, g_max, mod_ok, w, sign_ok, d, bits)
+            gb_leaf = (gb.reshape(Kd, -1) if per_client_gb
+                       else gb.reshape(-1))
+            if sharded:
+                acc, _ = kops.spfl_aggregate_packed_sharded(
+                    sws[i], qws[i], gb_leaf, g_min, g_max, mod_ok, w,
+                    sign_ok, d, bits, mesh=mesh, client_axes=client_axes,
+                    with_votes=False)
+            else:
+                acc, _ = kops.spfl_aggregate_packed(
+                    sws[i], qws[i], gb_leaf,
+                    g_min, g_max, mod_ok, w, sign_ok, d, bits)
             out.append((acc / Kd).reshape(shape[1:]))
             continue
         modulus = dequantize_modulus(qg)
@@ -617,11 +759,17 @@ def spfl_aggregate_tree(grads_tree, gbar_tree, q: Array, p: Array,
 
 def error_free_aggregate_tree(grads_tree, fl: FLConfig, key,
                               stats: Optional[dict] = None,
-                              wire: Optional[str] = None):
+                              wire: Optional[str] = None,
+                              collective: Optional[str] = None, mesh=None,
+                              client_axes: Optional[tuple] = None):
     """Quantized-but-lossless tree aggregation (arctic-480b fallback and
     the error-free baseline at LLM scale)."""
     wire = fl.wire if wire is None else wire
     assert wire in WIRE_KINDS, wire
+    collective, client_axes = _resolve_collective(
+        fl.collective if collective is None else collective, wire, mesh,
+        client_axes)
+    sharded = collective == 'sharded'
     if stats is None:
         stats = tree_client_stats(grads_tree)
     g_min, g_max = stats['g_min'], stats['g_max']
@@ -643,9 +791,17 @@ def error_free_aggregate_tree(grads_tree, fl: FLConfig, key,
             sw = wire_fmt.pack_bits_ref(wire_fmt.sign_to_bits(qg.sign), 1)
             qw = wire_fmt.pack_bits_ref(qg.qidx, bits)
             payload_words[0] += sw.shape[-1] + qw.shape[-1]
-            acc, _ = kops.spfl_aggregate_packed(
-                sw, qw, jnp.zeros((d,), jnp.float32), g_min, g_max,
-                ones, ones, ones, d, bits)
+            if sharded:
+                acc, _ = kops.spfl_aggregate_packed_sharded(
+                    _client_constrain(sw, mesh, client_axes),
+                    _client_constrain(qw, mesh, client_axes),
+                    jnp.zeros((d,), jnp.float32), g_min, g_max,
+                    ones, ones, ones, d, bits, mesh=mesh,
+                    client_axes=client_axes, with_votes=False)
+            else:
+                acc, _ = kops.spfl_aggregate_packed(
+                    sw, qw, jnp.zeros((d,), jnp.float32), g_min, g_max,
+                    ones, ones, ones, d, bits)
             return (acc / Kd).reshape(gleaf.shape[1:])
         signed = qg.sign.astype(jnp.float32) * dequantize_modulus(qg)
         # parallel reduce: sharded client axis -> one all-reduce

@@ -11,10 +11,12 @@ fused into one HBM pass (repro.wire.pack_kernel).
 """
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
 from repro.core.quantize import knob_step
 from repro.kernels import quantize_kernel as qk
@@ -27,6 +29,48 @@ Array = jax.Array
 
 def default_interpret() -> bool:
     return jax.default_backend() != 'tpu'
+
+
+# ---------------------------------------------------------------------------
+# mesh helpers for the sharded (client-axis) collectives
+# ---------------------------------------------------------------------------
+
+def default_client_axes(mesh) -> Tuple[str, ...]:
+    """Mesh axes that enumerate FL clients: every non-'model' axis
+    (('pod', 'data') on the multi-pod production mesh, ('data',) on the
+    single-pod and host meshes).  This is the single source of the
+    client-axis rule — launch.mesh.client_axes delegates here, so the
+    sharded collectives' offsets and the launch-side shardings cannot
+    drift apart."""
+    ca = tuple(a for a in mesh.axis_names if a != 'model')
+    return ca or tuple(mesh.axis_names)
+
+
+def _n_shards(mesh, client_axes) -> int:
+    out = 1
+    for a in client_axes:
+        out *= mesh.shape[a]
+    return out
+
+
+def _axes_arg(client_axes):
+    """PartitionSpec / collective axis argument for the client axes."""
+    return client_axes if len(client_axes) > 1 else client_axes[0]
+
+
+def _shard_row0(mesh, client_axes, k_local: int) -> Array:
+    """Inside shard_map: the global index of this shard's first client
+    row — the linearized client-axis position (row-major over the axis
+    tuple, matching how PartitionSpec((a, b)) blocks the leading dim)."""
+    idx = jnp.zeros((), jnp.uint32)
+    for a in client_axes:
+        idx = idx * jnp.uint32(mesh.shape[a]) \
+            + jax.lax.axis_index(a).astype(jnp.uint32)
+    return idx * jnp.uint32(k_local)
+
+
+def _pad_clients(x: Array, pad: int) -> Array:
+    return jnp.pad(x, ((0, pad),) + ((0, 0),) * (x.ndim - 1))
 
 
 def _to_tiles(flat: Array) -> Tuple[Array, int]:
@@ -165,7 +209,7 @@ def unpack_dequant_flat(sign_words: Array, qidx_words: Array, gbar: Array,
 def _spfl_aggregate_packed_jnp(sign_payload: Array, qidx_payload: Array,
                                gbar: Array, gmin: Array, gmax: Array,
                                mod_ok: Array, weight: Array, sign_ok: Array,
-                               n: int, bits: int
+                               n: int, bits: int, with_votes: bool
                                ) -> Tuple[Array, Array | None]:
     """Vectorized jnp twin of the decode-once kernel — the live path
     off-TPU, where interpret-mode Pallas is validation-only (same policy
@@ -189,7 +233,7 @@ def _spfl_aggregate_packed_jnp(sign_payload: Array, qidx_payload: Array,
     for i in range(1, k):
         acc = acc + contrib[i]
     votes = None
-    if k <= wk.MAX_VOTE_CLIENTS:
+    if with_votes:
         gate = jnp.asarray(sign_ok).reshape(k, 1).astype(jnp.int32)
         votes = jnp.sum(sbits.astype(jnp.int32) * gate, axis=0)
     return acc, votes
@@ -200,7 +244,8 @@ def spfl_aggregate_packed(sign_payload: Array, qidx_payload: Array,
                           mod_ok: Array, weight: Array, sign_ok: Array,
                           n: int, bits: int,
                           interpret: bool | None = None,
-                          use_kernel: bool | None = None
+                          use_kernel: bool | None = None,
+                          with_votes: bool | None = None
                           ) -> Tuple[Array, Array | None]:
     """Decode-once PS aggregation, eq. (15)-(17), straight from the
     packed domain: ONE kernel launch over a client grid consumes every
@@ -227,15 +272,22 @@ def spfl_aggregate_packed(sign_payload: Array, qidx_payload: Array,
     Dispatch: the Pallas kernel on TPU — or when ``use_kernel`` forces
     it (interpret-mode parity tests) — otherwise the vectorized jnp twin
     (interpret-mode Pallas on CPU is validation, not a fast path; same
-    policy as the transports' reference packers)."""
+    policy as the transports' reference packers).  ``with_votes=False``
+    skips all vote work (the tree transports discard votes; the sharded
+    collective uses it to keep the cross-shard psum to the f32 partials
+    alone); the default ``None`` computes votes whenever K fits the
+    32-client vote word."""
     interpret = default_interpret() if interpret is None else interpret
     if use_kernel is None:
         use_kernel = not interpret
+    k = sign_payload.shape[0]
+    if with_votes is None:
+        with_votes = True
+    with_votes = with_votes and k <= wk.MAX_VOTE_CLIENTS
     if not use_kernel:
         return _spfl_aggregate_packed_jnp(
             sign_payload, qidx_payload, gbar, gmin, gmax, mod_ok, weight,
-            sign_ok, n, bits)
-    k = sign_payload.shape[0]
+            sign_ok, n, bits, with_votes)
     g = wire_fmt.n_groups(n)
     g_pad = -(-g // wk.BLOCK_GROUPS) * wk.BLOCK_GROUPS
 
@@ -256,7 +308,6 @@ def spfl_aggregate_packed(sign_payload: Array, qidx_payload: Array,
     # quantize.knob_step — an in-kernel constant division would
     # strength-reduce to a reciprocal multiply and drift a ulp
     step = knob_step(col(gmin, jnp.float32), col(gmax, jnp.float32), bits)
-    with_votes = k <= wk.MAX_VOTE_CLIENTS
     acc, votes = wk.spfl_accumulate_2d(
         to_grid(sign_payload, 1), to_grid(qidx_payload, bits), gb,
         col(gmin, jnp.float32), step,
@@ -269,9 +320,102 @@ def spfl_aggregate_packed(sign_payload: Array, qidx_payload: Array,
     return acc.reshape(-1)[:n], votes_out
 
 
+def spfl_aggregate_packed_sharded(sign_payload: Array, qidx_payload: Array,
+                                  gbar: Array, gmin: Array, gmax: Array,
+                                  mod_ok: Array, weight: Array,
+                                  sign_ok: Array, n: int, bits: int, *,
+                                  mesh,
+                                  client_axes: Optional[tuple] = None,
+                                  with_votes: bool = True,
+                                  interpret: bool | None = None,
+                                  use_kernel: bool | None = None
+                                  ) -> Tuple[Array, Array | None]:
+    """Shard-local decode-once aggregation + one psum: the mesh-scale
+    form of :func:`spfl_aggregate_packed`.
+
+    The gathered form consumes the full (K, W) payload buffers in one
+    launch — the right shape on a single chip, but when the client axis
+    is sharded over ``client_axes`` GSPMD must all-gather every client's
+    packed payload first, forfeiting the packed-domain byte win exactly
+    where it matters (the uneven-resource uplink of PAPER.md §II).  This
+    wrapper instead ``shard_map``s the decode-once pass: every device
+    runs the accumulation kernel (or its jnp twin — same dispatch policy
+    as the gathered form) over only its *local* clients' (K_local, W)
+    words, then a single ``lax.psum`` over the client axes finishes the
+    client sum — the only cross-device traffic per call is the
+    n-coordinate f32 partial (plus an n-int32 vote partial when
+    ``with_votes``), vs the K*W-word all-gather of the gathered lowering.
+
+    Semantics vs the gathered path:
+
+    * integers (decoded signs/knobs, sign votes) are bit-exact — vote
+      partials are int32 popcounts and integer addition commutes across
+      the psum;
+    * the f32 accumulator agrees to the documented few-ulp contract:
+      clients still accumulate sequentially *within* a shard, and the
+      psum reassociates the per-shard partials — bounded reordering
+      wobble on top of the FMA contraction the gathered kernel already
+      has (see transport.__doc__);
+    * votes ride per-shard vote words, so capacity is 32 clients *per
+      shard* (vs 32 total gathered): with K <= 32*n_shards the sharded
+      path still surfaces votes.  Pass ``with_votes=False`` (the tree
+      transports do) to skip the vote psum entirely.
+
+    A ragged K (not divisible by the shard count) is padded with
+    zero-weight, vote-gated-off dummy clients whose contributions are
+    exact zeros in both domains.
+    """
+    client_axes = (default_client_axes(mesh) if client_axes is None
+                   else tuple(client_axes))
+    shards = _n_shards(mesh, client_axes)
+    axes = _axes_arg(client_axes)
+    k = sign_payload.shape[0]
+    k_pad = -(-k // shards) * shards
+    per_client_gbar = gbar.ndim == 2
+    gbar = jnp.asarray(gbar, jnp.float32)
+    gmin = jnp.asarray(gmin, jnp.float32).reshape(k)
+    gmax = jnp.asarray(gmax, jnp.float32).reshape(k)
+    mod_ok = jnp.asarray(mod_ok, jnp.float32).reshape(k)
+    weight = jnp.asarray(weight, jnp.float32).reshape(k)
+    sign_ok = jnp.asarray(sign_ok).reshape(k)
+    if k_pad != k:
+        pad = k_pad - k
+        sign_payload = _pad_clients(sign_payload.astype(jnp.uint32), pad)
+        qidx_payload = _pad_clients(qidx_payload.astype(jnp.uint32), pad)
+        if per_client_gbar:
+            gbar = _pad_clients(gbar, pad)
+        gmin, gmax, mod_ok = (_pad_clients(x, pad)
+                              for x in (gmin, gmax, mod_ok))
+        weight = _pad_clients(weight, pad)          # w = 0: exact-zero rows
+        sign_ok = _pad_clients(sign_ok.astype(bool), pad)   # vote gate off
+    votes_on = with_votes and (k_pad // shards) <= wk.MAX_VOTE_CLIENTS
+    pc, pc2 = P(axes), P(axes, None)
+    in_specs = (pc2, pc2, pc2 if per_client_gbar else P(None),
+                pc, pc, pc, pc, pc)
+    out_specs = (P(None), P(None)) if votes_on else (P(None),)
+
+    def local(sp, qp, gb, mn, mx, mo, w, so):
+        acc, votes = spfl_aggregate_packed(
+            sp, qp, gb, mn, mx, mo, w, so, n, bits,
+            interpret=interpret, use_kernel=use_kernel,
+            with_votes=votes_on)
+        acc = jax.lax.psum(acc, axes)
+        if votes_on:
+            return acc, jax.lax.psum(votes, axes)
+        return (acc,)
+
+    out = shard_map(local, mesh=mesh, in_specs=in_specs,
+                    out_specs=out_specs, check_rep=False)(
+        sign_payload, qidx_payload, gbar, gmin, gmax, mod_ok, weight,
+        sign_ok)
+    return out[0], (out[1] if votes_on else None)
+
+
 def corrupt_fold_words(key, words: Array, ber,
                        interpret: bool | None = None,
-                       use_kernel: bool | None = None
+                       use_kernel: bool | None = None,
+                       word0=0, mesh=None,
+                       client_axes: Optional[tuple] = None
                        ) -> Tuple[Array, Array, Array]:
     """Fused bit-channel pass over (K, W) word buffers:
     -> (received, per-client flip-mask xor-fold, per-client flip count).
@@ -284,31 +428,97 @@ def corrupt_fold_words(key, words: Array, ber,
     bit-identical jnp twin (wire.corrupt.corrupt_fold); both run the
     same counter PRF over the same global bit indices, so the choice
     never changes a single bit, and neither materializes a (..., W, 32)
-    random tensor."""
+    random tensor.
+
+    ``word0`` offsets the counter stream (a shard holding rows
+    [r0, r0+K_local) passes r0*W).  ``mesh`` switches to the shard-local
+    form: the pass runs under shard_map over ``client_axes`` with each
+    shard deriving its own offset, so a client-sharded buffer is
+    corrupted without ever being gathered — and, because the counter
+    PRF addresses *global* bit indices, the received bits are identical
+    to the gathered draw."""
     interpret = default_interpret() if interpret is None else interpret
     if use_kernel is None:
         use_kernel = True
+    if mesh is not None:
+        if not (isinstance(word0, int) and word0 == 0):
+            raise ValueError('word0 and mesh are mutually exclusive: the '
+                             'sharded form derives each shard\'s offset '
+                             'from its mesh position')
+        return _corrupt_fold_words_sharded(key, words, ber, mesh,
+                                           client_axes, interpret,
+                                           use_kernel)
     if not use_kernel:
-        return wire_corrupt.corrupt_fold(key, words, ber)
+        return wire_corrupt.corrupt_fold(key, words, ber, word0)
     k, w_n = words.shape
     w_pad = -(-w_n // wk.BLOCK_CORRUPT_WORDS) * wk.BLOCK_CORRUPT_WORDS
     padded = jnp.pad(words.astype(jnp.uint32), ((0, 0), (0, w_pad - w_n)))
     seeds = wire_corrupt.seeds_from_key(key).reshape(1, 2)
+    off = jnp.asarray(word0).astype(jnp.uint32).reshape(1, 1)
     thresh, allf = wire_corrupt.flip_threshold(
         jnp.broadcast_to(jnp.asarray(ber, jnp.float32), (k,)))
     rx, fold, flips = wk.corrupt_fold_2d(
-        seeds, thresh.reshape(k, 1), allf.astype(jnp.uint32).reshape(k, 1),
+        seeds, off, thresh.reshape(k, 1),
+        allf.astype(jnp.uint32).reshape(k, 1),
         padded, n_words=w_n, interpret=interpret)
     return rx[:, :w_n], fold.reshape(k), flips.reshape(k)
 
 
-def fold_words(words: Array, interpret: bool | None = None) -> Array:
+def _corrupt_fold_words_sharded(key, words: Array, ber, mesh, client_axes,
+                                interpret, use_kernel):
+    """Shard-local corrupt+fold: pads K to the shard grid, runs the
+    fused pass per shard at that shard's global word offset, returns the
+    client-sharded results (bit-identical to the gathered draw)."""
+    client_axes = (default_client_axes(mesh) if client_axes is None
+                   else tuple(client_axes))
+    shards = _n_shards(mesh, client_axes)
+    axes = _axes_arg(client_axes)
+    k, w_n = words.shape
+    k_pad = -(-k // shards) * shards
+    k_local = k_pad // shards
+    padded = _pad_clients(words.astype(jnp.uint32), k_pad - k)
+    ber_k = jnp.broadcast_to(jnp.asarray(ber, jnp.float32), (k,))
+    ber_p = jnp.pad(ber_k, (0, k_pad - k))
+    key_arr = jnp.asarray(key)
+
+    def local(kk, wl, bl):
+        row0 = _shard_row0(mesh, client_axes, k_local)
+        return corrupt_fold_words(kk, wl, bl, interpret=interpret,
+                                  use_kernel=use_kernel,
+                                  word0=row0 * jnp.uint32(w_n))
+
+    rx, fold, flips = shard_map(
+        local, mesh=mesh,
+        in_specs=(P(*([None] * key_arr.ndim)), P(axes, None), P(axes)),
+        out_specs=(P(axes, None), P(axes), P(axes)),
+        check_rep=False)(key_arr, padded, ber_p)
+    return rx[:k], fold[:k], flips[:k]
+
+
+def fold_words(words: Array, interpret: bool | None = None,
+               mesh=None, client_axes: Optional[tuple] = None) -> Array:
     """Per-client xor-fold of (K, W) word buffers -> (K,) uint32: the
     Pallas form of repro.wire.format.xor_fold — the live PS-side CRC
     reduction of the bit-level transports (repro.core.bitchannel folds
     received buffers through it).  Pads W to the fold-block grid with
-    zeros (the xor identity)."""
+    zeros (the xor identity).  With ``mesh`` the fold runs shard-locally
+    over ``client_axes`` (the verdicts are per-client, so no cross-shard
+    reduction exists — shard_map just keeps the opaque kernel call from
+    making GSPMD gather the payload rows)."""
     interpret = default_interpret() if interpret is None else interpret
+    if mesh is not None:
+        client_axes = (default_client_axes(mesh) if client_axes is None
+                       else tuple(client_axes))
+        shards = _n_shards(mesh, client_axes)
+        axes = _axes_arg(client_axes)
+        k = words.shape[0]
+        k_pad = -(-k // shards) * shards
+        padded = _pad_clients(words, k_pad - k)
+        out = shard_map(
+            lambda wl: fold_words(wl, interpret=interpret),
+            mesh=mesh, in_specs=(P(axes, None),), out_specs=P(axes),
+            check_rep=False)(padded)
+        return out[:k]
     k, w_n = words.shape
     w_pad = -(-w_n // wk.BLOCK_FOLD_WORDS) * wk.BLOCK_FOLD_WORDS
     padded = jnp.pad(words.astype(jnp.uint32), ((0, 0), (0, w_pad - w_n)))

@@ -26,8 +26,13 @@ def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
 
 
 def client_axes(mesh: jax.sharding.Mesh) -> tuple:
-    """Mesh axes that enumerate FL clients."""
-    return ('pod', 'data') if 'pod' in mesh.axis_names else ('data',)
+    """Mesh axes that enumerate FL clients (every non-'model' axis).
+    Delegates to kernels.ops.default_client_axes — the same rule the
+    sharded packed collectives use for shard offsets — so the two sides
+    cannot disagree about which axes hold clients (import deferred: ops
+    pulls the Pallas kernel chain, which mesh construction needn't)."""
+    from repro.kernels.ops import default_client_axes
+    return default_client_axes(mesh)
 
 
 def n_clients(mesh: jax.sharding.Mesh) -> int:

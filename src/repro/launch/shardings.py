@@ -194,6 +194,30 @@ def decode_token_spec(cfg: ModelConfig, mesh: Mesh,
     return P(ca if len(ca) > 1 else ca[0], None)
 
 
+# ---------------------------------------------------------------------------
+# uplink (per-client gradient / packed payload) shardings
+# ---------------------------------------------------------------------------
+
+def client_spec(mesh: Mesh, ndim: int = 2) -> P:
+    """Leading-K client-sharded spec for uplink arrays — stacked
+    per-client gradients (K, ...), packed (K, W) word buffers, and the
+    (K,) per-client scalars (q, p, weights, CRC verdicts).  The leading
+    axis shards over the FL client axes; everything trailing stays
+    local, which is the layout the sharded packed collective
+    (``kernels.ops.spfl_aggregate_packed_sharded``) consumes without any
+    client-payload all-gather."""
+    ca = client_axes(mesh)
+    lead = ca if len(ca) > 1 else ca[0]
+    return P(lead, *([None] * (ndim - 1)))
+
+
+def client_sharding(mesh: Mesh, ndim: int = 2) -> NamedSharding:
+    """NamedSharding form of :func:`client_spec` — what the benchmarks
+    and drivers ``device_put`` uplink inputs with so the sharded
+    collective starts from already-local payload rows."""
+    return NamedSharding(mesh, client_spec(mesh, ndim))
+
+
 def replicated(mesh: Mesh):
     return NamedSharding(mesh, P())
 

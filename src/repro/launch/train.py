@@ -30,11 +30,13 @@ from repro.training import distributed as dist
 def run(arch: str, steps: int, clients: int, batch: int, seq: int,
         transport_kind: str, allocator: str, lr: float,
         bandwidth_hz: float, tx_power_dbm: float, seed: int = 0,
-        log_every: int = 1) -> dict:
+        log_every: int = 1, wire: str = 'analytic',
+        collective: str = 'gather') -> dict:
     cfg = get_arch(arch)
     fl = FLConfig(n_devices=clients, learning_rate=lr,
                   bandwidth_hz=bandwidth_hz, tx_power_dbm=tx_power_dbm,
-                  allocator=allocator, transport=transport_kind, seed=seed)
+                  allocator=allocator, transport=transport_kind, seed=seed,
+                  wire=wire, collective=collective)
     key = jax.random.PRNGKey(seed)
     params = tf.init_params(cfg, key)
     dim = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
@@ -47,7 +49,15 @@ def run(arch: str, steps: int, clients: int, batch: int, seq: int,
     gains = channel.path_gain(np.asarray(dist_m), fl.path_loss_exp)
     p_w = np.full(clients, fl.tx_power_w)
 
-    step = jax.jit(dist.make_fl_train_step(cfg, fl, transport_kind))
+    # sharded packed collective: whatever devices exist, as the client
+    # axis (clients must tile the device grid — the shard_map pad inside
+    # the collective handles ragged K, the batch sharding does not)
+    mesh = None
+    if collective == 'sharded':
+        from repro.launch.mesh import make_host_mesh
+        mesh = make_host_mesh()
+    step = jax.jit(dist.make_fl_train_step(cfg, fl, transport_kind,
+                                           mesh=mesh))
     gbar = dist.init_gbar(params)
     toks = synth_tokens(clients * batch * 4, seq + 1, cfg.vocab_size, seed)
     toks = toks.reshape(clients, batch * 4, seq + 1)
@@ -116,10 +126,16 @@ def main():
     ap.add_argument('--bandwidth-hz', type=float, default=10e9,
                     help='scaled-up band for LLM-size payloads (DESIGN.md)')
     ap.add_argument('--tx-power-dbm', type=float, default=-4.0)
+    ap.add_argument('--wire', default='analytic',
+                    choices=['analytic', 'packed'])
+    ap.add_argument('--collective', default='gather',
+                    choices=['gather', 'sharded'],
+                    help="'sharded' keeps the packed uplink reduce "
+                         "shard-local (requires --wire packed)")
     args = ap.parse_args()
     run(args.arch, args.steps, args.clients, args.batch, args.seq,
         args.transport, args.allocator, args.lr, args.bandwidth_hz,
-        args.tx_power_dbm)
+        args.tx_power_dbm, wire=args.wire, collective=args.collective)
 
 
 if __name__ == '__main__':

@@ -14,6 +14,14 @@ uint32 payload words through the decode-once kernel
 ~(1+b) bits/coordinate instead of the f32 (or bf16, via
 ``fl.uplink_reduce_dtype``) leaves of the analytic path.
 
+With ``fl.collective='sharded'`` (pass the mesh into
+``make_fl_train_step``) the packed reduction never gathers client
+payloads: each device runs the decode-once kernel over its own clients'
+(K_local, W) words and one psum of d-float partials finishes each leaf
+(``kernels.ops.spfl_aggregate_packed_sharded``) — the default 'gather'
+lowering would instead all-gather the K*W payload words per leaf, which
+forfeits the packed byte win exactly at mesh scale.
+
 The wireless channel success probabilities (q, p) enter as *inputs*: the
 hierarchical allocator (repro.core.allocation) runs host-side between
 rounds on the per-client scalars this step also returns — exactly
@@ -54,10 +62,19 @@ def client_batch_shapes(cfg: ModelConfig, n_clients: int,
 
 
 def make_fl_train_step(cfg: ModelConfig, fl: FLConfig,
-                       transport_kind: str = 'spfl', unroll: bool = False):
+                       transport_kind: str = 'spfl', unroll: bool = False,
+                       mesh=None):
     """Returns train_step(params, batch, gbar, q, p, key) ->
-    (new_params, new_gbar, metrics)."""
+    (new_params, new_gbar, metrics).
+
+    ``mesh`` is required when ``fl.collective='sharded'`` — the tree
+    transports shard_map their per-leaf decode-once passes over its
+    client axes (launch.mesh.client_axes) instead of letting GSPMD
+    all-gather the packed payloads."""
     lr = fl.learning_rate
+    if fl.collective == 'sharded' and mesh is None:
+        raise ValueError("fl.collective='sharded' needs the mesh passed "
+                         "into make_fl_train_step")
 
     def train_step(params, batch, gbar, q, p, key):
         def client_loss(params_, bk):
@@ -72,10 +89,10 @@ def make_fl_train_step(cfg: ModelConfig, fl: FLConfig,
         if transport_kind == 'spfl':
             ghat, stats, diag = tr.spfl_aggregate_tree(
                 grads, gbar, q, p, fl, key, wire=fl.wire,
-                channel=fl.channel)
+                channel=fl.channel, mesh=mesh)
         elif transport_kind == 'error_free':
             ghat, stats, diag = tr.error_free_aggregate_tree(
-                grads, fl, key, wire=fl.wire)
+                grads, fl, key, wire=fl.wire, mesh=mesh)
         else:
             raise ValueError(
                 f'LLM-scale transport must be spfl|error_free, '

@@ -91,20 +91,28 @@ def flip_threshold(ber) -> Tuple[Array, Array]:
     return jnp.clip(t, 0.0, _THRESH_MAX).astype(jnp.uint32), ber >= 1.0
 
 
-def _word_index(shape: Tuple[int, ...]) -> Array:
-    """Global uint32 word index over ``shape`` (row-major)."""
+def _word_index(shape: Tuple[int, ...], word0=0) -> Array:
+    """Global uint32 word index over ``shape`` (row-major), offset by
+    ``word0`` — the buffer's first word's position in the *global*
+    counter stream.  A shard holding rows [r0, r0 + K_local) of a (K, W)
+    buffer passes ``word0 = r0 * W`` and draws exactly the bits the
+    gathered buffer would have drawn for those rows, which is what keeps
+    the sharded bit channel bit-identical to the gathered one."""
     n = 1
     for s in shape:
         n *= s
-    return jnp.arange(n, dtype=jnp.uint32).reshape(shape)
+    idx = jnp.arange(n, dtype=jnp.uint32).reshape(shape)
+    return idx + jnp.asarray(word0).astype(jnp.uint32)
 
 
-def flip_mask(key, shape: Tuple[int, ...], ber) -> Array:
+def flip_mask(key, shape: Tuple[int, ...], ber, word0=0) -> Array:
     """Draw a uint32 flip mask for a word buffer of ``shape``.
 
     Each of the ``32 * prod(shape)`` bits is set independently with
     probability ``ber`` (broadcast over the leading axes of ``shape``,
     e.g. per-client rates of shape (K,) against words (K, W)).
+    ``word0`` offsets the counter stream (see :func:`_word_index`) so a
+    client-sharded buffer slice draws its own rows' bits.
 
     Counter-PRF implementation: loops the 32 bit planes accumulating
     ``mask |= bit_j << j`` so only word-shaped arrays are ever live —
@@ -117,7 +125,7 @@ def flip_mask(key, shape: Tuple[int, ...], ber) -> Array:
     bshape = thresh.shape + (1,) * (len(shape) - thresh.ndim)
     thresh = thresh.reshape(bshape)
     allf = allf.reshape(bshape)
-    base = _word_index(shape)
+    base = _word_index(shape, word0)
     mask = jnp.zeros(shape, jnp.uint32)
     for j in range(WORD_BITS):
         h = hash_bits(base, j, seeds[0], seeds[1])
@@ -126,7 +134,7 @@ def flip_mask(key, shape: Tuple[int, ...], ber) -> Array:
     return mask
 
 
-def flip_mask_ref(key, shape: Tuple[int, ...], ber) -> Array:
+def flip_mask_ref(key, shape: Tuple[int, ...], ber, word0=0) -> Array:
     """Materialized ``(..., W, 32)`` reference of :func:`flip_mask`:
     every bit's hash/threshold drawn as one big tensor then packed.
     Test-only ground truth — the live paths must equal it bit-for-bit."""
@@ -134,7 +142,7 @@ def flip_mask_ref(key, shape: Tuple[int, ...], ber) -> Array:
     thresh, allf = flip_threshold(ber)
     bshape = thresh.shape + (1,) * (len(shape) + 1 - thresh.ndim)
     lane = jnp.arange(WORD_BITS, dtype=jnp.uint32)
-    idx = jnp.broadcast_to(_word_index(shape)[..., None],
+    idx = jnp.broadcast_to(_word_index(shape, word0)[..., None],
                            shape + (WORD_BITS,))
     bits = ((hash_bits(idx, lane, seeds[0], seeds[1])
              < thresh.reshape(bshape))
@@ -148,24 +156,26 @@ def count_flips(mask: Array) -> Array:
                    axis=-1).astype(jnp.int32)
 
 
-def corrupt_words(key, words: Array, ber) -> Tuple[Array, Array]:
+def corrupt_words(key, words: Array, ber, word0=0) -> Tuple[Array, Array]:
     """Transmit ``words`` through the bit-flip channel.
 
     Returns ``(received, mask)``: the corrupted buffer ``words ^ mask``
     and the mask itself (callers fold/popcount it for verification
     bookkeeping and diagnostics).
     """
-    mask = flip_mask(key, words.shape, ber)
+    mask = flip_mask(key, words.shape, ber, word0)
     return words ^ mask, mask
 
 
-def corrupt_fold(key, words: Array, ber
+def corrupt_fold(key, words: Array, ber, word0=0
                  ) -> Tuple[Array, Array, Array]:
     """Fused transmit + channel-side bookkeeping for (K, W) buffers:
     -> (received, per-client xor-fold of the flip mask, per-client flip
     count).  This is the jnp form of the fused Pallas corruption kernel
     (``pack_kernel.corrupt_fold_2d``) and is bit-identical to it; the
     mask fold is what the tree transport accumulates across leaves to
-    verify its leaf-scattered virtual packets."""
-    rx, mask = corrupt_words(key, words, ber)
+    verify its leaf-scattered virtual packets.  ``word0`` is the global
+    counter offset of the buffer's first word (client-sharded slices
+    pass ``first_row * W``)."""
+    rx, mask = corrupt_words(key, words, ber, word0)
     return rx, xor_fold(mask), count_flips(mask)

@@ -35,6 +35,13 @@ Kernels:
                               clients' packed payloads into the f32
                               aggregate — the cross-client reduce never
                               materializes a (K, n) float intermediate.
+                              On a client-sharded mesh the same kernel
+                              is the shard-local stage of the sharded
+                              collective: each device accumulates only
+                              its K_local clients and a single
+                              ``lax.psum`` finishes the sum
+                              (``kernels.ops.spfl_aggregate_packed_sharded``),
+                              so no client payload is ever all-gathered.
                               Sign votes ride along in the packed
                               domain: each client's sign bit-plane is
                               transposed into a per-coordinate vote word
@@ -210,21 +217,23 @@ def spfl_accumulate_kernel(gmin_ref, step_ref, mod_ok_ref, weight_ref,
             votes_ref[...] = jax.lax.population_count(votes_ref[...])
 
 
-def corrupt_fold_kernel(seed_ref, thresh_ref, allflip_ref, w_ref,
+def corrupt_fold_kernel(seed_ref, off_ref, thresh_ref, allflip_ref, w_ref,
                         rx_ref, fold_ref, flips_ref, *, n_words: int):
     """Fused bit channel: counter-PRF draw -> threshold -> in-register
     pack -> xor into the payload, with the flip mask's xor-fold
     (fold_words_kernel's reduction) and popcount accumulated in the same
     pass.  ``n_words`` is the true (unpadded) buffer width: the global
     word index matches the jnp reference exactly and padding columns
-    never flip."""
+    never flip.  ``off_ref`` is the buffer's word offset in the global
+    counter stream (``first_row * n_words`` on a client-sharded slice —
+    the sharded channel draws the same bits the gathered one would)."""
     j = pl.program_id(0)
     words = w_ref[...].astype(jnp.uint32)
     k_row = jax.lax.broadcasted_iota(jnp.uint32, words.shape, 0)
     col = (jax.lax.broadcasted_iota(jnp.uint32, words.shape, 1)
            + jnp.uint32(j * BLOCK_CORRUPT_WORDS))
     valid = (col < jnp.uint32(n_words)).astype(jnp.uint32)
-    base = k_row * jnp.uint32(n_words) + col
+    base = k_row * jnp.uint32(n_words) + col + off_ref[0, 0]
     thresh = thresh_ref[...].astype(jnp.uint32)          # (K, 1)
     allf = allflip_ref[...].astype(jnp.uint32)           # (K, 1)
     s0 = seed_ref[0, 0]
@@ -376,11 +385,12 @@ def spfl_accumulate_2d(sign_words, qidx_words, gbar, gmin, step, mod_ok,
 
 
 @functools.partial(jax.jit, static_argnames=('n_words', 'interpret'))
-def corrupt_fold_2d(seeds, thresh, allflip, words, *, n_words: int,
+def corrupt_fold_2d(seeds, word0, thresh, allflip, words, *, n_words: int,
                     interpret: bool = False):
     """Fused corruption of (K, W_pad) word buffers (W_pad a
     BLOCK_CORRUPT_WORDS multiple; columns >= n_words never flip).
-    seeds (1, 2) uint32; thresh/allflip (K, 1) uint32.
+    seeds (1, 2) uint32; word0 (1, 1) uint32 global word offset;
+    thresh/allflip (K, 1) uint32.
     -> (received (K, W_pad), mask xor-fold (K, 1), flip count (K, 1))."""
     k, w_pad = words.shape
     assert w_pad % BLOCK_CORRUPT_WORDS == 0, w_pad
@@ -389,6 +399,7 @@ def corrupt_fold_2d(seeds, thresh, allflip, words, *, n_words: int,
         functools.partial(corrupt_fold_kernel, n_words=n_words),
         grid=(w_pad // BLOCK_CORRUPT_WORDS,),
         in_specs=[pl.BlockSpec((1, 2), lambda j: (0, 0)),
+                  pl.BlockSpec((1, 1), lambda j: (0, 0)),
                   acc_spec, acc_spec,
                   pl.BlockSpec((k, BLOCK_CORRUPT_WORDS), lambda j: (0, j))],
         out_specs=[pl.BlockSpec((k, BLOCK_CORRUPT_WORDS), lambda j: (0, j)),
@@ -397,7 +408,7 @@ def corrupt_fold_2d(seeds, thresh, allflip, words, *, n_words: int,
                    jax.ShapeDtypeStruct((k, 1), jnp.uint32),
                    jax.ShapeDtypeStruct((k, 1), jnp.int32)],
         interpret=interpret,
-    )(seeds, thresh, allflip, words)
+    )(seeds, word0, thresh, allflip, words)
 
 
 @functools.partial(jax.jit, static_argnames=('bits', 'interpret'))

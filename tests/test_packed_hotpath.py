@@ -231,9 +231,9 @@ def test_transport_verify_uses_fold_words_kernel(monkeypatch):
     calls = {'n': 0}
     real = ops.fold_words
 
-    def spy(words, interpret=None):
+    def spy(words, interpret=None, **kw):
         calls['n'] += 1
-        out = real(words, interpret=interpret)
+        out = real(words, interpret=interpret, **kw)
         assert jnp.array_equal(out, fmt.xor_fold(words))   # kernel == jnp
         return out
 

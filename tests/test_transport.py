@@ -154,6 +154,54 @@ def test_scheduling_selects_subset(data):
     assert int(jnp.sum(diag.accepted)) <= m
 
 
+def test_baselines_route_through_bitchannel_calibration(data):
+    """channel='bitlevel' on dds/onebit/scheduling: packet fate goes
+    through the shared bitchannel calibration (analytic payloads — no
+    materialization), so the marginal accept statistics match bernoulli
+    while carrying the calibration's fold floors."""
+    from repro.core import bitchannel as BC
+    grads, _ = data
+    fl_bit = FLConfig(channel='bitlevel')
+    gains = jnp.full((K,), 1.0)
+    p_w = jnp.full((K,), FL.tx_power_w)
+    beta = jnp.full((K,), 1.0 / K)
+    for fn, args in (
+            (TR.dds_aggregate, (grads, beta, gains, p_w)),
+            (TR.onebit_aggregate, (grads, beta, gains, p_w)),
+            (TR.scheduling_aggregate, (grads, gains, p_w))):
+        ghat, diag = fn(*args, fl_bit, jax.random.PRNGKey(20))
+        assert bool(jnp.all(jnp.isfinite(ghat)))
+        assert diag.sign_ok.shape == (K,)
+    # a perfect channel stays perfect through the calibration
+    _, diag = TR.dds_aggregate(grads, beta, gains, p_w, fl_bit,
+                               jax.random.PRNGKey(21))
+    assert bool(jnp.all(diag.accepted))
+    # calibration is the identity at operating points...
+    q = jnp.linspace(0.01, 0.99, 50)
+    np.testing.assert_allclose(
+        np.asarray(BC.calibrated_success_prob(q, L * 4 + 64)),
+        np.asarray(q), rtol=0, atol=5e-4)
+    # ...and floors at the 32-bit fold's miss rate below its reach
+    floor = float(BC.calibrated_success_prob(jnp.asarray(0.0), 1000))
+    assert 0.0 < floor < 1e-9                        # ~2^-32
+
+
+def test_baselines_bernoulli_draws_unchanged(data):
+    """The default channel keeps the seed's draw stream byte-for-byte
+    (the bitlevel routing is opt-in)."""
+    grads, _ = data
+    gains = jnp.full((K,), 1.0)
+    p_w = jnp.full((K,), FL.tx_power_w)
+    beta = jnp.full((K,), 1.0 / K)
+    key = jax.random.PRNGKey(22)
+    n_bits = L * (FL.quant_bits + 1) + FL.b0_bits
+    q = TR.single_packet_success_prob(beta, p_w, gains, n_bits, FL)
+    _, ko = jax.random.split(key)
+    expect = jax.random.uniform(ko, (K,)) < q
+    _, diag = TR.dds_aggregate(grads, beta, gains, p_w, FL, key)
+    assert jnp.array_equal(diag.accepted, expect)
+
+
 def test_tree_stats_and_delta(data):
     grads, gbar = data
     tree = {'a': grads[:, :1000].reshape(K, 10, 100), 'b': grads[:, 1000:]}
