@@ -3,12 +3,20 @@
 Derived: solver time per call for the SCA-based Algorithm 1 vs the
 low-complexity §IV-D barrier method (paper: O(K^3.5) vs O(K m)).  The
 ``alternating`` wall-clock-vs-K rows are the tracked perf baseline for
-the SCA hot loop (BENCH_allocation.json via ``run.py --json``) — the
-bit-count hoist in ``AllocationProblem.sign_bits``/``mod_bits`` lands
-here.  BENCH_SMOKE=1 shrinks the K sweep.
+the SCA hot loop (BENCH_allocation.json via ``run.py --json``).
+
+The ``alloc_jax_*`` rows track the jitted engine
+(repro.core.allocation_jax): steady-state single-solve time per K, and
+the headline batched row — ONE ``solve_batched`` dispatch over a
+block-fading trajectory of B draws vs the extrapolated host loop of
+NumPy solves (ISSUE 5 acceptance: >= 5x; the host loop is timed on
+``n_ref`` draws and extrapolated linearly — the draws are independent
+solves, so the extrapolation is exact up to timer noise).
+BENCH_SMOKE=1 shrinks the K sweep and the batch.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 
 import numpy as np
@@ -16,8 +24,11 @@ import numpy as np
 from common import SMOKE, emit
 
 import jax
+import jax.numpy as jnp
+from jax.experimental import enable_x64
 from repro.configs.base import FLConfig
 from repro.core import allocation as AL
+from repro.core import allocation_jax as AJ
 from repro.core import channel as CH
 
 
@@ -35,6 +46,10 @@ def _problem(k, seed=0):
     return AL.problem_from_stats(g2, gb2, v, d2, gains, p_w, 60000, fl)
 
 
+def _iters(method):
+    return 2 if method == 'alternating' else 6
+
+
 def main() -> None:
     for k in ((10, 20) if SMOKE else (10, 20, 40, 80)):
         prob = _problem(k)
@@ -42,11 +57,43 @@ def main() -> None:
             reps = 1 if method == 'alternating' else 3
             t0 = time.time()
             for _ in range(reps):
-                sol = AL.solve(prob, method,
-                               max_iters=2 if method == 'alternating' else 6)
+                sol = AL.solve(prob, method, max_iters=_iters(method))
             dt = (time.time() - t0) / reps
             emit(f'alloc_K{k}_{method}', 1e6 * dt,
                  f'objective={sol.objective:.4f}')
+            # jitted engine, steady state (compile excluded)
+            jsol = AJ.solve(prob, method, max_iters=_iters(method))
+            t0 = time.time()
+            jsol = AJ.solve(prob, method, max_iters=_iters(method))
+            jdt = time.time() - t0
+            emit(f'alloc_K{k}_{method}_jax', 1e6 * jdt,
+                 f'objective={jsol.objective:.4f}')
+
+    # headline: one batched dispatch over a block-fading trajectory
+    b = 8 if SMOKE else 64
+    k = 8
+    prob = _problem(k)
+    with enable_x64():
+        fades = CH.block_fading_trajectory(
+            jax.random.PRNGKey(1), jnp.asarray(prob.gains), b,
+            rho=0.8, shadow_std_db=4.0)
+        batched = AJ.batch_over_gains(AJ.from_reference(prob), fades)
+    fades_np = np.asarray(fades, np.float64)
+    for method in ('alternating', 'barrier'):
+        sol = AJ.solve_batched(batched, method, max_iters=_iters(method))
+        jax.block_until_ready(sol)                    # compile
+        t0 = time.time()
+        sol = AJ.solve_batched(batched, method, max_iters=_iters(method))
+        jax.block_until_ready(sol)
+        tb = time.time() - t0
+        n_ref = 1 if SMOKE else (2 if method == 'alternating' else 6)
+        t0 = time.time()
+        for i in range(n_ref):
+            AL.solve(dataclasses.replace(prob, gains=fades_np[i]),
+                     method, max_iters=_iters(method))
+        t_host = (time.time() - t0) / n_ref * b
+        emit(f'alloc_jax_batched_B{b}_K{k}_{method}', 1e6 * tb,
+             f'speedup={t_host / tb:.1f}x_vs_host_loop_extrap{n_ref}')
 
 
 if __name__ == '__main__':

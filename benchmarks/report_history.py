@@ -1,0 +1,89 @@
+"""Perf-trajectory report: diff the last two history entries per suite.
+
+``run.py --json`` appends a dated, SHA-keyed entry to each
+``BENCH_<tag>.json``'s ``history`` list; this script prints a per-metric
+delta table between the two most recent entries of every tracked BENCH
+file, so perf regressions surface in review instead of hiding inside a
+JSON blob.  Informational only — always exits 0 (a wall-time swing on a
+shared CI box is a signal, not a verdict); regressions beyond
+``FLAG_PCT`` are marked with ``!`` so reviewers can grep for them.
+
+  python benchmarks/report_history.py            # every BENCH_*.json
+  python benchmarks/report_history.py wire alloc # substring filter
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), '..'))
+FLAG_PCT = 10.0          # flag slowdowns beyond this
+
+
+def _fmt_us(us: float) -> str:
+    if us >= 1e6:
+        return f'{us / 1e6:.2f}s'
+    if us >= 1e3:
+        return f'{us / 1e3:.1f}ms'
+    return f'{us:.1f}us'
+
+
+def report(path: str) -> None:
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except Exception as e:                      # unreadable file: say so
+        print(f'{os.path.basename(path)}: unreadable ({e})')
+        return
+    suite = data.get('suite', os.path.basename(path))
+    hist = data.get('history', [])
+    if len(hist) < 2:
+        print(f'== {suite}: {len(hist)} history entry — nothing to diff')
+        return
+    prev, cur = hist[-2], hist[-1]
+    print(f"== {suite}: {prev.get('sha')}/{prev.get('date')} -> "
+          f"{cur.get('sha')}/{cur.get('date')}")
+    prev_rows = {r['name']: r for r in prev.get('rows', [])}
+    cur_names = set()
+    for row in cur.get('rows', []):
+        name = row['name']
+        cur_names.add(name)
+        us = float(row['us_per_call'])
+        pr = prev_rows.get(name)
+        if pr is None:
+            print(f'   {name:<44} {_fmt_us(us):>10}  NEW')
+            continue
+        pus = float(pr['us_per_call'])
+        note = ''
+        if str(pr.get('derived')) != str(row.get('derived')):
+            note = f"  [{pr.get('derived')} -> {row.get('derived')}]"
+        if pus == 0.0:
+            # rate-style row (headline metric lives in `derived`)
+            print(f'   {name:<44} {"":>10}    {"":>10} (derived){note}')
+            continue
+        pct = (us - pus) / pus * 100.0
+        flag = ' !' if pct > FLAG_PCT else ''
+        print(f'   {name:<44} {_fmt_us(pus):>10} -> {_fmt_us(us):>10} '
+              f'({pct:+6.1f}%){flag}{note}')
+    for name in prev_rows:
+        if name not in cur_names:
+            print(f'   {name:<44} DROPPED')
+
+
+def main() -> None:
+    filters = [a for a in sys.argv[1:] if not a.startswith('-')]
+    paths = sorted(glob.glob(os.path.join(_ROOT, 'BENCH_*.json')))
+    if filters:
+        paths = [p for p in paths
+                 if any(f in os.path.basename(p) for f in filters)]
+    if not paths:
+        print('no BENCH_*.json files found')
+        return
+    for path in paths:
+        report(path)
+
+
+if __name__ == '__main__':
+    main()

@@ -258,6 +258,28 @@ class FLConfig:
     (``kernels.ops.spfl_aggregate_packed_sharded``), keeping the ~12x
     packed-domain byte win at mesh scale; requires the caller to pass
     the mesh through (training/distributed.py does).
+
+    ``allocation_backend``: which engine solves the per-round eq. (28)
+    resource allocation.  'numpy' (default) is the paper-faithful
+    host-side float64 reference (``repro.core.allocation``) — a jit
+    barrier + device->host sync per round.  'jax' runs the same
+    Algorithm 1 as a jitted on-device solve
+    (``repro.core.allocation_jax``): the training loop never leaves the
+    device between the gradient step and (q, p), and the alternating
+    optimizer affords more outer iterations (see
+    ``allocation_max_iters``).
+
+    ``allocation_cadence``: 'static' keeps the round-0 channel gains for
+    the whole run (the paper's fixed-geometry §V setup); 'per_round'
+    evolves the large-scale gains every round through the seeded AR(1)
+    log-normal shadowing process (``channel.block_fading_trajectory``)
+    and re-solves the allocation against the round's gains — the regime
+    where the on-device engine pays off.
+
+    ``allocation_max_iters``: outer alternating-optimization iterations;
+    0 = auto, keeping each path's historical defaults: numpy runs the
+    host-cost-bound 2 for 'alternating' and the solver default 6 for
+    'barrier'; jax runs 6 for either (iterations are cheap on-device).
     """
     n_devices: int = 20                  # K
     bandwidth_hz: float = 10e6           # B
@@ -287,6 +309,9 @@ class FLConfig:
     wire: str = 'analytic'               # analytic | packed
     channel: str = 'bernoulli'           # bernoulli | bitlevel
     collective: str = 'gather'           # gather | sharded (packed wire)
+    allocation_backend: str = 'numpy'    # numpy | jax
+    allocation_cadence: str = 'static'   # static | per_round
+    allocation_max_iters: int = 0        # 0 = auto (see docstring)
 
     @property
     def noise_psd_w(self) -> float:

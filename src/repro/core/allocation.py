@@ -37,39 +37,33 @@ from typing import NamedTuple, Tuple
 import numpy as np
 
 from repro.configs.base import FLConfig
+from repro.core import alloc_common as AC
 from repro.core.convergence import (
     EXP_CAP, GCoefficients, g_prime_alpha, g_value,
 )
 
-_POW_CAP = 500.0       # cap on the 2^x exponent inside H
-_H_FLOOR = -1e150
-BETA_MIN = 1e-6
-BETA_MAX = 1.0 - 1e-9
-
-# (weight on H_v/(1-a), weight on -H_s/a) for the four terms of eq. (27)
-_TERM_W = ((1.0, 0.0), (2.0, 0.0), (1.0, 1.0), (0.0, 1.0))
+# closed-form constants live in alloc_common (shared with the JAX engine);
+# re-exported here for existing importers
+BETA_MIN = AC.BETA_MIN
+BETA_MAX = AC.BETA_MAX
+_TERM_W = AC.TERM_W
 
 
 # ---------------------------------------------------------------------------
-# H terms and derivatives (float64, overflow-guarded)
+# H terms and derivatives (float64, overflow-guarded) — thin np wrappers
+# around the backend-agnostic closed forms in alloc_common
 # ---------------------------------------------------------------------------
 
 def _h(beta, p_w, gain, n_bits, fl: FLConfig):
-    beta = np.asarray(beta, np.float64)
-    bb = beta * fl.bandwidth_hz
-    expo = np.minimum(2.0 * n_bits / (bb * fl.latency_s), _POW_CAP)
-    h = (bb * fl.noise_psd_w / (4.0 * p_w * gain)) * (1.0 - 2.0 ** expo)
-    return np.maximum(h, _H_FLOOR)
+    return AC.h_term(np, np.asarray(beta, np.float64), p_w, gain, n_bits,
+                     fl.bandwidth_hz, fl.noise_psd_w, fl.latency_s)
 
 
 def _h_prime(beta, p_w, gain, n_bits, fl: FLConfig):
     """dH/dbeta, cf. paper eq. (42)/(46)."""
-    beta = np.asarray(beta, np.float64)
-    c1 = fl.bandwidth_hz * fl.noise_psd_w / (4.0 * p_w * gain)
-    expo = np.minimum(2.0 * n_bits / (beta * fl.bandwidth_hz * fl.latency_s),
-                      _POW_CAP)
-    pow2 = 2.0 ** expo
-    return c1 * ((1.0 - pow2) + pow2 * np.log(2.0) * expo)
+    return AC.h_term_prime(np, np.asarray(beta, np.float64), p_w, gain,
+                           n_bits, fl.bandwidth_hz, fl.noise_psd_w,
+                           fl.latency_s)
 
 
 @dataclass(frozen=True)
@@ -128,12 +122,7 @@ class Allocation(NamedTuple):
 
 def success_probs_np(prob: AllocationProblem, alpha, beta):
     a = np.asarray(alpha, np.float64)
-    q = np.where(a > 0, np.exp(np.maximum(prob.h_s(beta)
-                                          / np.clip(a, 1e-12, 1), -745)), 0.0)
-    p = np.where(a < 1, np.exp(np.maximum(prob.h_v(beta)
-                                          / np.clip(1 - a, 1e-12, 1), -745)),
-                 0.0)
-    return q, p
+    return AC.success_probs(np, a, prob.h_s(beta), prob.h_v(beta))
 
 
 # ---------------------------------------------------------------------------
@@ -209,20 +198,7 @@ def _surrogate_factory(prob: AllocationProblem, alpha: np.ndarray,
         hv = prob.h_v(beta)
         hs_lin = hs0 + hs0p * (beta - beta0)
         hv_lin = hv0 + hv0p * (beta - beta0)
-        total = np.zeros_like(beta)
-        for j, (wv, ws) in enumerate(_TERM_W):
-            c = cs[j]
-            pos = c >= 0
-            # c >= 0: exact -H_s (convex), linearized H_v -> convex majorant
-            expo = wv * hv_lin / om - ws * hs / a
-            t_pos = c * np.exp(np.minimum(expo, EXP_CAP))
-            # c < 0: supporting line of exp at the expansion point, with the
-            # concave +H_s piece tangent-linearized -> convex majorant
-            e = wv * hv / om - ws * hs_lin / a
-            base = np.exp(np.minimum(e0[j], EXP_CAP))
-            t_neg = c * base * (1.0 + e - e0[j])
-            total += np.where(pos, t_pos, t_neg)
-        return total
+        return AC.surrogate_value(np, cs, a, om, hs, hv, hs_lin, hv_lin, e0)
 
     return surrogate
 
@@ -295,12 +271,7 @@ def _g_dbeta(prob: AllocationProblem, alpha, beta):
     hs, hv = prob.h_s(beta), prob.h_v(beta)
     hsp, hvp = prob.h_s_prime(beta), prob.h_v_prime(beta)
     cs = (prob.coef.A, prob.coef.B, prob.coef.C, prob.coef.D)
-    out = np.zeros_like(np.asarray(beta, np.float64))
-    for j, (wv, ws) in enumerate(_TERM_W):
-        e = wv * hv / om - ws * hs / a
-        de = wv * hvp / om - ws * hsp / a
-        out += cs[j] * np.exp(np.minimum(e, EXP_CAP)) * de
-    return out
+    return AC.g_dbeta(np, cs, a, om, hs, hv, hsp, hvp)
 
 
 def optimize_beta_barrier(prob: AllocationProblem, alpha: np.ndarray,
@@ -356,6 +327,7 @@ def solve(prob: AllocationProblem, method: str = 'alternating',
     uniform_obj = prob.objective(alpha, beta)
     prev = np.inf
     iters = 0
+    objs = []          # per-outer-iteration objective (pre-safeguard)
     for it in range(max_iters):
         iters = it + 1
         alpha = optimize_alpha(prob, beta)
@@ -364,6 +336,7 @@ def solve(prob: AllocationProblem, method: str = 'alternating',
         else:
             beta = optimize_beta_sca(prob, alpha, beta)
         obj = prob.objective(alpha, beta)
+        objs.append(obj)
         if abs(prev - obj) <= tol * (1.0 + abs(obj)):
             prev = obj
             break
@@ -377,7 +350,8 @@ def solve(prob: AllocationProblem, method: str = 'alternating',
         prev = uniform_obj
     q, p = success_probs_np(prob, alpha, beta)
     return Allocation(alpha, beta, q, p, prev,
-                      {'iters': iters, 'method': method})
+                      {'iters': iters, 'method': method,
+                       'objectives': objs})
 
 
 def problem_from_stats(g2, gb2, v, d2, gains, p_w, dim: int,

@@ -1,0 +1,556 @@
+"""JAX-native batched allocation engine — eq. (28) as one jitted dispatch.
+
+``repro.core.allocation`` (the retained reference) solves the
+hierarchical bandwidth/power problem in host-side float64 NumPy, which
+puts a jit barrier and a device->host sync in the middle of every FL
+round.  This module is the same Algorithm 1 — grid-bracketed +
+safeguarded-Newton ``optimize_alpha`` (Lemma 3), SCA/majorize-minimize
+``optimize_beta_sca`` with per-client golden-section under dual
+bisection on the sum-bandwidth constraint, and the §IV-D log-barrier
+fallback — rebuilt on ``lax.fori_loop``/``lax.cond`` fixed-trip control
+flow over an :class:`JaxAllocationProblem` pytree, so that
+
+* ``solve_traceable`` can be inlined into a jitted per-round pipeline
+  (no host round-trip: ``fl_loop`` with ``allocation_backend='jax'``),
+* ``solve_batched`` vmaps the whole solver over a leading batch axis —
+  one dispatch solves allocations for an entire block-fading trajectory
+  or an SNR x K scenario grid.
+
+Control flow is masked rather than dynamic: every early ``break`` of
+the reference becomes a frozen carry under a ``done`` flag with the
+same trip-count bounds, so the two engines walk the same iterates.
+
+Precision contract (documented in ``src/repro/core/README.md``): the
+closed forms (shared with the reference via ``repro.core.alloc_common``)
+need float64 — the f64 guard constants ``EXP_CAP=600`` / ``POW_CAP=500``
+/ ``H_FLOOR=-1e150`` all overflow float32.  The host-facing wrappers
+(``solve``, ``solve_batched``) therefore run under
+``jax.experimental.enable_x64`` and match the NumPy reference to tight
+tolerances; ``solve_traceable`` embedded in an f32 program instead
+substitutes f32-safe caps (``_caps``) and keeps the same argmin
+structure at reduced precision.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.experimental import enable_x64
+
+from repro.configs.base import FLConfig
+from repro.core import alloc_common as AC
+from repro.core.allocation import Allocation, AllocationProblem
+
+
+class JaxAllocationProblem(NamedTuple):
+    """Eq. (28) instance as a pytree of arrays (vmap-able over a leading
+    batch axis; the trailing axis of the per-client fields is K)."""
+    A: jax.Array                 # (..., K) eq. (27) coefficients
+    B: jax.Array
+    C: jax.Array
+    D: jax.Array
+    gains: jax.Array             # (..., K) large-scale channel gains
+    p_w: jax.Array               # (..., K) power budgets
+    sign_bits: jax.Array         # (...,)  l
+    mod_bits: jax.Array          # (...,)  l*b + b0
+    bandwidth_hz: jax.Array      # (...,)  B
+    noise_psd_w: jax.Array       # (...,)  N0 (W/Hz)
+    latency_s: jax.Array         # (...,)  tau
+    alpha_max: jax.Array         # (...,)  cap on the sign power share
+
+
+class JaxAllocation(NamedTuple):
+    alpha: jax.Array             # (..., K)
+    beta: jax.Array              # (..., K)
+    q: jax.Array                 # (..., K) sign-packet success probs
+    p: jax.Array                 # (..., K) modulus-packet success probs
+    objective: jax.Array         # (...,)
+    iters: jax.Array             # (...,)  outer iterations actually used
+    objectives: jax.Array        # (..., max_iters) per-outer-iter objective
+                                 # trajectory (NaN beyond ``iters``)
+
+
+class _Caps(NamedTuple):
+    """Dtype-bound numerical guards (see module docstring)."""
+    exp_cap: float
+    pow_cap: float
+    h_floor: float
+    log_floor: float
+    newton_eps: float
+
+
+def _caps(dtype) -> _Caps:
+    if dtype == jnp.float64:
+        return _Caps(AC.EXP_CAP, AC.POW_CAP, AC.H_FLOOR, AC.LOG_FLOOR, 1e-8)
+    # f32: exp(80) ~ 5.5e34 and 2^120 ~ 1.3e36 stay finite; the H floor
+    # saturates just inside -FLT_MAX
+    return _Caps(80.0, 120.0, -3e38, -85.0, 1e-4)
+
+
+# ---------------------------------------------------------------------------
+# problem constructors
+# ---------------------------------------------------------------------------
+
+def _default_dtype():
+    return jnp.float64 if jax.config.jax_enable_x64 else jnp.float32
+
+
+def problem_from_stats(g2, gb2, v, d2, gains, p_w, dim: int,
+                       fl: FLConfig, dtype=None) -> JaxAllocationProblem:
+    """Traceable constructor from per-client scalars (jnp arrays OK)."""
+    dtype = dtype or _default_dtype()
+
+    def cast(x):
+        return jnp.asarray(x, dtype)
+
+    A, B, C, D = AC.g_coefficients(jnp, cast(g2), cast(gb2), cast(v),
+                                   cast(d2), fl.lipschitz_const,
+                                   fl.learning_rate)
+    return JaxAllocationProblem(
+        A, B, C, D, cast(gains), cast(p_w),
+        cast(float(dim)), cast(float(dim * fl.quant_bits + fl.b0_bits)),
+        cast(fl.bandwidth_hz), cast(fl.noise_psd_w), cast(fl.latency_s),
+        cast(fl.alpha_max))
+
+
+def from_reference(prob: AllocationProblem,
+                   dtype=None) -> JaxAllocationProblem:
+    """Convert the NumPy reference problem into the pytree form."""
+    dtype = dtype or _default_dtype()
+
+    def cast(x):
+        return jnp.asarray(np.asarray(x), dtype)
+
+    fl = prob.fl
+    return JaxAllocationProblem(
+        cast(prob.coef.A), cast(prob.coef.B), cast(prob.coef.C),
+        cast(prob.coef.D), cast(prob.gains), cast(prob.p_w),
+        cast(prob.sign_bits), cast(prob.mod_bits),
+        cast(fl.bandwidth_hz), cast(fl.noise_psd_w), cast(fl.latency_s),
+        cast(fl.alpha_max))
+
+
+def stack_problems(probs: Sequence[AllocationProblem],
+                   dtype=None) -> JaxAllocationProblem:
+    """Stack reference problems into one batched pytree (every leaf gains
+    a leading batch axis, so ``solve_batched`` maps ``in_axes=0``)."""
+    js = [from_reference(p, dtype) for p in probs]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *js)
+
+
+def batch_over_gains(prob: JaxAllocationProblem,
+                     gains_b) -> JaxAllocationProblem:
+    """Broadcast one problem over a (B, K) fading trajectory: one
+    ``solve_batched`` dispatch then solves every draw."""
+    gains_b = jnp.asarray(gains_b, prob.gains.dtype)
+    b = gains_b.shape[0]
+
+    def rep(x):
+        return jnp.broadcast_to(x, (b,) + x.shape)
+
+    return jax.tree.map(rep, prob)._replace(gains=gains_b)
+
+
+# ---------------------------------------------------------------------------
+# H terms / objective on the pytree
+# ---------------------------------------------------------------------------
+
+def _ordered_sum(x):
+    """Strict left-to-right sum over the last axis.
+
+    ``jnp.sum``'s reduction order is an XLA implementation detail that
+    changes with the batch shape, so a vmapped solve would drift from a
+    single solve by ulps that the iterative solver then amplifies.  An
+    unrolled add chain pins the association (same idiom as the
+    transport's ``_seq_client_mean``), making the engine's results
+    invariant to batching — the basis of the bit-match guarantee in
+    tests/test_allocation_jax.py.
+    """
+    acc = x[..., 0]
+    for i in range(1, x.shape[-1]):
+        acc = acc + x[..., i]
+    return acc
+
+
+def _cs(prob):
+    return (prob.A, prob.B, prob.C, prob.D)
+
+
+def _h_s(prob, caps, beta):
+    return AC.h_term(jnp, beta, prob.p_w, prob.gains, prob.sign_bits,
+                     prob.bandwidth_hz, prob.noise_psd_w, prob.latency_s,
+                     pow_cap=caps.pow_cap, h_floor=caps.h_floor)
+
+
+def _h_v(prob, caps, beta):
+    return AC.h_term(jnp, beta, prob.p_w, prob.gains, prob.mod_bits,
+                     prob.bandwidth_hz, prob.noise_psd_w, prob.latency_s,
+                     pow_cap=caps.pow_cap, h_floor=caps.h_floor)
+
+
+def _h_s_prime(prob, caps, beta):
+    return AC.h_term_prime(jnp, beta, prob.p_w, prob.gains, prob.sign_bits,
+                           prob.bandwidth_hz, prob.noise_psd_w,
+                           prob.latency_s, pow_cap=caps.pow_cap)
+
+
+def _h_v_prime(prob, caps, beta):
+    return AC.h_term_prime(jnp, beta, prob.p_w, prob.gains, prob.mod_bits,
+                           prob.bandwidth_hz, prob.noise_psd_w,
+                           prob.latency_s, pow_cap=caps.pow_cap)
+
+
+def _objective(prob, caps, alpha, beta):
+    return _ordered_sum(AC.g_value(jnp, _cs(prob), alpha, _h_s(prob, caps, beta),
+                              _h_v(prob, caps, beta),
+                              exp_cap=caps.exp_cap))
+
+
+def success_probs(prob: JaxAllocationProblem, alpha, beta):
+    """(q, p) of eq. (11)/(13) on the pytree problem."""
+    caps = _caps(prob.A.dtype)
+    return AC.success_probs(jnp, alpha, _h_s(prob, caps, beta),
+                            _h_v(prob, caps, beta),
+                            log_floor=caps.log_floor)
+
+
+# ---------------------------------------------------------------------------
+# power split (Lemma 3): grid brackets + masked safeguarded Newton
+# ---------------------------------------------------------------------------
+
+def optimize_alpha(prob: JaxAllocationProblem, beta, n_grid: int = 256,
+                   newton_iters: int = 40, caps: _Caps = None):
+    caps = caps or _caps(prob.A.dtype)
+    cs = _cs(prob)
+    h_s, h_v = _h_s(prob, caps, beta), _h_v(prob, caps, beta)
+    a_max = jnp.clip(prob.alpha_max, 1e-3, 1.0)
+    # np.linspace semantics spelled out elementwise (start + i*step with
+    # the endpoint pinned): jnp.linspace's traced-endpoint path rounds
+    # differently under vmap, which the Newton polish then amplifies —
+    # this form is bit-invariant to batching
+    lo_a, hi_a = 1e-4, a_max - 1e-4
+    step = (hi_a - lo_a) / (n_grid - 1)
+    grid = lo_a + jnp.arange(n_grid, dtype=beta.dtype) * step
+    grid = grid.at[-1].set(hi_a)                             # (n_grid,)
+
+    # G' on the grid: (n_grid, K)
+    gp = AC.g_prime_alpha(jnp, cs, grid[:, None], h_s[None, :],
+                          h_v[None, :], exp_cap=caps.exp_cap)
+    best_alpha = jnp.full_like(h_s, 1.0) * a_max
+    best_val = AC.g_value(jnp, cs, best_alpha, h_s, h_v,
+                          exp_cap=caps.exp_cap)
+
+    # the reference collects sign-change brackets with np.nonzero; here
+    # every interval runs the same safeguarded Newton, masked afterwards
+    sign_change = jnp.signbit(gp[:-1]) != jnp.signbit(gp[1:])
+    shape = sign_change.shape                                 # (n_grid-1, K)
+    lo0 = jnp.broadcast_to(grid[:-1, None], shape)
+    hi0 = jnp.broadcast_to(grid[1:, None], shape)
+    flo = gp[:-1]
+    eps = caps.newton_eps
+
+    def body(_, carry):
+        lo, hi, x = carry
+        f = AC.g_prime_alpha(jnp, cs, x, h_s, h_v, exp_cap=caps.exp_cap)
+        fp = (AC.g_prime_alpha(jnp, cs, x + eps, h_s, h_v,
+                               exp_cap=caps.exp_cap) - f) / eps
+        same = (flo < 0) == (f < 0)
+        lo = jnp.where(same, x, lo)
+        hi = jnp.where(same, hi, x)
+        newton = x - f / fp
+        mid = 0.5 * (lo + hi)
+        good = jnp.isfinite(newton) & (newton > lo) & (newton < hi)
+        return lo, hi, jnp.where(good, newton, mid)
+
+    _, _, x = lax.fori_loop(0, newton_iters, body,
+                            (lo0, hi0, 0.5 * (lo0 + hi0)))
+    vals = AC.g_value(jnp, cs, x, h_s, h_v, exp_cap=caps.exp_cap)
+    vals = jnp.where(sign_change & ~jnp.isnan(vals), vals, jnp.inf)
+    j = jnp.argmin(vals, axis=0)                              # (K,)
+    cand_val = jnp.take_along_axis(vals, j[None, :], axis=0)[0]
+    cand_x = jnp.take_along_axis(x, j[None, :], axis=0)[0]
+    return jnp.where(cand_val < best_val, cand_x, best_alpha)
+
+
+# ---------------------------------------------------------------------------
+# bandwidth via SCA / majorize-minimize + dual bisection
+# ---------------------------------------------------------------------------
+
+def _surrogate(prob, caps, alpha, beta0):
+    a = jnp.clip(alpha, 1e-12, 1.0 - 1e-12)
+    om = 1.0 - a
+    hs0, hv0 = _h_s(prob, caps, beta0), _h_v(prob, caps, beta0)
+    hs0p = _h_s_prime(prob, caps, beta0)
+    hv0p = _h_v_prime(prob, caps, beta0)
+    cs = _cs(prob)
+    e0 = tuple(wv * hv0 / om - ws * hs0 / a for wv, ws in AC.TERM_W)
+
+    def surrogate(beta):
+        hs, hv = _h_s(prob, caps, beta), _h_v(prob, caps, beta)
+        hs_lin = hs0 + hs0p * (beta - beta0)
+        hv_lin = hv0 + hv0p * (beta - beta0)
+        return AC.surrogate_value(jnp, cs, a, om, hs, hv, hs_lin, hv_lin,
+                                  e0, exp_cap=caps.exp_cap)
+
+    return surrogate
+
+
+def _golden_vec(f, shape, dtype, iters: int = 48):
+    """Fixed-trip golden section on [BETA_MIN, BETA_MAX], elementwise."""
+    gr = (np.sqrt(5.0) - 1.0) / 2.0
+    lo = jnp.full(shape, AC.BETA_MIN, dtype)
+    hi = jnp.full(shape, AC.BETA_MAX, dtype)
+    c = hi - gr * (hi - lo)
+    d = lo + gr * (hi - lo)
+
+    def body(_, carry):
+        lo, hi, c, d, fc, fd = carry
+        left = fc < fd
+        hi = jnp.where(left, d, hi)
+        lo = jnp.where(left, lo, c)
+        c2 = hi - gr * (hi - lo)
+        d2 = lo + gr * (hi - lo)
+        return lo, hi, c2, d2, f(c2), f(d2)
+
+    carry = lax.fori_loop(0, iters, body, (lo, hi, c, d, f(c), f(d)))
+    return 0.5 * (carry[0] + carry[1])
+
+
+def optimize_beta_sca(prob: JaxAllocationProblem, alpha, beta0,
+                      sca_rounds: int = 8, tol: float = 1e-6,
+                      caps: _Caps = None):
+    caps = caps or _caps(prob.A.dtype)
+    dtype = beta0.dtype
+    shape = beta0.shape
+
+    def sca_body(_, carry):
+        beta, prev, done = carry
+        surrogate = _surrogate(prob, caps, alpha, beta)
+
+        def beta_of_lambda(lam):
+            return _golden_vec(lambda b: surrogate(b) + lam * b, shape,
+                               dtype)
+
+        b0 = beta_of_lambda(jnp.asarray(0.0, dtype))
+
+        def dual(_):
+            # grow the dual upper bracket (×10 from 1.0; 30 steps reach
+            # the reference's 1e30 stop) ...
+            def grow(_, hi):
+                need = (_ordered_sum(beta_of_lambda(hi)) > 1.0) & (hi < 1e30)
+                return jnp.where(need, hi * 10.0, hi)
+
+            hi = lax.fori_loop(0, 30, grow, jnp.asarray(1.0, dtype))
+
+            # ... then 60 bisection steps on the sum constraint
+            def bis(_, lh):
+                lo, hi = lh
+                mid = 0.5 * (lo + hi)
+                infeas = _ordered_sum(beta_of_lambda(mid)) > 1.0
+                return jnp.where(infeas, mid, lo), jnp.where(infeas, hi, mid)
+
+            _, hi = lax.fori_loop(0, 60, bis,
+                                  (jnp.asarray(0.0, dtype), hi))
+            b = beta_of_lambda(hi)
+            return b * jnp.minimum(1.0, 1.0 / jnp.maximum(_ordered_sum(b),
+                                                          1e-12))
+
+        b = lax.cond(_ordered_sum(b0) > 1.0, dual, lambda _: b0, None)
+        # MM guarantee: only accept descent on the true objective
+        cur = _objective(prob, caps, alpha, b)
+        accept = (cur <= prev) & ~done
+        conv = jnp.abs(prev - cur) <= tol * (1.0 + jnp.abs(prev))
+        beta2 = jnp.where(accept, b, beta)
+        prev2 = jnp.where(done, prev, jnp.minimum(prev, cur))
+        return beta2, prev2, done | conv
+
+    prev0 = _objective(prob, caps, alpha, beta0)
+    beta, _, _ = lax.fori_loop(0, sca_rounds, sca_body,
+                               (beta0, prev0, jnp.asarray(False)))
+    return beta
+
+
+# ---------------------------------------------------------------------------
+# low-complexity §IV-D: log-barrier + projected gradient descent
+# ---------------------------------------------------------------------------
+
+def optimize_beta_barrier(prob: JaxAllocationProblem, alpha, beta0,
+                          mu0: float = 10.0, mu_growth: float = 10.0,
+                          outer: int = 5, inner: int = 200,
+                          lr: float = 1e-3, caps: _Caps = None):
+    caps = caps or _caps(prob.A.dtype)
+    dtype = beta0.dtype
+    beta = jnp.maximum(beta0, 1e-4)
+    s = _ordered_sum(beta)
+    beta = jnp.where(s >= 1.0, beta / s * 0.95, beta)
+    ln10 = np.log(10.0)
+    a = jnp.clip(alpha, 1e-12, 1.0 - 1e-12)
+    om = 1.0 - a
+    cs = _cs(prob)
+
+    def gdbeta(b):
+        return AC.g_dbeta(jnp, cs, a, om, _h_s(prob, caps, b),
+                          _h_v(prob, caps, b), _h_s_prime(prob, caps, b),
+                          _h_v_prime(prob, caps, b), exp_cap=caps.exp_cap)
+
+    def outer_body(oi, beta):
+        mu = jnp.asarray(mu0, dtype) * jnp.asarray(mu_growth, dtype) ** oi
+
+        def inner_body(_, carry):
+            beta, done = carry
+            slack = 1.0 - _ordered_sum(beta)
+            grad = (gdbeta(beta)
+                    - (1.0 / (mu * ln10))
+                    * (1.0 / beta - 1.0 / (1.0 - beta) - 1.0 / slack))
+            gn = jnp.sqrt(_ordered_sum(grad * grad))
+            step = lr / (1.0 + gn)
+
+            # feasibility backtracking: 27 halvings reach the reference's
+            # t <= 1e-8 give-up threshold exactly
+            def back(_, tc):
+                t, new = tc
+                infeas = (jnp.any(new <= 0) | jnp.any(new >= 1)
+                          | (_ordered_sum(new) >= 1.0))
+                cont = infeas & (t > 1e-8)
+                t2 = jnp.where(cont, 0.5 * t, t)
+                new2 = jnp.where(cont, beta - t2 * step * grad, new)
+                return t2, new2
+
+            t, new = lax.fori_loop(0, 27, back, (jnp.asarray(1.0, dtype),
+                                                 beta - step * grad))
+            give_up = (gn < 1e-14) | (t <= 1e-8)
+            beta2 = jnp.where(~done & ~give_up, new, beta)
+            return beta2, done | give_up
+
+        beta, _ = lax.fori_loop(0, inner, inner_body,
+                                (beta, jnp.asarray(False)))
+        return beta
+
+    return lax.fori_loop(0, outer, outer_body, beta)
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1: alternating optimization
+# ---------------------------------------------------------------------------
+
+def solve_traceable(prob: JaxAllocationProblem, method: str = 'alternating',
+                    max_iters: int = 6, tol: float = 1e-5,
+                    n_grid: int = 256,
+                    newton_iters: int = 40) -> JaxAllocation:
+    """The solver as a pure traceable function — embed in any jit/vmap."""
+    caps = _caps(prob.A.dtype)
+    dtype = prob.A.dtype
+    k = prob.gains.shape[-1]
+    beta_u = jnp.full((k,), 1.0 / k, dtype)
+    alpha_u = jnp.full((k,), 0.5, dtype)
+    nan_objs = jnp.full((max_iters,), jnp.nan, dtype)
+    if method == 'uniform':
+        q, p = success_probs(prob, alpha_u, beta_u)
+        return JaxAllocation(alpha_u, beta_u, q, p,
+                             _objective(prob, caps, alpha_u, beta_u),
+                             jnp.int32(0), nan_objs)
+
+    uniform_obj = _objective(prob, caps, alpha_u, beta_u)
+    use_barrier = method == 'barrier'
+
+    def body(i, carry):
+        alpha, beta, prev, done, iters, objs = carry
+        alpha_n = optimize_alpha(prob, beta, n_grid, newton_iters, caps)
+        if use_barrier:
+            beta_n = optimize_beta_barrier(prob, alpha_n, beta, caps=caps)
+        else:
+            beta_n = optimize_beta_sca(prob, alpha_n, beta, caps=caps)
+        obj = _objective(prob, caps, alpha_n, beta_n)
+        conv = jnp.abs(prev - obj) <= tol * (1.0 + jnp.abs(obj))
+        alpha2 = jnp.where(done, alpha, alpha_n)
+        beta2 = jnp.where(done, beta, beta_n)
+        prev2 = jnp.where(done, prev, obj)
+        iters2 = jnp.where(done, iters, i + 1)
+        objs2 = objs.at[i].set(jnp.where(done, jnp.nan, obj))
+        return alpha2, beta2, prev2, done | conv, iters2, objs2
+
+    init = (alpha_u, beta_u, jnp.asarray(jnp.inf, dtype),
+            jnp.asarray(False), jnp.int32(0), nan_objs)
+    alpha, beta, prev, _, iters, objs = lax.fori_loop(0, max_iters, body,
+                                                      init)
+    # safeguard: never return anything worse than the uniform default
+    worse = prev > uniform_obj
+    alpha = jnp.where(worse, alpha_u, alpha)
+    beta = jnp.where(worse, beta_u, beta)
+    prev = jnp.where(worse, uniform_obj, prev)
+    q, p = success_probs(prob, alpha, beta)
+    return JaxAllocation(alpha, beta, q, p, prev, iters, objs)
+
+
+_solve_jit = jax.jit(solve_traceable,
+                     static_argnames=('method', 'max_iters', 'tol',
+                                      'n_grid', 'newton_iters'))
+
+
+@functools.partial(jax.jit, static_argnames=('method', 'max_iters', 'tol',
+                                             'n_grid', 'newton_iters'))
+def _solve_batched_jit(prob, method='alternating', max_iters=6, tol=1e-5,
+                       n_grid=256, newton_iters=40):
+    return jax.vmap(lambda pr: solve_traceable(
+        pr, method, max_iters, tol, n_grid, newton_iters))(prob)
+
+
+def solve_batched(prob: JaxAllocationProblem, method: str = 'alternating',
+                  max_iters: int = 6, tol: float = 1e-5, n_grid: int = 256,
+                  newton_iters: int = 40) -> JaxAllocation:
+    """One dispatch over a batch of problems.
+
+    Every leaf of ``prob`` must carry a leading batch axis (see
+    ``stack_problems`` / ``batch_over_gains``).  Runs under x64 so the
+    batched solutions carry full f64 precision (and keep the jit cache
+    keyed consistently — the wrapper re-enters the same trace context on
+    every call).
+    """
+    with enable_x64():
+        return _solve_batched_jit(prob, method, max_iters, tol, n_grid,
+                                  newton_iters)
+
+
+@functools.partial(jax.jit, static_argnames=('dim', 'fl', 'method',
+                                             'max_iters'))
+def _solve_stats_jit(g2, gb2, v, d2, gains, p_w, dim, fl, method,
+                     max_iters):
+    prob = problem_from_stats(g2, gb2, v, d2, gains, p_w, dim, fl,
+                              dtype=jnp.float64)
+    return solve_traceable(prob, method, max_iters)
+
+
+def solve_from_stats(g2, gb2, v, d2, gains, p_w, dim: int, fl: FLConfig,
+                     method: str = 'alternating',
+                     max_iters: int = 6) -> JaxAllocation:
+    """One jitted dispatch from the devices' scalar report to the round's
+    allocation — the ``allocation_backend='jax'`` path of the training
+    drivers (no host NumPy between the stats and (q, p))."""
+    with enable_x64():
+        return _solve_stats_jit(g2, gb2, v, d2, gains, p_w, dim, fl,
+                                method, max_iters)
+
+
+def solve(prob, method: str = 'alternating', max_iters: int = 6,
+          tol: float = 1e-5) -> Allocation:
+    """Drop-in for ``allocation.solve``: accepts the NumPy reference
+    problem (or a pre-built pytree), solves on-device under x64, returns
+    the host :class:`Allocation`."""
+    with enable_x64():
+        jp = from_reference(prob) if isinstance(prob, AllocationProblem) \
+            else prob
+        sol = _solve_jit(jp, method=method, max_iters=max_iters, tol=tol)
+        objs = np.asarray(sol.objectives)
+    return Allocation(np.asarray(sol.alpha, np.float64),
+                      np.asarray(sol.beta, np.float64),
+                      np.asarray(sol.q, np.float64),
+                      np.asarray(sol.p, np.float64),
+                      float(sol.objective),
+                      {'iters': int(sol.iters), 'method': method,
+                       'backend': 'jax',
+                       'objectives': [float(o) for o in
+                                      objs[~np.isnan(objs)]]})

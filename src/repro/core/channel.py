@@ -57,6 +57,35 @@ def path_gain(distance_m: np.ndarray, zeta: float) -> np.ndarray:
     return distance_m ** (-zeta)
 
 
+def block_fading_trajectory(key, base_gains, n_rounds: int,
+                            rho: float = 0.9,
+                            shadow_std_db: float = 4.0) -> Array:
+    """Seeded per-round large-scale gain process, (n_rounds, K).
+
+    The paper's §V geometry is static; ``FLConfig.allocation_cadence=
+    'per_round'`` layers a stationary Gauss–Markov log-normal shadowing
+    track on top of it:  z_0 ~ N(0, 1),
+    z_n = rho z_{n-1} + sqrt(1 - rho^2) eps_n,  eps_n ~ N(0, 1) i.i.d.,
+    and gain_n = base_gains * 10^(shadow_std_db * z_n / 10).  ``rho``
+    sets the coherence of consecutive rounds (0 = i.i.d. per round,
+    -> 1 = quasi-static); the marginal of every round is log-normal with
+    ``shadow_std_db`` dB standard deviation, so time-averaged statistics
+    match the static geometry's shadowing assumption.  Fully determined
+    by ``key`` — the per-round allocation path stays reproducible.
+    """
+    base = jnp.asarray(base_gains)
+    eps = jax.random.normal(key, (n_rounds,) + base.shape)
+    c = jnp.sqrt(1.0 - rho ** 2).astype(eps.dtype)
+
+    def step(z, e):
+        z2 = rho * z + c * e
+        return z2, z2
+
+    _, zs = jax.lax.scan(step, eps[0], eps[1:])
+    zs = jnp.concatenate([eps[:1], zs], axis=0)
+    return base * 10.0 ** (shadow_std_db * zs / 10.0)
+
+
 # ---------------------------------------------------------------------------
 # capacities (9), (10) — given an instantaneous fading realization
 # ---------------------------------------------------------------------------

@@ -19,13 +19,13 @@ from typing import NamedTuple
 
 import numpy as np
 
+from repro.core import alloc_common as AC
+
 # exponent clamp: beyond this the success probability underflows to 0 and
 # the bound is numerically +inf — we saturate instead of overflowing.
-EXP_CAP = 600.0
-
-
-def _exp(x):
-    return np.exp(np.minimum(x, EXP_CAP))
+# (defined in alloc_common so the JAX engine shares it; re-exported here
+# for the existing importers)
+EXP_CAP = AC.EXP_CAP
 
 
 class GCoefficients(NamedTuple):
@@ -39,32 +39,19 @@ class GCoefficients(NamedTuple):
 def g_coefficients(g2, gb2, v, d2, lipschitz: float,
                    eta: float) -> GCoefficients:
     g2, gb2, v, d2 = map(np.asarray, (g2, gb2, v, d2))
-    le = lipschitz * eta
-    A = 2.0 * (-2.0 * g2 - gb2 + 3.0 * v)
-    B = g2 + gb2 - 2.0 * v
-    C = le * (g2 - gb2 + d2)
-    D = le * gb2 + np.zeros_like(g2)
-    return GCoefficients(A, B, C, D)
+    return GCoefficients(*AC.g_coefficients(np, g2, gb2, v, d2,
+                                            lipschitz, eta))
 
 
 def g_exponents(alpha, h_s, h_v):
     """The four exponents of eq. (27) with boundary-safe alpha in [0, 1]."""
-    alpha = np.asarray(alpha, np.float64)
-    a = np.clip(alpha, 1e-12, 1.0)
-    om = np.clip(1.0 - alpha, 1e-12, 1.0)
-    t1 = h_v / om                       # log p
-    t4 = -h_s / a                       # -log q
-    # exact boundaries: alpha=1 -> p=0 (t1 = -inf); alpha=0 -> q=0 (t4=+inf)
-    t1 = np.where(alpha >= 1.0, -np.inf, t1)
-    t4 = np.where(alpha <= 0.0, np.inf, t4)
-    return t1, 2.0 * t1, t1 + t4, t4
+    return AC.g_exponents(np, np.asarray(alpha, np.float64), h_s, h_v)
 
 
 def g_value(coef: GCoefficients, alpha, h_s, h_v):
     """G(alpha, beta) of eq. (27) (h_s, h_v already encode beta)."""
-    t1, t2, t3, t4 = g_exponents(alpha, h_s, h_v)
-    return (coef.A * _exp(t1) + coef.B * _exp(t2)
-            + coef.C * _exp(t3) + coef.D * _exp(t4))
+    return AC.g_value(np, tuple(coef), np.asarray(alpha, np.float64),
+                      h_s, h_v)
 
 
 def g_value_from_probs(coef: GCoefficients, p, q):
@@ -81,16 +68,8 @@ def g_value_from_probs(coef: GCoefficients, p, q):
 
 def g_prime_alpha(coef: GCoefficients, alpha, h_s, h_v):
     """dG/dalpha, eq. (69) — the Newton–Raphson target of Lemma 3."""
-    alpha = np.asarray(alpha, np.float64)
-    a = np.clip(alpha, 1e-12, 1.0 - 1e-12)
-    om = 1.0 - a
-    t1, t2, t3, t4 = g_exponents(a, h_s, h_v)
-    dv = h_v / om ** 2                  # d/dalpha [H_v/(1-a)]
-    ds = h_s / a ** 2                   # d/dalpha [-H_s/a] = +H_s/a^2
-    return (coef.A * _exp(t1) * dv
-            + coef.B * _exp(t2) * 2.0 * dv
-            + coef.C * _exp(t3) * (dv + ds)
-            + coef.D * _exp(t4) * ds)
+    return AC.g_prime_alpha(np, tuple(coef),
+                            np.asarray(alpha, np.float64), h_s, h_v)
 
 
 def one_step_bound(eta: float, n_clients: int, g_global2: float,

@@ -21,6 +21,7 @@ import numpy as np
 from repro.configs.base import FLConfig
 from repro.configs.registry import get_arch
 from repro.core import allocation as alloc
+from repro.core import allocation_jax as alloc_jax
 from repro.core import transport as tr
 from repro.data import synth_tokens
 from repro.models import transformer as tf
@@ -31,12 +32,15 @@ def run(arch: str, steps: int, clients: int, batch: int, seq: int,
         transport_kind: str, allocator: str, lr: float,
         bandwidth_hz: float, tx_power_dbm: float, seed: int = 0,
         log_every: int = 1, wire: str = 'analytic',
-        collective: str = 'gather') -> dict:
+        collective: str = 'gather', allocation_backend: str = 'numpy',
+        allocation_cadence: str = 'static') -> dict:
     cfg = get_arch(arch)
     fl = FLConfig(n_devices=clients, learning_rate=lr,
                   bandwidth_hz=bandwidth_hz, tx_power_dbm=tx_power_dbm,
                   allocator=allocator, transport=transport_kind, seed=seed,
-                  wire=wire, collective=collective)
+                  wire=wire, collective=collective,
+                  allocation_backend=allocation_backend,
+                  allocation_cadence=allocation_cadence)
     key = jax.random.PRNGKey(seed)
     params = tf.init_params(cfg, key)
     dim = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
@@ -48,6 +52,12 @@ def run(arch: str, steps: int, clients: int, batch: int, seq: int,
                                       fl.cell_radius_m)
     gains = channel.path_gain(np.asarray(dist_m), fl.path_loss_exp)
     p_w = np.full(clients, fl.tx_power_w)
+    # per-round block-fading gains under allocation_cadence='per_round'
+    gain_traj = None
+    if fl.allocation_cadence == 'per_round':
+        gain_traj = channel.block_fading_trajectory(
+            jax.random.fold_in(key, 2), jnp.asarray(gains, jnp.float32),
+            steps)
 
     # sharded packed collective: whatever devices exist, as the client
     # axis (clients must tile the device grid — the shard_map pad inside
@@ -70,6 +80,8 @@ def run(arch: str, steps: int, clients: int, batch: int, seq: int,
         t0 = time.time()
         sl = (n * batch) % (batch * 4)
         batch_d = {'tokens': jnp.asarray(toks[:, sl:sl + batch, :seq])}
+        gains_n = gains if gain_traj is None else np.asarray(
+            gain_traj[n], np.float64)
         if prev_stats is not None and transport_kind == 'spfl':
             # Algorithm 2 steps 3-5 on the previous round's scalar report
             g2 = np.asarray(prev_stats['g_norm_sq'], np.float64)
@@ -77,11 +89,20 @@ def run(arch: str, steps: int, clients: int, batch: int, seq: int,
             v = np.asarray(prev_stats['v'], np.float64)
             d2 = np.asarray(prev_stats['d2'], np.float64)
             if gb2.max() > 0:
-                prob = alloc.problem_from_stats(
-                    g2, gb2, v, d2, gains, p_w, dim, fl)
-                sol = alloc.solve(prob, allocator)
-                q = jnp.asarray(sol.q, jnp.float32)
-                p = jnp.asarray(sol.p, jnp.float32)
+                if fl.allocation_backend == 'jax':
+                    # jitted on-device solve (allocation_jax) — the host
+                    # never runs the NumPy optimizer
+                    jsol = alloc_jax.solve_from_stats(
+                        g2, gb2, v, d2, gains_n, p_w, dim, fl, allocator,
+                        max_iters=fl.allocation_max_iters or 6)
+                    q = jsol.q.astype(jnp.float32)
+                    p = jsol.p.astype(jnp.float32)
+                else:
+                    prob = alloc.problem_from_stats(
+                        g2, gb2, v, d2, gains_n, p_w, dim, fl)
+                    sol = alloc.solve(prob, allocator)
+                    q = jnp.asarray(sol.q, jnp.float32)
+                    p = jnp.asarray(sol.p, jnp.float32)
         params, gbar, m = step(params, batch_d, gbar, q, p,
                                jax.random.fold_in(key, 100 + n))
         gb_norm2 = sum(float(jnp.sum(jnp.square(g)))
@@ -132,10 +153,20 @@ def main():
                     choices=['gather', 'sharded'],
                     help="'sharded' keeps the packed uplink reduce "
                          "shard-local (requires --wire packed)")
+    ap.add_argument('--allocation-backend', default='numpy',
+                    choices=['numpy', 'jax'],
+                    help="'jax' solves eq. (28) as a jitted on-device "
+                         "dispatch (repro.core.allocation_jax)")
+    ap.add_argument('--allocation-cadence', default='static',
+                    choices=['static', 'per_round'],
+                    help="'per_round' evolves channel gains every round "
+                         "via the seeded block-fading process")
     args = ap.parse_args()
     run(args.arch, args.steps, args.clients, args.batch, args.seq,
         args.transport, args.allocator, args.lr, args.bandwidth_hz,
-        args.tx_power_dbm, wire=args.wire, collective=args.collective)
+        args.tx_power_dbm, wire=args.wire, collective=args.collective,
+        allocation_backend=args.allocation_backend,
+        allocation_cadence=args.allocation_cadence)
 
 
 if __name__ == '__main__':

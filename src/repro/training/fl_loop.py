@@ -8,9 +8,19 @@ Per round n (Algorithm 2):
   1. broadcast w_n (free; downlink assumed error-free, §II-C)
   2. each device computes g_{k,n} = ∇F_k(w_n)           (vmapped, jitted)
   3. devices report ||g_{k,n}|| (+ δ_k scalars)           (error-free, §IV)
-  4. PS solves eq. (28) -> (alpha_n, beta_n) -> (q, p)    (host NumPy)
+  4. PS solves eq. (28) -> (alpha_n, beta_n) -> (q, p)
   5. uplink transmission simulated by the chosen transport (jitted)
   6. PS aggregates (eq. (17)) and updates w (eq. (18))
+
+Step 4 runs on the engine picked by ``FLConfig.allocation_backend``:
+'numpy' is the host-side float64 reference (a jit barrier + host sync
+per round, so the alternating method is capped at 2 outer iterations),
+'jax' is the jitted on-device port (``repro.core.allocation_jax`` —
+stats, eq. (28) solve and (q, p) in one dispatch, no host round-trip,
+6 outer iterations by default).  ``FLConfig.allocation_cadence=
+'per_round'`` additionally evolves the channel gains every round via
+the seeded block-fading process (``channel.block_fading_trajectory``)
+instead of freezing the round-0 geometry.
 """
 from __future__ import annotations
 
@@ -23,10 +33,12 @@ from typing import Dict, List, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental import enable_x64
 from jax.flatten_util import ravel_pytree
 
 from repro.configs.base import FLConfig
 from repro.core import allocation as alloc
+from repro.core import allocation_jax as alloc_jax
 from repro.core import channel, convergence, transport
 from repro.core import quantize as quantize_mod
 from repro.models.cnn import cnn_accuracy, cnn_forward, cnn_loss, init_cnn
@@ -41,8 +53,14 @@ class FLHistory:
     payload_bits: List[float] = field(default_factory=list)
     sign_ok_frac: List[float] = field(default_factory=list)
     mod_ok_frac: List[float] = field(default_factory=list)
+    q_mean: List[float] = field(default_factory=list)         # mean sign succ
+    p_mean: List[float] = field(default_factory=list)         # mean mod succ
     sign_agreement: List[float] = field(default_factory=list)  # packed wire
     retransmissions: List[float] = field(default_factory=list)
+    # host wall-time of step 4.  On allocation_backend='numpy' this is
+    # the full eq. (28) solve; on 'jax' the solve is an async device
+    # dispatch, so this records only the (intentionally tiny) host cost
+    # of issuing it — the solve itself overlaps the transport step.
     alloc_time_s: List[float] = field(default_factory=list)
     round_time_s: List[float] = field(default_factory=list)
 
@@ -60,7 +78,11 @@ class FLSimulator:
         self.K = client_x.shape[0]
         assert self.K == fl.n_devices, (self.K, fl.n_devices)
         seed = fl.seed if seed is None else seed
+        self._seed = seed
         self.key = jax.random.PRNGKey(seed)
+        # host-side eq. (28) solves performed (stays 0 on the jax
+        # backend — the per-round no-host-solve guarantee tests assert on)
+        self.host_solver_calls = 0
         self.params = init_cnn(jax.random.fold_in(self.key, 0))
         flat, self.unravel = ravel_pytree(self.params)
         self.dim = flat.shape[0]
@@ -139,10 +161,61 @@ class FLSimulator:
 
         self._run_transport = run_transport
 
+        if fl.allocation_backend == 'jax':
+            dim = self.dim
+            method = fl.allocator
+            max_iters = fl.allocation_max_iters or 6
+
+            def alloc_on_device(grads, gbar, gains, p_w):
+                """Steps 3–4 fully on-device: stats -> eq. (28) -> (q, p)."""
+                g64 = grads.astype(jnp.float64)
+                gb = gbar if gbar.ndim == 2 else jnp.broadcast_to(
+                    gbar, grads.shape)
+                gb64 = gb.astype(jnp.float64)
+                g2 = jnp.sum(g64 ** 2, axis=1)
+                gb2 = jnp.sum(gb64 ** 2, axis=1)
+                v = jnp.sum(jnp.abs(g64) * gb64, axis=1)
+                d2 = jax.vmap(
+                    lambda g: quantize_mod.expected_quant_mse(
+                        g, fl.quant_bits)
+                )(grads.astype(jnp.float32)).astype(jnp.float64)
+                prob = alloc_jax.problem_from_stats(
+                    g2, gb2, v, d2, gains, p_w, dim, fl,
+                    dtype=jnp.float64)
+
+                def solved(_):
+                    s = alloc_jax.solve_traceable(prob, method,
+                                                  max_iters=max_iters)
+                    return s.alpha, s.beta, s.q, s.p, s.objective
+
+                def uniform(_):
+                    s = alloc_jax.solve_traceable(prob, 'uniform')
+                    return s.alpha, s.beta, s.q, s.p, s.objective
+
+                if method == 'uniform':
+                    alpha, beta, q, p, obj = uniform(None)
+                else:
+                    # no compensation history yet (round 0): optimizing
+                    # against gbar=0 degenerates to alpha=1 / ghat=0
+                    alpha, beta, q, p, obj = jax.lax.cond(
+                        jnp.max(gb2) > 0.0, solved, uniform, None)
+                return (q.astype(jnp.float32), p.astype(jnp.float32),
+                        alpha.astype(jnp.float32),
+                        beta.astype(jnp.float32), obj)
+
+            # traced (and always re-entered) under x64: the closed forms
+            # overflow f32 — see allocation_jax's precision contract
+            with enable_x64():
+                self._alloc_jax = jax.jit(alloc_on_device)
+
     # ------------------------------------------------------------------
-    def _allocate(self, grads: np.ndarray, gbar: np.ndarray):
-        """Steps 3–4: scalars uplink + PS solves eq. (28)."""
+    def _allocate(self, grads: np.ndarray, gbar: np.ndarray,
+                  gains: Optional[np.ndarray] = None):
+        """Steps 3–4: scalars uplink + PS solves eq. (28) (host NumPy)."""
         fl = self.fl
+        self.host_solver_calls += 1
+        gains = self.gains if gains is None else np.asarray(gains,
+                                                           np.float64)
         g2 = np.sum(grads ** 2, axis=1)
         gb = gbar if gbar.ndim == 2 else np.broadcast_to(gbar, grads.shape)
         gb2 = np.sum(gb ** 2, axis=1)
@@ -153,16 +226,18 @@ class FLSimulator:
             lambda g: quantize_mod.expected_quant_mse(g, fl.quant_bits)
         )(jnp.asarray(grads, jnp.float32)))
         prob = alloc.problem_from_stats(
-            g2, gb2, v, d2, self.gains, self.p_w, self.dim, fl)
+            g2, gb2, v, d2, gains, self.p_w, self.dim, fl)
         method = fl.allocator
         if float(gb2.max()) == 0.0:
             # no compensation history yet (round 0): optimizing against
             # gbar=0 degenerates to alpha=1 / ghat=0; use uniform this round
             method = 'uniform'
         if method == 'alternating':
-            sol = alloc.solve(prob, 'alternating', max_iters=2)
+            sol = alloc.solve(prob, 'alternating',
+                              max_iters=fl.allocation_max_iters or 2)
         elif method == 'barrier':
-            sol = alloc.solve(prob, 'barrier')
+            sol = alloc.solve(prob, 'barrier',
+                              max_iters=fl.allocation_max_iters or 6)
         else:
             sol = alloc.solve(prob, 'uniform')
         stats = dict(g2=g2, gb2=gb2, v=v, d2=d2, prob=prob)
@@ -174,17 +249,44 @@ class FLSimulator:
         hist = FLHistory()
         fl = self.fl
         kind = fl.transport
+        if compute_bound and fl.allocation_backend == 'jax':
+            # the Theorem-1 bound needs the host-side problem/stats the
+            # on-device path deliberately never materializes — fail loud
+            # instead of silently returning an empty hist.bound
+            raise ValueError("compute_bound=True requires "
+                             "allocation_backend='numpy'")
+        # per-round block-fading gains (seeded off the run seed, so a
+        # fixed-seed run is reproducible end to end)
+        traj = None
+        if fl.allocation_cadence == 'per_round':
+            traj = channel.block_fading_trajectory(
+                jax.random.fold_in(jax.random.PRNGKey(self._seed), 0x0FAD),
+                jnp.asarray(self.gains, jnp.float32), n_rounds)
+        gains_j = jnp.asarray(self.gains, jnp.float32)
+        p_w_j = jnp.asarray(self.p_w, jnp.float32)
         for n in range(n_rounds):
             t0 = time.time()
             self.key, kr = jax.random.split(self.key)
             losses, grads = self._per_client_grads(
                 self.params, self.client_x, self.client_y)
-            grads_np = np.asarray(grads, np.float64)
 
             ta = time.time()
             if kind in ('spfl', 'spfl_retx'):
-                sol, stats = self._allocate(grads_np, np.asarray(self.gbar))
-                q, p = jnp.asarray(sol.q), jnp.asarray(sol.p)
+                gains_n = gains_j if traj is None else traj[n]
+                if fl.allocation_backend == 'jax':
+                    # one on-device dispatch, no host round-trip (the
+                    # x64 re-entry keeps the jit cache key stable)
+                    with enable_x64():
+                        q, p, _, _, _ = self._alloc_jax(
+                            grads, self.gbar, gains_n, p_w_j)
+                    sol, stats = None, None
+                else:
+                    grads_np = np.asarray(grads, np.float64)
+                    sol, stats = self._allocate(
+                        grads_np, np.asarray(self.gbar),
+                        None if traj is None
+                        else np.asarray(gains_n, np.float64))
+                    q, p = jnp.asarray(sol.q), jnp.asarray(sol.p)
             else:
                 sol, stats, q, p = None, None, jnp.ones(self.K), jnp.ones(self.K)
             alloc_t = time.time() - ta
@@ -227,6 +329,8 @@ class FLSimulator:
                 hist.test_acc.append(float(acc))
                 hist.loss_delta.append(float(loss) - prev_loss)
             hist.payload_bits.append(float(diag.payload_bits))
+            hist.q_mean.append(float(jnp.mean(q)))
+            hist.p_mean.append(float(jnp.mean(p)))
             hist.sign_ok_frac.append(float(jnp.mean(
                 diag.sign_ok.astype(jnp.float32))))
             hist.mod_ok_frac.append(float(jnp.mean(

@@ -1,0 +1,242 @@
+"""NumPy<->JAX allocation-engine parity + property wall (ISSUE 5).
+
+The contract under test (documented in src/repro/core/README.md):
+
+* parity — both engines consume the same closed forms
+  (repro.core.alloc_common) in float64 and differ only in control-flow
+  bookkeeping and libm ulps, so the contractive SCA path agrees to
+  ~1e-11 relative on objectives / ~1e-6 on iterates, while the barrier
+  path's long PGD chains are path-chaotic and agree to the solvers'
+  convergence tol instead (see TOL below);
+* batching — ``solve_batched`` is bit-identical to a Python loop of
+  single jitted solves (the engine pins every reduction order, see
+  ``allocation_jax._ordered_sum``);
+* invariants — alpha in [0, alpha_max], beta strictly inside (0, 1) on
+  the bandwidth simplex, q >= p wherever the modulus channel binds
+  (sign prioritization; in the saturated regime q ~ p ~ 1 the solver is
+  indifferent and q - p can dip ~1e-4 below zero), and the alternating
+  objective is monotone non-increasing per outer iteration (the barrier
+  variant's interior-penalty steps do not guarantee true-objective
+  descent per iteration — only the final uniform safeguard).
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+from jax.experimental import enable_x64
+
+from repro.configs.base import FLConfig
+from repro.core import allocation as AL
+from repro.core import allocation_jax as AJ
+from repro.core import channel as CH
+
+# documented engine-parity tolerances (src/repro/core/README.md).  The
+# SCA path is contractive, so cross-library libm ulps stay ulps; the
+# barrier path runs ~1000 sequential PGD steps with discrete
+# backtracking decisions, so the engines approach the same basin along
+# different trajectories — endpoint spread is bounded by the solvers'
+# convergence tol, not by ulps.
+TOL = {
+    'alternating': dict(obj_rtol=1e-8, ab_atol=1e-4, qp_atol=1e-6),
+    'barrier': dict(obj_rtol=2e-5, ab_atol=5e-3, qp_atol=1e-4),
+}
+TOL['uniform'] = TOL['alternating']
+# q >= p is asserted where the modulus channel binds
+P_BINDING = 0.99
+
+
+def _problem(k=8, power_dbm=-14.0, seed=0, dim=60000,
+             gains=None) -> AL.AllocationProblem:
+    fl = dataclasses.replace(FLConfig(), tx_power_dbm=power_dbm)
+    if gains is None:
+        key = jax.random.PRNGKey(seed)
+        d = CH.sample_distances(key, k, 500.0)
+        gains = CH.path_gain(np.asarray(d), fl.path_loss_exp)
+    p_w = np.full(k, fl.tx_power_w)
+    rng = np.random.RandomState(seed)
+    g2 = np.abs(rng.randn(k)) + 0.2
+    gb2 = np.abs(rng.randn(k)) * 0.4 + 0.05
+    v = np.sqrt(g2 * gb2) * rng.uniform(0, 1, k)
+    d2 = np.abs(rng.randn(k)) * 0.05
+    return AL.problem_from_stats(g2, gb2, v, d2, gains, p_w, dim, fl)
+
+
+def _assert_parity(ref: AL.Allocation, got: AL.Allocation, method: str):
+    tol = TOL[method]
+    assert got.objective == pytest.approx(ref.objective,
+                                          rel=tol['obj_rtol'], abs=1e-12)
+    np.testing.assert_allclose(got.alpha, ref.alpha, atol=tol['ab_atol'])
+    np.testing.assert_allclose(got.beta, ref.beta, atol=tol['ab_atol'])
+    np.testing.assert_allclose(got.q, ref.q, atol=tol['qp_atol'])
+    np.testing.assert_allclose(got.p, ref.p, atol=tol['qp_atol'])
+
+
+# ---------------------------------------------------------------------------
+# NumPy <-> JAX parity grid
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize('k', [4, 8, 32])
+@pytest.mark.parametrize('power', [-4.0, -14.0, -24.0])
+def test_parity_barrier_grid(k, power):
+    prob = _problem(k=k, power_dbm=power, seed=k)
+    _assert_parity(AL.solve(prob, 'barrier'), AJ.solve(prob, 'barrier'),
+                   'barrier')
+
+
+@pytest.mark.parametrize('k', [4, 8, 32])
+@pytest.mark.parametrize('power', [-6.0, -20.0])
+def test_parity_alternating_grid(k, power):
+    # max_iters=2 matches the reference's host-cost-bound FL-loop setting
+    prob = _problem(k=k, power_dbm=power, seed=k + 1)
+    _assert_parity(AL.solve(prob, 'alternating', max_iters=2),
+                   AJ.solve(prob, 'alternating', max_iters=2),
+                   'alternating')
+
+
+def test_uniform_method_parity():
+    prob = _problem(k=8, power_dbm=-18.0, seed=5)
+    _assert_parity(AL.solve(prob, 'uniform'), AJ.solve(prob, 'uniform'),
+                   'uniform')
+
+
+# ---------------------------------------------------------------------------
+# batching: vmapped solve ==(bit)== loop of single solves
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize('method', ['alternating', 'barrier'])
+def test_vmap_batch_bit_matches_single_solves(method):
+    probs = [_problem(k=6, power_dbm=p, seed=s)
+             for s, p in enumerate([-4.0, -10.0, -16.0, -22.0, -28.0,
+                                    -34.0, -8.0, -19.0])]
+    with enable_x64():
+        batched = AJ.stack_problems(probs)
+    sol = AJ.solve_batched(batched, method, max_iters=3)
+    for i, prob in enumerate(probs):
+        with enable_x64():
+            one = AJ._solve_jit(AJ.from_reference(prob), method=method,
+                                max_iters=3)
+        for f in ('alpha', 'beta', 'q', 'p', 'objective', 'iters'):
+            a = np.asarray(getattr(sol, f)[i])
+            b = np.asarray(getattr(one, f))
+            assert np.array_equal(a, b), (method, i, f)
+
+
+def test_batch_over_gains_shapes():
+    prob = _problem(k=4, power_dbm=-20.0, seed=9)
+    with enable_x64():
+        jp = AJ.from_reference(prob)
+        fades = CH.block_fading_trajectory(jax.random.PRNGKey(0),
+                                           prob.gains, 12)
+        batched = AJ.batch_over_gains(jp, fades)
+    assert batched.gains.shape == (12, 4)
+    assert batched.A.shape == (12, 4)
+    sol = AJ.solve_batched(batched, 'barrier')
+    assert sol.alpha.shape == (12, 4)
+    assert bool(np.all(np.isfinite(np.asarray(sol.objective))))
+
+
+@pytest.mark.slow
+def test_batched_solve_matches_numpy_reference_over_64_fading_draws():
+    """Acceptance: one solve_batched dispatch over >= 64 fading draws
+    matches the NumPy reference per-draw within the documented
+    tolerance."""
+    base = _problem(k=8, power_dbm=-16.0, seed=2)
+    with enable_x64():
+        fades = CH.block_fading_trajectory(jax.random.PRNGKey(7),
+                                           base.gains, 64, rho=0.8,
+                                           shadow_std_db=4.0)
+    fades = np.asarray(fades, np.float64)
+    probs = [dataclasses.replace(base, gains=fades[i]) for i in range(64)]
+    with enable_x64():
+        sol = AJ.solve_batched(AJ.stack_problems(probs), 'barrier')
+    for i, prob in enumerate(probs):
+        ref = AL.solve(prob, 'barrier')
+        tol = TOL['barrier']
+        assert float(sol.objective[i]) == pytest.approx(
+            ref.objective, rel=tol['obj_rtol'], abs=1e-12), i
+        np.testing.assert_allclose(np.asarray(sol.alpha[i]), ref.alpha,
+                                   atol=tol['ab_atol'])
+        np.testing.assert_allclose(np.asarray(sol.beta[i]), ref.beta,
+                                   atol=tol['ab_atol'])
+        np.testing.assert_allclose(np.asarray(sol.q[i]), ref.q,
+                                   atol=tol['qp_atol'])
+        np.testing.assert_allclose(np.asarray(sol.p[i]), ref.p,
+                                   atol=tol['qp_atol'])
+
+
+# ---------------------------------------------------------------------------
+# allocation invariants (seeded grid — runs without hypothesis too)
+# ---------------------------------------------------------------------------
+
+def _check_invariants(sol: AL.Allocation, fl: FLConfig, method: str):
+    assert np.all(sol.alpha >= -1e-12)
+    assert np.all(sol.alpha <= min(max(fl.alpha_max, 1e-3), 1.0) + 1e-9)
+    assert np.all(sol.beta > 0) and np.all(sol.beta < 1)
+    assert sol.beta.sum() <= 1.0 + 1e-9
+    assert np.all((sol.q >= 0) & (sol.q <= 1))
+    assert np.all((sol.p >= 0) & (sol.p <= 1))
+    # sign prioritization: q >= p wherever the modulus channel binds
+    binding = sol.p <= P_BINDING
+    assert np.all(sol.q[binding] >= sol.p[binding] - 1e-7), \
+        (sol.q, sol.p, sol.alpha)
+    if method == 'alternating':
+        objs = sol.info['objectives']
+        for a, b in zip(objs, objs[1:]):
+            assert b <= a + 1e-9 * (1.0 + abs(a)), objs
+
+
+@pytest.mark.parametrize('method', ['alternating', 'barrier'])
+def test_invariants_seeded_grid_jax(method):
+    for k, power, seed in [(4, -6.0, 11), (6, -18.0, 12), (8, -30.0, 13),
+                           (6, -33.0, 14)]:
+        prob = _problem(k=k, power_dbm=power, seed=seed)
+        sol = AJ.solve(prob, method, max_iters=4)
+        _check_invariants(sol, prob.fl, method)
+
+
+def test_invariants_seeded_grid_numpy():
+    for k, power, seed in [(4, -6.0, 11), (6, -18.0, 12), (8, -30.0, 13)]:
+        prob = _problem(k=k, power_dbm=power, seed=seed)
+        _check_invariants(AL.solve(prob, 'barrier'), prob.fl, 'barrier')
+    prob = _problem(k=6, power_dbm=-20.0, seed=15)
+    _check_invariants(AL.solve(prob, 'alternating', max_iters=3), prob.fl,
+                      'alternating')
+
+
+# ---------------------------------------------------------------------------
+# hypothesis property wall (skips cleanly when hypothesis is absent)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 500), power=st.floats(-35.0, -2.0),
+       k=st.sampled_from([4, 6, 8]))
+def test_property_invariants_jax_alternating(seed, power, k):
+    prob = _problem(k=k, power_dbm=power, seed=seed)
+    sol = AJ.solve(prob, 'alternating', max_iters=3)
+    _check_invariants(sol, prob.fl, 'alternating')
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 500), power=st.floats(-35.0, -2.0),
+       k=st.sampled_from([4, 6, 8]))
+def test_property_invariants_jax_barrier(seed, power, k):
+    prob = _problem(k=k, power_dbm=power, seed=seed)
+    _check_invariants(AJ.solve(prob, 'barrier'), prob.fl, 'barrier')
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 500), power=st.floats(-35.0, -2.0))
+def test_property_invariants_numpy_barrier(seed, power):
+    prob = _problem(k=6, power_dbm=power, seed=seed)
+    _check_invariants(AL.solve(prob, 'barrier'), prob.fl, 'barrier')
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 500), power=st.floats(-35.0, -2.0))
+def test_property_engines_agree(seed, power):
+    """The two backends land on the same optimum for random instances."""
+    prob = _problem(k=6, power_dbm=power, seed=seed)
+    _assert_parity(AL.solve(prob, 'barrier'), AJ.solve(prob, 'barrier'),
+                   'barrier')
