@@ -39,16 +39,26 @@ def report(path: str) -> None:
         return
     suite = data.get('suite', os.path.basename(path))
     hist = data.get('history', [])
+    if not hist:
+        print(f'== {suite}: empty history — no entries recorded yet '
+              '(run benchmarks/run.py --json to create one)')
+        return
     if len(hist) < 2:
-        print(f'== {suite}: {len(hist)} history entry — nothing to diff')
+        print(f'== {suite}: 1 history entry '
+              f"({hist[-1].get('sha')}/{hist[-1].get('date')}) — "
+              'no prior entry to diff against')
         return
     prev, cur = hist[-2], hist[-1]
     print(f"== {suite}: {prev.get('sha')}/{prev.get('date')} -> "
           f"{cur.get('sha')}/{cur.get('date')}")
-    prev_rows = {r['name']: r for r in prev.get('rows', [])}
+    prev_rows = {r['name']: r for r in prev.get('rows', [])
+                 if isinstance(r, dict) and 'name' in r}
     cur_names = set()
     for row in cur.get('rows', []):
-        name = row['name']
+        name = row.get('name') if isinstance(row, dict) else None
+        if name is None or 'us_per_call' not in row:
+            print(f'   (skipping malformed row: {row!r:.60})')
+            continue
         cur_names.add(name)
         us = float(row['us_per_call'])
         pr = prev_rows.get(name)
@@ -82,8 +92,12 @@ def main() -> None:
         print('no BENCH_*.json files found')
         return
     for path in paths:
-        report(path)
+        try:
+            report(path)
+        except Exception as e:   # informational tool: never fail the build
+            print(f'{os.path.basename(path)}: report error ({e})')
 
 
 if __name__ == '__main__':
     main()
+    sys.exit(0)

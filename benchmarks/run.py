@@ -79,20 +79,26 @@ def _load_history(path: str) -> list:
 
 
 def _write_json(tag: str, rows, elapsed_s: float) -> str:
-    import jax
     import common
+    from repro.obs.sink import MANIFEST_KEYS, run_manifest
+
+    # same provenance record as training-run telemetry files
+    # (repro.obs.sink.run_manifest), so a BENCH history entry and a
+    # telemetry JSONL measured under the same knobs join on shared keys
+    man = run_manifest(extra={'driver': 'benchmarks.run', 'suite': tag})
     entry = {
         'date': time.strftime('%Y-%m-%d'),
         'sha': _git_sha(),
         'rows': rows,
         'elapsed_s': round(elapsed_s, 1),
         'env': {
-            'backend': jax.default_backend(),
-            'jax': jax.__version__,
+            'backend': man['jax']['backend'],
+            'jax': man['jax']['version'],
             'python': platform.python_version(),
             'smoke': common.SMOKE,
             'full': common.FULL,
         },
+        'manifest': {k: man[k] for k in MANIFEST_KEYS if k in man},
     }
     path = os.path.join(_ROOT, f'BENCH_{tag}.json')
     history = _load_history(path)
@@ -109,6 +115,8 @@ def _write_json(tag: str, rows, elapsed_s: float) -> str:
 def main() -> None:
     json_mode = '--json' in sys.argv
     filters = [a for a in sys.argv[1:] if not a.startswith('-')]
+    from repro.launch import env as launch_env
+    launch_env.configure()      # platform/x64/XLA hygiene, pre-backend
     import common
     print('name,us_per_call,derived')
     failures = 0

@@ -280,6 +280,19 @@ class FLConfig:
     0 = auto, keeping each path's historical defaults: numpy runs the
     host-cost-bound 2 for 'alternating' and the solver default 6 for
     'barrier'; jax runs 6 for either (iterations are cheap on-device).
+
+    ``telemetry_flush_every``: rounds between device->host telemetry
+    flushes.  Per-round ``RoundTelemetry`` records accumulate in an
+    on-device ring buffer (``repro.obs.ringbuf``) and cross to the host
+    only at flush — non-flush rounds issue zero device->host transfers
+    (the zero-sync contract ``tests/test_obs.py`` proves with a transfer
+    guard).  1 reproduces the old flush-per-round cadence.
+
+    ``telemetry_path``: when set, the training loop writes one JSONL
+    telemetry file there — run manifest on line 0 (git SHA, config hash,
+    platform, XLA flags — ``repro.obs.sink.run_manifest``), then one
+    ``round`` row per flushed record, then stage-span and metrics
+    summaries.  ``None`` keeps telemetry in-memory only (FLHistory).
     """
     n_devices: int = 20                  # K
     bandwidth_hz: float = 10e6           # B
@@ -312,6 +325,8 @@ class FLConfig:
     allocation_backend: str = 'numpy'    # numpy | jax
     allocation_cadence: str = 'static'   # static | per_round
     allocation_max_iters: int = 0        # 0 = auto (see docstring)
+    telemetry_flush_every: int = 8       # ring capacity / flush cadence
+    telemetry_path: Optional[str] = None  # JSONL sink (None = in-memory)
 
     @property
     def noise_psd_w(self) -> float:

@@ -92,6 +92,8 @@ from repro.core.quantize import (
     quantization_error_bound, stochastic_quantize,
 )
 from repro.kernels import ops as kops
+from repro.obs.record import RoundTelemetry
+from repro.obs.trace import stage_scope
 from repro.wire import corrupt as wire_corrupt
 from repro.wire import format as wire_fmt
 from repro.wire import packets as wire_packets
@@ -101,26 +103,13 @@ Array = jax.Array
 KINDS = ('spfl', 'spfl_retx', 'dds', 'onebit', 'scheduling', 'error_free')
 _Q_FLOOR = 1e-8        # below this, 1/q unbiasing is switched off (q ~ 0)
 
-
-class TransportDiagnostics(NamedTuple):
-    """Per-round uplink telemetry.  The first five fields exist on every
-    transport; the trailing CRC-state fields are populated by the
-    channels that measure them (``channel='bitlevel'``, and
-    ``retx_attempts`` also by the fixed Bernoulli retx accounting) and
-    stay ``None`` elsewhere."""
-    sign_ok: Array          # (K,) bool — sign packet decoded
-    mod_ok: Array           # (K,) bool — modulus packet decoded
-    accepted: Array         # (K,) bool — client contributed to the update
-    payload_bits: Array     # scalar — total uplink payload this round
-    retransmissions: Array  # scalar — total sign resends this round
-    sign_flips: Optional[Array] = None    # (K,) channel bit flips (sign)
-    mod_flips: Optional[Array] = None     # (K,) channel bit flips (mod)
-    sign_crc_ok: Optional[Array] = None   # (K,) first-attempt CRC verify
-    mod_crc_ok: Optional[Array] = None    # (K,) modulus CRC verify
-    retx_attempts: Optional[Array] = None  # (K,) per-client resend count
-    sign_votes: Optional[Array] = None    # (l,) int32 — +1 sign votes among
-    #   accepted clients, computed in the packed domain (flat packed wire
-    #   with K <= 32 only; the signSGD-style agreement telemetry)
+# Every transport returns the structured per-round telemetry record
+# (repro.obs.record.RoundTelemetry).  It absorbed the grab-bag
+# ``TransportDiagnostics`` NamedTuple that used to live here — same
+# leading fields, same None-off-path contract — and additionally carries
+# the allocation state the training loops attach via
+# ``RoundTelemetry.with_allocation`` before ring-buffering the record on
+# device (repro.obs.ringbuf).
 
 
 # ---------------------------------------------------------------------------
@@ -268,7 +257,7 @@ def spfl_aggregate(grads: Array, gbar: Array, q: Array, p: Array,
                    channel: str = 'bernoulli',
                    collective: str = 'gather', mesh=None,
                    client_axes: Optional[tuple] = None
-                   ) -> Tuple[Array, TransportDiagnostics]:
+                   ) -> Tuple[Array, RoundTelemetry]:
     """Eq. (15)-(17).  grads: (K, l); gbar: (l,) or (K, l); q, p: (K,).
 
     ``wire='packed'`` materializes the two packets as bit-packed word
@@ -300,21 +289,24 @@ def spfl_aggregate(grads: Array, gbar: Array, q: Array, p: Array,
     sharded = collective == 'sharded'
     K, l = grads.shape
     kq, ko = jax.random.split(key)
-    qg = _per_client_quantize(grads, bits, kq)
+    with stage_scope('quantize_pack'):
+        qg = _per_client_quantize(grads, bits, kq)
     q_eff = 1.0 - (1.0 - q) ** (n_retx + 1)      # sign retransmission(s)
 
     extras = {}
     sign_words = mod_words = None
     if wire == 'packed':
-        sign_words, mod_words, measured = encode_wire(qg, round_idx)
+        with stage_scope('quantize_pack'):
+            sign_words, mod_words, measured = encode_wire(qg, round_idx)
         if sharded:
             sign_words = _client_constrain(sign_words, mesh, client_axes)
             mod_words = _client_constrain(mod_words, mesh, client_axes)
     if channel == 'bitlevel':
-        rep = bitchannel.transmit_uplink(
-            ko, sign_words, mod_words, q, p, n=l, bits=bits,
-            n_retx=n_retx, mesh=mesh if sharded else None,
-            client_axes=client_axes)
+        with stage_scope('corrupt_fold'):
+            rep = bitchannel.transmit_uplink(
+                ko, sign_words, mod_words, q, p, n=l, bits=bits,
+                n_retx=n_retx, mesh=mesh if sharded else None,
+                client_axes=client_axes)
         sign_words, mod_words = rep.sign_words, rep.mod_words
         sign_ok, mod_ok = rep.sign_ok, rep.mod_ok
         retx = jnp.sum(rep.retx_attempts).astype(jnp.float32)
@@ -341,36 +333,39 @@ def spfl_aggregate(grads: Array, gbar: Array, q: Array, p: Array,
         payload = payload_base + retx * sign_bits
 
     w = _inverse_prob(sign_ok, q_eff)
-    if wire == 'packed':
-        # decode-once: O(K) header words, then ONE fused kernel pass over
-        # the K stacked payload buffers — no per-client unpack, no (K, l)
-        # float intermediate (kernels.ops.spfl_aggregate_packed); under
-        # 'sharded' the pass is per-device partials + one psum instead
-        g_min, g_max = wire_packets.mod_header_ranges(mod_words)
-        if sharded:
-            acc, votes = kops.spfl_aggregate_packed_sharded(
-                wire_packets.sign_payload(sign_words),
-                wire_packets.mod_payload(mod_words),
-                jnp.asarray(gbar, jnp.float32), g_min, g_max, mod_ok, w,
-                sign_ok, l, bits, mesh=mesh, client_axes=client_axes)
+    with stage_scope('decode_aggregate'):
+        if wire == 'packed':
+            # decode-once: O(K) header words, then ONE fused kernel pass
+            # over the K stacked payload buffers — no per-client unpack,
+            # no (K, l) float intermediate (kernels.ops.
+            # spfl_aggregate_packed); under 'sharded' the pass is
+            # per-device partials + one psum instead
+            g_min, g_max = wire_packets.mod_header_ranges(mod_words)
+            if sharded:
+                acc, votes = kops.spfl_aggregate_packed_sharded(
+                    wire_packets.sign_payload(sign_words),
+                    wire_packets.mod_payload(mod_words),
+                    jnp.asarray(gbar, jnp.float32), g_min, g_max, mod_ok,
+                    w, sign_ok, l, bits, mesh=mesh,
+                    client_axes=client_axes)
+            else:
+                acc, votes = kops.spfl_aggregate_packed(
+                    wire_packets.sign_payload(sign_words),
+                    wire_packets.mod_payload(mod_words),
+                    jnp.asarray(gbar, jnp.float32), g_min, g_max, mod_ok,
+                    w, sign_ok, l, bits)
+            ghat = acc / K
+            if votes is not None:
+                extras['sign_votes'] = votes
         else:
-            acc, votes = kops.spfl_aggregate_packed(
-                wire_packets.sign_payload(sign_words),
-                wire_packets.mod_payload(mod_words),
-                jnp.asarray(gbar, jnp.float32), g_min, g_max, mod_ok, w,
-                sign_ok, l, bits)
-        ghat = acc / K
-        if votes is not None:
-            extras['sign_votes'] = votes
-    else:
-        modulus = dequantize_modulus(qg)                   # (K, l)
-        gbar_k = (jnp.broadcast_to(gbar, grads.shape)
-                  if gbar.ndim == 1 else gbar)
-        modulus = jnp.where(mod_ok[:, None], modulus, gbar_k)
-        signed = qg.sign.astype(jnp.float32) * modulus
-        ghat = _seq_client_mean(w[:, None] * signed)
+            modulus = dequantize_modulus(qg)                   # (K, l)
+            gbar_k = (jnp.broadcast_to(gbar, grads.shape)
+                      if gbar.ndim == 1 else gbar)
+            modulus = jnp.where(mod_ok[:, None], modulus, gbar_k)
+            signed = qg.sign.astype(jnp.float32) * modulus
+            ghat = _seq_client_mean(w[:, None] * signed)
 
-    return ghat, TransportDiagnostics(sign_ok, mod_ok, sign_ok,
+    return ghat, RoundTelemetry(sign_ok, mod_ok, sign_ok,
                                       jnp.asarray(payload, jnp.float32),
                                       retx, **extras)
 
@@ -399,7 +394,7 @@ def _baseline_packet_fate(key, q: Array, n_bits: int, fl: FLConfig
 
 
 def dds_aggregate(grads: Array, beta: Array, gains: Array, p_w: Array,
-                  fl: FLConfig, key) -> Tuple[Array, TransportDiagnostics]:
+                  fl: FLConfig, key) -> Tuple[Array, RoundTelemetry]:
     """[29]: one packet of l(b+1)+b0 bits; failures discarded; mean over
     the received set."""
     K, l = grads.shape
@@ -412,11 +407,11 @@ def dds_aggregate(grads: Array, beta: Array, gains: Array, p_w: Array,
     denom = jnp.maximum(jnp.sum(ok.astype(jnp.float32)), 1.0)
     ghat = jnp.sum(jnp.where(ok[:, None], vals, 0.0), axis=0) / denom
     payload = jnp.asarray(K * n_bits, jnp.float32)
-    return ghat, TransportDiagnostics(ok, ok, ok, payload, jnp.zeros(()))
+    return ghat, RoundTelemetry(ok, ok, ok, payload, jnp.zeros(()))
 
 
 def onebit_aggregate(grads: Array, beta: Array, gains: Array, p_w: Array,
-                     fl: FLConfig, key) -> Tuple[Array, TransportDiagnostics]:
+                     fl: FLConfig, key) -> Tuple[Array, RoundTelemetry]:
     """[28]: sign-only uplink.  The aggregate is the mean received sign
     scaled by the mean client modulus (one extra scalar per client,
     analogous to the b0 side-channel) so the step magnitude is comparable
@@ -429,14 +424,14 @@ def onebit_aggregate(grads: Array, beta: Array, gains: Array, p_w: Array,
     denom = jnp.maximum(jnp.sum(ok.astype(jnp.float32)), 1.0)
     ghat = jnp.sum(jnp.where(ok[:, None], vals, 0.0), axis=0) / denom
     payload = jnp.asarray(K * l, jnp.float32)
-    return ghat, TransportDiagnostics(ok, jnp.zeros_like(ok), ok, payload,
+    return ghat, RoundTelemetry(ok, jnp.zeros_like(ok), ok, payload,
                                       jnp.zeros(()))
 
 
 def scheduling_aggregate(grads: Array, gains: Array, p_w: Array,
                          fl: FLConfig, key,
                          ratio: Optional[float] = None
-                         ) -> Tuple[Array, TransportDiagnostics]:
+                         ) -> Tuple[Array, RoundTelemetry]:
     """[46]: PS schedules the ceil(ratio*K) devices with the largest
     instantaneous channel gain; each gets an equal share of the band."""
     K, l = grads.shape
@@ -456,14 +451,14 @@ def scheduling_aggregate(grads: Array, gains: Array, p_w: Array,
     denom = jnp.maximum(jnp.sum(ok.astype(jnp.float32)), 1.0)
     ghat = jnp.sum(jnp.where(ok[:, None], vals, 0.0), axis=0) / denom
     payload = jnp.asarray(m * n_bits, jnp.float32)
-    return ghat, TransportDiagnostics(ok, ok, ok, payload, jnp.zeros(()))
+    return ghat, RoundTelemetry(ok, ok, ok, payload, jnp.zeros(()))
 
 
 def error_free_aggregate(grads: Array, fl: FLConfig, key,
                          wire: Optional[str] = None, round_idx=0,
                          collective: Optional[str] = None, mesh=None,
                          client_axes: Optional[tuple] = None
-                         ) -> Tuple[Array, TransportDiagnostics]:
+                         ) -> Tuple[Array, RoundTelemetry]:
     wire = fl.wire if wire is None else wire
     assert wire in WIRE_KINDS, wire
     collective, client_axes = _resolve_collective(
@@ -500,7 +495,7 @@ def error_free_aggregate(grads: Array, fl: FLConfig, key,
                               jnp.float32)
         ghat = _seq_client_mean(qg.sign.astype(jnp.float32)
                                 * dequantize_modulus(qg))
-    return ghat, TransportDiagnostics(ok, ok, ok, payload, jnp.zeros(()),
+    return ghat, RoundTelemetry(ok, ok, ok, payload, jnp.zeros(()),
                                       **extras)
 
 
@@ -750,7 +745,7 @@ def spfl_aggregate_tree(grads_tree, gbar_tree, q: Array, p: Array,
     else:
         sign_bits, mod_bits = packet_bits(l, bits, fl.b0_bits)
         payload = K * (sign_bits + mod_bits)
-    diag = TransportDiagnostics(
+    diag = RoundTelemetry(
         sign_ok, mod_ok, sign_ok,
         jnp.asarray(payload + retx * sign_bits, jnp.float32),
         retx, **extras)
@@ -815,7 +810,7 @@ def error_free_aggregate_tree(grads_tree, fl: FLConfig, key,
     else:
         payload = K * (stats['dim'] * (bits + 1) + fl.b0_bits)
     ok = jnp.ones((K,), bool)
-    diag = TransportDiagnostics(ok, ok, ok,
+    diag = RoundTelemetry(ok, ok, ok,
                                 jnp.asarray(payload, jnp.float32),
                                 jnp.zeros(()))
     return jax.tree.unflatten(treedef, out), stats, diag

@@ -395,13 +395,15 @@ def spfl_aggregate_packed_sharded(sign_payload: Array, qidx_payload: Array,
     out_specs = (P(None), P(None)) if votes_on else (P(None),)
 
     def local(sp, qp, gb, mn, mx, mo, w, so):
-        acc, votes = spfl_aggregate_packed(
-            sp, qp, gb, mn, mx, mo, w, so, n, bits,
-            interpret=interpret, use_kernel=use_kernel,
-            with_votes=votes_on)
-        acc = jax.lax.psum(acc, axes)
-        if votes_on:
-            return acc, jax.lax.psum(votes, axes)
+        with jax.named_scope('obs/decode_aggregate'):
+            acc, votes = spfl_aggregate_packed(
+                sp, qp, gb, mn, mx, mo, w, so, n, bits,
+                interpret=interpret, use_kernel=use_kernel,
+                with_votes=votes_on)
+        with jax.named_scope('obs/psum'):
+            acc = jax.lax.psum(acc, axes)
+            if votes_on:
+                return acc, jax.lax.psum(votes, axes)
         return (acc,)
 
     out = shard_map(local, mesh=mesh, in_specs=in_specs,

@@ -13,6 +13,7 @@ from __future__ import annotations
 
 import argparse
 import time
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -24,7 +25,9 @@ from repro.core import allocation as alloc
 from repro.core import allocation_jax as alloc_jax
 from repro.core import transport as tr
 from repro.data import synth_tokens
+from repro.launch import env as launch_env
 from repro.models import transformer as tf
+from repro.obs import JsonlSink, run_manifest, to_row
 from repro.training import distributed as dist
 
 
@@ -33,7 +36,8 @@ def run(arch: str, steps: int, clients: int, batch: int, seq: int,
         bandwidth_hz: float, tx_power_dbm: float, seed: int = 0,
         log_every: int = 1, wire: str = 'analytic',
         collective: str = 'gather', allocation_backend: str = 'numpy',
-        allocation_cadence: str = 'static') -> dict:
+        allocation_cadence: str = 'static',
+        telemetry_path: Optional[str] = None) -> dict:
     cfg = get_arch(arch)
     fl = FLConfig(n_devices=clients, learning_rate=lr,
                   bandwidth_hz=bandwidth_hz, tx_power_dbm=tx_power_dbm,
@@ -68,6 +72,12 @@ def run(arch: str, steps: int, clients: int, batch: int, seq: int,
         mesh = make_host_mesh()
     step = jax.jit(dist.make_fl_train_step(cfg, fl, transport_kind,
                                            mesh=mesh))
+    # per-step RoundTelemetry JSONL with the shared run manifest (this
+    # driver already syncs per step for logging, so rows are written
+    # inline; the zero-sync ring path lives in training/fl_loop.py)
+    sink = (JsonlSink(telemetry_path, run_manifest(
+        fl, mesh=mesh, extra={'driver': 'launch.train', 'arch': arch}))
+        if telemetry_path else None)
     gbar = dist.init_gbar(params)
     toks = synth_tokens(clients * batch * 4, seq + 1, cfg.vocab_size, seed)
     toks = toks.reshape(clients, batch * 4, seq + 1)
@@ -124,11 +134,18 @@ def run(arch: str, steps: int, clients: int, batch: int, seq: int,
         history['q'].append(float(jnp.mean(q)))
         history['p'].append(float(jnp.mean(p)))
         history['step_s'].append(dt)
+        if sink is not None:
+            row = to_row(m['telemetry'], round_idx=n)
+            row['loss'] = float(m['loss'])
+            row['step_s'] = dt
+            sink.write_round(row)
         if n % log_every == 0:
             print(f'step {n:4d} loss {m["loss"]:.4f} '
                   f'q̄ {float(jnp.mean(q)):.3f} p̄ {float(jnp.mean(p)):.3f} '
                   f'sign_ok {int(jnp.sum(m["sign_ok"]))}/{clients} '
                   f'{dt:.2f}s', flush=True)
+    if sink is not None:
+        sink.close()
     return history
 
 
@@ -161,12 +178,17 @@ def main():
                     choices=['static', 'per_round'],
                     help="'per_round' evolves channel gains every round "
                          "via the seeded block-fading process")
+    ap.add_argument('--telemetry-out', default=None,
+                    help='write per-step RoundTelemetry JSONL (+ run '
+                         'manifest) to this path')
     args = ap.parse_args()
+    launch_env.configure()      # pin platform/x64/XLA flags, record state
     run(args.arch, args.steps, args.clients, args.batch, args.seq,
         args.transport, args.allocator, args.lr, args.bandwidth_hz,
         args.tx_power_dbm, wire=args.wire, collective=args.collective,
         allocation_backend=args.allocation_backend,
-        allocation_cadence=args.allocation_cadence)
+        allocation_cadence=args.allocation_cadence,
+        telemetry_path=args.telemetry_out)
 
 
 if __name__ == '__main__':

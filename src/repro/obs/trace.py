@@ -1,0 +1,104 @@
+"""Lightweight stage spans for the SP-FL round pipeline.
+
+Two layers, both optional and both zero-cost on the device:
+
+* **Host spans** (:class:`StageTrace`) — wall-clock timing of the host
+  view of each stage.  On an async backend a span brackets the *dispatch*
+  of its stage, not the device execution (that is the point: a round
+  whose spans are all sub-millisecond is a round with no host sync in it).
+  Opt-in ``annotate=True`` additionally opens a
+  ``jax.profiler.TraceAnnotation`` per span so the stages land as named
+  regions in a profiler trace (``jax.profiler.trace`` /
+  TensorBoard) — the hook that turns wall-clock hints into device truth.
+
+* **Traced scopes** (:func:`stage_scope`) — ``jax.named_scope`` wrappers
+  the transport/kernel code uses INSIDE jitted functions, so the stage
+  names survive into the jaxpr/HLO and profiler timelines.  Free at
+  runtime (names only exist at trace time).
+
+``STAGES`` is the canonical round decomposition the ISSUE names:
+allocation solve -> quantize/pack -> corrupt/fold -> decode-once
+aggregate -> psum -> update.
+"""
+from __future__ import annotations
+
+import time
+from contextlib import contextmanager
+from typing import Any, Dict, List, Optional
+
+import jax
+
+# canonical stage names of one SP-FL round (transport code emits the
+# middle four as traced scopes; the training loops bracket the outer two)
+STAGES = ('alloc_solve', 'quantize_pack', 'corrupt_fold',
+          'decode_aggregate', 'psum', 'update')
+
+
+@contextmanager
+def stage_scope(name: str):
+    """Name a pipeline stage inside traced code: ``jax.named_scope`` so
+    the ops carry ``obs/<name>`` in jaxprs, HLO metadata and profiler
+    timelines.  No runtime cost; safe outside tracing too."""
+    with jax.named_scope(f'obs/{name}'):
+        yield
+
+
+class StageTrace:
+    """Accumulates host wall-clock spans per stage name.
+
+    >>> tracer = StageTrace()
+    >>> with tracer.span('alloc_solve'):
+    ...     dispatch_the_solve()
+    >>> tracer.summary()['alloc_solve']['count']
+    1
+    """
+
+    def __init__(self, annotate: bool = False) -> None:
+        # annotate=True opens a jax.profiler.TraceAnnotation per span —
+        # opt-in because annotations are only useful under an active
+        # profiler session and cost a few µs each
+        self.annotate = annotate
+        self._spans: Dict[str, List[float]] = {}
+
+    @contextmanager
+    def span(self, name: str):
+        ann = (jax.profiler.TraceAnnotation(f'obs/{name}')
+               if self.annotate else None)
+        if ann is not None:
+            ann.__enter__()
+        t0 = time.perf_counter()
+        try:
+            with jax.named_scope(f'obs/{name}'):
+                yield
+        finally:
+            dt = time.perf_counter() - t0
+            if ann is not None:
+                ann.__exit__(None, None, None)
+            self._spans.setdefault(name, []).append(dt)
+
+    # ------------------------------------------------------------------
+    def durations(self, name: str) -> List[float]:
+        return list(self._spans.get(name, []))
+
+    def summary(self) -> Dict[str, Dict[str, Any]]:
+        out: Dict[str, Dict[str, Any]] = {}
+        for name, ds in self._spans.items():
+            out[name] = {'count': len(ds), 'total_s': sum(ds),
+                         'mean_s': sum(ds) / len(ds), 'last_s': ds[-1]}
+        return out
+
+    def reset(self) -> None:
+        self._spans.clear()
+
+
+_NULL_SPANS: Optional['StageTrace'] = None
+
+
+def null_trace() -> StageTrace:
+    """A shared no-op-ish trace for call sites that want ``span`` always
+    available; still records, but callers that never read it pay only a
+    perf_counter pair per stage."""
+    global _NULL_SPANS
+    if _NULL_SPANS is None:
+        _NULL_SPANS = StageTrace()
+    return _NULL_SPANS

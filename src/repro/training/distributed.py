@@ -39,6 +39,7 @@ import jax.numpy as jnp
 from repro.configs.base import FLConfig, ModelConfig
 from repro.core import transport as tr
 from repro.models import transformer as tf
+from repro.obs.record import round_scalars
 
 
 def init_gbar(params) -> Any:
@@ -102,6 +103,12 @@ def make_fl_train_step(cfg: ModelConfig, fl: FLConfig,
             lambda pp, g: (pp.astype(jnp.float32)
                            - lr * g).astype(pp.dtype), params, ghat)
         new_gbar = jax.tree.map(lambda g: jnp.abs(g), ghat)
+        # telemetry keys come from the shared RoundTelemetry serializer
+        # (repro.obs.record.round_scalars — same names as the FLHistory
+        # per-round lists), not a hand-rolled dict; the per-client vectors
+        # tests and the host allocator consume ride alongside, and the
+        # full record is returned under 'telemetry' for ring-buffering
+        diag = diag.with_allocation(q, p)
         metrics = {
             'loss': jnp.mean(losses),
             'client_losses': losses,
@@ -110,8 +117,8 @@ def make_fl_train_step(cfg: ModelConfig, fl: FLConfig,
             'g_max': stats['g_max'],
             'sign_ok': diag.sign_ok,
             'mod_ok': diag.mod_ok,
-            'payload_bits': diag.payload_bits,
-            'retransmissions': diag.retransmissions,
+            'telemetry': diag,
+            **round_scalars(diag),
         }
         return new_params, new_gbar, metrics
 

@@ -42,6 +42,11 @@ from repro.core import allocation_jax as alloc_jax
 from repro.core import channel, convergence, transport
 from repro.core import quantize as quantize_mod
 from repro.models.cnn import cnn_accuracy, cnn_forward, cnn_loss, init_cnn
+from repro.obs import record as obs_record
+from repro.obs import ringbuf as obs_ring
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.sink import JsonlSink, run_manifest
+from repro.obs.trace import StageTrace
 
 
 @dataclass
@@ -101,6 +106,12 @@ class FLSimulator:
         else:
             self.gbar = jnp.zeros((self.dim,))
         self._round = 0
+        # host-side stage spans (alloc_solve / update; the jitted interior
+        # stages are named_scope'd inside transport/kernels).  Opt into
+        # jax.profiler trace annotations with StageTrace(annotate=True).
+        self.trace = StageTrace()
+        # host metrics channels, fed from flushed telemetry rows
+        self.metrics = MetricsRegistry()
         self._build_jits()
 
     # ------------------------------------------------------------------
@@ -264,6 +275,41 @@ class FLSimulator:
                 jnp.asarray(self.gains, jnp.float32), n_rounds)
         gains_j = jnp.asarray(self.gains, jnp.float32)
         p_w_j = jnp.asarray(self.p_w, jnp.float32)
+
+        # --- telemetry plumbing (repro.obs): per-round records accumulate
+        # in an on-device ring and cross to the host only at flush, so a
+        # non-flush round's telemetry cost is one async ring-push dispatch
+        flush_every = max(1, fl.telemetry_flush_every)
+        ring = None
+        sink = (JsonlSink(fl.telemetry_path,
+                          run_manifest(fl, extra={'driver': 'fl_loop'}))
+                if fl.telemetry_path else None)
+        packed_agreement = (fl.wire == 'packed'
+                            and kind in ('spfl', 'spfl_retx', 'error_free'))
+
+        def _flush_telemetry():
+            nonlocal ring
+            if ring is None:
+                return
+            recs, ring = obs_ring.flush(ring)   # ONE device_get
+            for rec in recs:
+                row = obs_record.to_row(rec)
+                hist.payload_bits.append(row['payload_bits'])
+                hist.q_mean.append(row['q_mean'])
+                hist.p_mean.append(row['p_mean'])
+                hist.sign_ok_frac.append(row['sign_ok_frac'])
+                hist.mod_ok_frac.append(row['mod_ok_frac'])
+                if packed_agreement:
+                    # exactly one entry per round on the packed wire — NaN
+                    # when no sign packet survived or votes are unavailable
+                    # (K > 32 exceeds the vote word) — so the list stays
+                    # aligned with the other per-round histories
+                    hist.sign_agreement.append(row['sign_agreement'])
+                hist.retransmissions.append(row['retransmissions'])
+                self.metrics.observe_round(row)
+                if sink is not None:
+                    sink.write_round(row)
+
         for n in range(n_rounds):
             t0 = time.time()
             self.key, kr = jax.random.split(self.key)
@@ -271,24 +317,31 @@ class FLSimulator:
                 self.params, self.client_x, self.client_y)
 
             ta = time.time()
-            if kind in ('spfl', 'spfl_retx'):
-                gains_n = gains_j if traj is None else traj[n]
-                if fl.allocation_backend == 'jax':
-                    # one on-device dispatch, no host round-trip (the
-                    # x64 re-entry keeps the jit cache key stable)
-                    with enable_x64():
-                        q, p, _, _, _ = self._alloc_jax(
-                            grads, self.gbar, gains_n, p_w_j)
-                    sol, stats = None, None
+            alloc_obj = None
+            with self.trace.span('alloc_solve'):
+                if kind in ('spfl', 'spfl_retx'):
+                    gains_n = gains_j if traj is None else traj[n]
+                    if fl.allocation_backend == 'jax':
+                        # one on-device dispatch, no host round-trip (the
+                        # x64 re-entry keeps the jit cache key stable)
+                        with enable_x64():
+                            q, p, _, _, alloc_obj = self._alloc_jax(
+                                grads, self.gbar, gains_n, p_w_j)
+                        sol, stats = None, None
+                    else:
+                        grads_np = np.asarray(grads, np.float64)
+                        sol, stats = self._allocate(
+                            grads_np, np.asarray(self.gbar),
+                            None if traj is None
+                            else np.asarray(gains_n, np.float64))
+                        q, p = jnp.asarray(sol.q), jnp.asarray(sol.p)
+                        alloc_obj = sol.objective
+                        objs = sol.info.get('objectives', [])
+                        if len(objs) >= 2:
+                            self.metrics.observe_alloc(
+                                outer_residual=abs(objs[-1] - objs[-2]))
                 else:
-                    grads_np = np.asarray(grads, np.float64)
-                    sol, stats = self._allocate(
-                        grads_np, np.asarray(self.gbar),
-                        None if traj is None
-                        else np.asarray(gains_n, np.float64))
-                    q, p = jnp.asarray(sol.q), jnp.asarray(sol.p)
-            else:
-                sol, stats, q, p = None, None, jnp.ones(self.K), jnp.ones(self.K)
+                    sol, stats, q, p = None, None, jnp.ones(self.K), jnp.ones(self.K)
             alloc_t = time.time() - ta
 
             ghat, diag = self._run_transport(
@@ -305,8 +358,8 @@ class FLSimulator:
                     inp['gb2'], inp['g2'], inp['e2'], inp['v'], gsum)
                 hist.bound.append(float(b))
 
-            prev_loss = float(jnp.mean(losses))
-            new_params = self._apply_update(self.params, ghat)
+            with self.trace.span('update'):
+                new_params = self._apply_update(self.params, ghat)
 
             # roll compensation
             if fl.compensation == 'last_global':
@@ -321,40 +374,33 @@ class FLSimulator:
             self.params = new_params
             self._round += 1
 
+            # enrich the transport record with the round's allocation
+            # state and push it into the device ring — a pure _replace
+            # plus one jitted dynamic-update; no host transfer here
+            rec = diag.with_allocation(
+                q, p, objective=alloc_obj,
+                round_idx=jnp.uint32(self._round - 1)).condensed()
+            if ring is None:
+                ring = obs_ring.ring_init(rec, flush_every)
+            ring = obs_ring.push(ring, rec)
+
             if n % eval_every == 0 or n == n_rounds - 1:
+                prev_loss = float(jnp.mean(losses))
                 loss, acc = self._global_metrics(
                     self.params, self.client_x, self.client_y,
                     self.test_x, self.test_y)
                 hist.loss.append(float(loss))
                 hist.test_acc.append(float(acc))
                 hist.loss_delta.append(float(loss) - prev_loss)
-            hist.payload_bits.append(float(diag.payload_bits))
-            hist.q_mean.append(float(jnp.mean(q)))
-            hist.p_mean.append(float(jnp.mean(p)))
-            hist.sign_ok_frac.append(float(jnp.mean(
-                diag.sign_ok.astype(jnp.float32))))
-            hist.mod_ok_frac.append(float(jnp.mean(
-                diag.mod_ok.astype(jnp.float32))))
-            if (fl.wire == 'packed'
-                    and kind in ('spfl', 'spfl_retx', 'error_free')):
-                # packed-domain consensus: mean |2 v_i - K_ok| / K_ok is 1
-                # when every accepted client agrees on every coordinate's
-                # sign, ~0 under a split vote (signSGD-style telemetry,
-                # computed without unpacking — see ops.spfl_aggregate_packed).
-                # Exactly one entry per round on the packed wire — NaN when
-                # no sign packet survived or votes are unavailable (K > 32
-                # exceeds the vote word) — so the list stays aligned with
-                # the other per-round histories.
-                n_ok = float(jnp.sum(diag.sign_ok.astype(jnp.float32)))
-                if diag.sign_votes is not None and n_ok > 0:
-                    v = diag.sign_votes.astype(jnp.float32)
-                    hist.sign_agreement.append(float(
-                        jnp.mean(jnp.abs(2.0 * v - n_ok)) / n_ok))
-                else:
-                    hist.sign_agreement.append(float('nan'))
-            hist.retransmissions.append(float(diag.retransmissions))
+            if (n + 1) % flush_every == 0 or n == n_rounds - 1:
+                _flush_telemetry()
             hist.alloc_time_s.append(alloc_t)
             hist.round_time_s.append(time.time() - t0)
+        self.metrics.observe_alloc(host_solver_calls=self.host_solver_calls)
+        if sink is not None:
+            sink.write_spans(self.trace.summary())
+            sink.write_metrics(self.metrics.snapshot())
+            sink.close()
         return hist
 
 

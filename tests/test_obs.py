@@ -1,0 +1,313 @@
+"""Zero-sync round telemetry (repro.obs): the transfer-guard proof, the
+JSONL schema round-trip across the wire/channel/collective grid, the ring
+buffer, the metrics registry, the run manifest, and the report_history
+exit-0 contract.
+
+The headline test is ``test_zero_device_to_host_transfers``: with
+``jax.transfer_guard_device_to_host('disallow')`` armed, a jitted
+transport round plus ring push must run WITHOUT any device->host
+transfer — the contract that lets telemetry ride inside a fully-fused
+round loop.  Only ``flush`` (outside the guard) syncs.
+"""
+import dataclasses
+import json
+import math
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import FLConfig
+from repro.core import transport as TR
+from repro.obs import (
+    SCALAR_KEYS, JsonlSink, MetricsRegistry, ReservoirHistogram,
+    RoundTelemetry, config_hash, read_jsonl, ring_init, ring_push,
+    round_scalars, run_manifest, to_row,
+)
+from repro.obs import ringbuf as obs_ring
+from repro.training.fl_loop import FLHistory
+
+K, L = 4, 256
+_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), '..'))
+
+
+def _mk_rec(i=0, votes=False, crc=False):
+    r = RoundTelemetry(
+        sign_ok=jnp.ones((K,), bool),
+        mod_ok=jnp.asarray([True, False, True, True]),
+        accepted=jnp.ones((K,), bool),
+        payload_bits=jnp.float32(1000.0 + i),
+        retransmissions=jnp.float32(i),
+    )
+    if votes:
+        r = r._replace(sign_votes=jnp.full((L,), K, jnp.int32))
+    if crc:
+        r = r._replace(sign_crc_ok=jnp.ones((K,), bool),
+                       mod_crc_ok=jnp.zeros((K,), bool))
+    return r.with_allocation(jnp.full((K,), 0.9), jnp.full((K,), 0.6),
+                             round_idx=jnp.uint32(i))
+
+
+# ---------------------------------------------------------------------------
+# the zero-sync contract
+# ---------------------------------------------------------------------------
+
+def test_zero_device_to_host_transfers():
+    """Non-flush rounds do ZERO device->host transfers: jitted transport
+    + ring push run under a disallow transfer guard."""
+    fl = FLConfig(n_devices=K)
+    key = jax.random.PRNGKey(0)
+    grads = jax.random.normal(key, (K, L)) * 0.01
+    gbar = jnp.abs(jax.random.normal(jax.random.fold_in(key, 1), (L,)))
+    q = jnp.full((K,), 0.9)
+    p = jnp.full((K,), 0.6)
+
+    @jax.jit
+    def round_step(ring, kk, i):
+        ghat, diag = TR.spfl_aggregate(
+            grads, gbar, q, p, fl.quant_bits, fl.b0_bits, kk,
+            wire='packed', round_idx=i)
+        rec = diag.with_allocation(q, p, round_idx=i).condensed()
+        return ghat, obs_ring.ring_push(ring, rec)
+
+    keys = jax.random.split(jax.random.fold_in(key, 2), 8)
+    idxs = jnp.arange(8, dtype=jnp.uint32)
+    # warm up: compilation itself may transfer (constants, donation setup)
+    _, d0 = jax.jit(lambda kk: TR.spfl_aggregate(
+        grads, gbar, q, p, fl.quant_bits, fl.b0_bits, kk,
+        wire='packed', round_idx=jnp.uint32(0)))(keys[0])
+    ring = ring_init(
+        d0.with_allocation(q, p, round_idx=jnp.uint32(0)).condensed(), 8)
+    ghat, ring = round_step(ring, keys[0], idxs[0])
+    jax.block_until_ready(ghat)
+
+    with jax.transfer_guard_device_to_host('disallow'):
+        for i in range(1, 6):
+            ghat, ring = round_step(ring, keys[i], idxs[i])
+        jax.block_until_ready(ghat)
+
+    rows, ring = obs_ring.flush(ring)          # the ONE sync, outside
+    assert len(rows) == 6
+    assert [int(np.asarray(r.round_idx)) for r in rows] == [0, 1, 2, 3, 4, 5]
+
+
+def test_flush_syncs_and_resets():
+    rec = _mk_rec()
+    ring = ring_init(rec, 4)
+    for i in range(3):
+        ring = ring_push(ring, _mk_rec(i))
+    rows, ring2 = obs_ring.flush(ring)
+    assert len(rows) == 3
+    assert [float(r.payload_bits) for r in rows] == [1000.0, 1001.0, 1002.0]
+    assert int(ring2.idx) == 0                 # reset, device buf reused
+    rows2, _ = obs_ring.flush(ring2)
+    assert rows2 == []
+
+
+def test_ring_wraps_oldest_first():
+    ring = ring_init(_mk_rec(), 3)
+    for i in range(5):                         # 5 pushes into capacity 3
+        ring = ring_push(ring, _mk_rec(i))
+    rows, _ = obs_ring.flush(ring)
+    assert [int(np.asarray(r.round_idx)) for r in rows] == [2, 3, 4]
+
+
+# ---------------------------------------------------------------------------
+# serializers: one schema, traceable and host-side
+# ---------------------------------------------------------------------------
+
+def test_round_scalars_keys_match_flhistory():
+    """The traceable scalar summary is keyed exactly like the matching
+    FLHistory per-round lists — the shared-serializer contract that
+    retired the hand-rolled dict in training/distributed.py."""
+    hist_keys = set(FLHistory().as_dict())
+    assert set(SCALAR_KEYS) <= hist_keys
+    s = jax.jit(round_scalars)(_mk_rec(votes=True))
+    assert set(s) == set(SCALAR_KEYS)
+
+
+def test_to_row_matches_round_scalars():
+    rec = _mk_rec(votes=True, crc=True)
+    row = to_row(rec)
+    s = round_scalars(rec)
+    for k in SCALAR_KEYS:
+        assert row[k] == pytest.approx(float(s[k]), rel=1e-6), k
+    assert row['round'] == 0
+    # empirical-vs-calibrated erasure pair (bit channel)
+    assert row['sign_erasure_emp'] == 0.0
+    assert row['sign_erasure_cal'] == pytest.approx(0.1, rel=1e-5)
+    assert row['mod_erasure_emp'] == 1.0
+
+
+def test_condensed_preserves_agreement():
+    rec = _mk_rec(votes=True)
+    cond = rec.condensed()
+    assert cond.sign_votes is None and cond.agreement is not None
+    assert to_row(cond)['sign_agreement'] == pytest.approx(
+        to_row(rec)['sign_agreement'])
+    assert float(round_scalars(cond)['sign_agreement']) == pytest.approx(
+        float(round_scalars(rec)['sign_agreement']))
+
+
+def test_retired_diagnostics_attribute_surface():
+    """RoundTelemetry keeps the exact attribute surface of the retired
+    TransportDiagnostics (the transports construct it positionally, the
+    packed-wire tests getattr these names)."""
+    for name in ('sign_ok', 'mod_ok', 'accepted', 'payload_bits',
+                 'retransmissions', 'sign_flips', 'mod_flips',
+                 'sign_crc_ok', 'mod_crc_ok', 'retx_attempts',
+                 'sign_votes'):
+        assert hasattr(_mk_rec(), name), name
+    assert not hasattr(TR, 'TransportDiagnostics')
+
+
+# ---------------------------------------------------------------------------
+# JSONL round-trip across the wire x channel x collective grid
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize('wire,channel,collective', [
+    ('analytic', 'bernoulli', 'gather'),
+    ('packed', 'bernoulli', 'gather'),
+    ('packed', 'bitlevel', 'gather'),
+    ('packed', 'bitlevel', 'sharded'),
+])
+def test_jsonl_round_trip(tmp_path, wire, channel, collective):
+    fl = dataclasses.replace(FLConfig(n_devices=K), wire=wire,
+                             channel=channel, collective=collective)
+    mesh = None
+    if collective == 'sharded':
+        mesh = jax.make_mesh((jax.device_count(),), ('data',))
+    key = jax.random.PRNGKey(3)
+    grads = jax.random.normal(key, (K, L)) * 0.01
+    gbar = jnp.abs(jax.random.normal(jax.random.fold_in(key, 1), (L,)))
+    q = jnp.full((K,), 0.9)
+    p = jnp.full((K,), 0.6)
+
+    agg = jax.jit(lambda kk, i: TR.spfl_aggregate(
+        grads, gbar, q, p, fl.quant_bits, fl.b0_bits, kk, wire=wire,
+        channel=channel, round_idx=i, collective=collective, mesh=mesh))
+    path = tmp_path / f'{wire}_{channel}_{collective}.jsonl'
+    man_in = run_manifest(fl, mesh=mesh, extra={'driver': 'test'})
+    with JsonlSink(str(path), man_in) as sink:
+        for i in range(3):
+            _, diag = agg(jax.random.fold_in(key, 10 + i), jnp.uint32(i))
+            sink.write_round(to_row(
+                diag.with_allocation(q, p, round_idx=jnp.uint32(i))))
+
+    man, rows = read_jsonl(str(path))
+    # manifest completeness
+    for k in ('date', 'git_sha', 'config_hash', 'config', 'platform',
+              'jax', 'xla_flags', 'env', 'mesh'):
+        assert k in man, k
+    assert man['config']['wire'] == wire
+    assert man['config_hash'] == config_hash(fl)
+    assert (man['mesh'] is None) == (mesh is None)
+    # rows: schema + strict JSON (every line parses, NaN became null)
+    assert [r['round'] for r in rows] == [0, 1, 2]
+    for r in rows:
+        for k in SCALAR_KEYS:
+            assert k in r, k
+        assert len(r['sign_ok']) == K
+        if channel == 'bitlevel':
+            assert 'sign_erasure_emp' in r and 'sign_erasure_cal' in r
+        else:
+            assert r.get('sign_crc_ok') is None
+    for line in path.read_text().splitlines():
+        json.loads(line)                       # strict: no NaN literals
+
+
+# ---------------------------------------------------------------------------
+# metrics registry
+# ---------------------------------------------------------------------------
+
+def test_metrics_registry_routes_rows():
+    reg = MetricsRegistry()
+    for i in range(4):
+        reg.observe_round(to_row(_mk_rec(i, votes=True, crc=True)))
+    reg.observe_alloc(host_solver_calls=2, outer_residual=0.5)
+    snap = reg.snapshot()
+    assert set(snap) == {'transport', 'bitchannel', 'allocation'}
+    tr_ = snap['transport']
+    assert tr_['payload_bits']['kind'] == 'counter'
+    assert tr_['payload_bits']['value'] == pytest.approx(
+        sum(1000.0 + i for i in range(4)))
+    assert tr_['retransmissions']['value'] == pytest.approx(6.0)
+    assert snap['allocation']['host_solver_calls']['value'] == 2.0
+    assert snap['bitchannel']['sign_erasure_emp']['value'] == 0.0
+    assert snap['allocation']['outer_residual_hist']['count'] == 1
+
+
+def test_reservoir_histogram_deterministic():
+    h1 = ReservoirHistogram(size=32, seed=7)
+    h2 = ReservoirHistogram(size=32, seed=7)
+    for i in range(200):
+        h1.observe(float(i))
+        h2.observe(float(i))
+    assert h1.snapshot() == h2.snapshot()
+    s = h1.snapshot()
+    assert s['count'] == 200 and s['p50'] <= s['p90'] <= s['p99']
+
+
+# ---------------------------------------------------------------------------
+# run manifest / launch.env
+# ---------------------------------------------------------------------------
+
+def test_manifest_records_env_state():
+    from repro.launch import env as launch_env
+    launch_env.configure()
+    man = run_manifest(FLConfig())
+    assert man['env']['configured'] is True
+    assert man['env']['device_count'] == jax.device_count()
+    assert man['jax']['backend'] == jax.default_backend()
+    assert len(man['config_hash']) == 16
+    # hash keys on config content, not object identity
+    assert config_hash(FLConfig()) == man['config_hash']
+    assert config_hash(FLConfig(seed=1)) != man['config_hash']
+
+
+# ---------------------------------------------------------------------------
+# report_history: informational tool, always exit 0
+# ---------------------------------------------------------------------------
+
+def _run_report(cwd):
+    return subprocess.run(
+        [sys.executable, os.path.join(_ROOT, 'benchmarks',
+                                      'report_history.py')],
+        capture_output=True, text=True, cwd=cwd)
+
+
+def test_report_history_exit0_on_repo():
+    r = _run_report(_ROOT)
+    assert r.returncode == 0, r.stderr
+
+
+def test_report_history_single_and_empty_entries(tmp_path):
+    from importlib import util
+    spec = util.spec_from_file_location(
+        'report_history', os.path.join(_ROOT, 'benchmarks',
+                                       'report_history.py'))
+    rh = util.module_from_spec(spec)
+    spec.loader.exec_module(rh)
+    single = tmp_path / 'BENCH_one.json'
+    single.write_text(json.dumps(
+        {'suite': 'one', 'history': [{'sha': 'abc', 'date': 'd',
+                                      'rows': []}]}))
+    empty = tmp_path / 'BENCH_none.json'
+    empty.write_text(json.dumps({'suite': 'none', 'history': []}))
+    broken = tmp_path / 'BENCH_broken.json'
+    broken.write_text('{not json')
+    malformed = tmp_path / 'BENCH_malformed.json'
+    malformed.write_text(json.dumps({'suite': 'mal', 'history': [
+        {'sha': 'a', 'date': 'd', 'rows': [{'name': 'x',
+                                            'us_per_call': 1.0}]},
+        {'sha': 'b', 'date': 'e', 'rows': [{'no_name': True},
+                                           {'name': 'x',
+                                            'us_per_call': 2.0}]},
+    ]}))
+    # none of these raise; each prints a clear line instead
+    for p in (single, empty, broken, malformed):
+        rh.report(str(p))
