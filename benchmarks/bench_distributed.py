@@ -210,6 +210,64 @@ def main() -> None:
          f'{len(recs)} rounds + manifest -> telemetry/'
          f'bench_distributed.jsonl')
 
+    # ------------- fused multi-round scan over the sharded collective
+    # (ISSUE 7) the bitlevel+sharded round (transport + ring push +
+    # update + compensation roll) scanned N rounds per dispatch vs the
+    # same body dispatched per round — the LLM-scale twin of the
+    # wire-level fused_scan rows.
+    n_scan = 4 if SMOKE else 16
+
+    def round_body(carry, n):
+        params_, gbar_, key_, ring_ = carry
+        key_, kr = jax.random.split(key_)
+        ghat, diag = TR.spfl_aggregate(
+            grads, gbar_, qs, ps, bits, fl.b0_bits, kr, wire='packed',
+            channel='bitlevel', collective='sharded', mesh=mesh,
+            round_idx=n)
+        rec = diag.with_allocation(qs, ps, round_idx=n).condensed()
+        return (params_ - 0.05 * ghat, jnp.abs(ghat), key_,
+                obs_ring.ring_push(ring_, rec)), None
+
+    rec0 = d0.with_allocation(qs, ps, round_idx=jnp.uint32(0)).condensed()
+
+    def carry0():
+        return (jnp.zeros((L,)), gbar, jax.random.PRNGKey(11),
+                obs_ring.ring_init(rec0, n_scan))
+
+    ns = jnp.arange(n_scan, dtype=jnp.uint32)
+    scan_fn = jax.jit(lambda c, xs: jax.lax.scan(round_body, c, xs))
+    t0 = time.time()
+    scan_fn.lower(carry0(), ns).compile()
+    t_compile = time.time() - t0
+    reps = 3
+    c, _ = scan_fn(carry0(), ns)
+    jax.block_until_ready(c)
+    t0 = time.time()
+    for _ in range(reps):
+        c, _ = scan_fn(carry0(), ns)
+    jax.block_until_ready(c)
+    t_scan = (time.time() - t0) / reps
+
+    body_jit = jax.jit(round_body)
+    c, _ = body_jit(carry0(), ns[0])
+    jax.block_until_ready(c)
+    t0 = time.time()
+    for _ in range(reps):
+        c = carry0()
+        for i in range(n_scan):
+            c, _ = body_jit(c, ns[i])
+    jax.block_until_ready(c)
+    t_eager = (time.time() - t0) / reps
+
+    emit('dist_fused_scan_rounds', 1e6 * t_scan / n_scan,
+         f'{n_scan / t_scan:.1f} rounds/s — ONE dispatch per {n_scan}-'
+         f'round segment (bitlevel+sharded)')
+    emit('dist_fused_eager_rounds', 1e6 * t_eager / n_scan,
+         f'{n_scan / t_eager:.1f} rounds/s — per-round dispatch of the '
+         f'same body ({t_eager / t_scan:.2f}x the scanned wall-clock)')
+    emit('dist_fused_scan_compile', 1e6 * t_compile,
+         f'{t_compile:.2f} s trace+compile for the {n_scan}-round scan')
+
 
 if __name__ == '__main__':
     main()

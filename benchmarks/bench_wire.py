@@ -226,6 +226,67 @@ def main() -> None:
          f'ring push round = {t_tel / t_sync:.2f}x the retired '
          f'per-round float() sync round')
 
+    # ------------- fused multi-round scan: rounds/s, eager vs scanned
+    # (ISSUE 7) the whole transport round — spfl_aggregate with a traced
+    # round index, telemetry ring push, param + compensation update —
+    # rolled over a segment of rounds by ONE lax.scan dispatch, vs the
+    # same jitted body dispatched once per round.  The scan's win is
+    # dispatch overhead x segment length; rows record both rates and the
+    # one-time trace+compile cost of the scanned segment.
+    n_rounds = 8 if SMOKE else 32
+    lr = 0.05
+    rec0 = d0.with_allocation(q, p, round_idx=jnp.uint32(0)).condensed()
+
+    def round_body(carry, n):
+        params_, gbar_, key_, ring_ = carry
+        key_, kr = jax.random.split(key_)
+        ghat, diag = TR.spfl_aggregate(grads, gbar_, q, p, bits,
+                                       fl.b0_bits, kr, wire='packed',
+                                       round_idx=n)
+        rec = diag.with_allocation(q, p, round_idx=n).condensed()
+        return (params_ - lr * ghat, jnp.abs(ghat), key_,
+                obs_ring.ring_push(ring_, rec)), None
+
+    def carry0():
+        return (jnp.zeros((kl,)), gbar_k, jax.random.PRNGKey(9),
+                obs_ring.ring_init(rec0, n_rounds))
+
+    ns = jnp.arange(n_rounds, dtype=jnp.uint32)
+    scan_fn = jax.jit(lambda c, xs: jax.lax.scan(round_body, c, xs))
+    t0 = time.time()
+    scan_fn.lower(carry0(), ns).compile()
+    t_compile = time.time() - t0
+
+    reps = 3
+    c, _ = scan_fn(carry0(), ns)
+    jax.block_until_ready(c)
+    t0 = time.time()
+    for _ in range(reps):
+        c, _ = scan_fn(carry0(), ns)
+    jax.block_until_ready(c)
+    t_scan = (time.time() - t0) / reps
+
+    body_jit = jax.jit(round_body)
+    c, _ = body_jit(carry0(), ns[0])
+    jax.block_until_ready(c)
+    t0 = time.time()
+    for _ in range(reps):
+        c = carry0()
+        for i in range(n_rounds):
+            c, _ = body_jit(c, ns[i])
+    jax.block_until_ready(c)
+    t_eager = (time.time() - t0) / reps
+
+    emit('wire_fused_scan_rounds', 1e6 * t_scan / n_rounds,
+         f'{n_rounds / t_scan:.1f} rounds/s — ONE dispatch per '
+         f'{n_rounds}-round segment')
+    emit('wire_fused_eager_rounds', 1e6 * t_eager / n_rounds,
+         f'{n_rounds / t_eager:.1f} rounds/s — per-round dispatch of the '
+         f'same body ({t_eager / t_scan:.2f}x the scanned wall-clock)')
+    emit('wire_fused_scan_compile', 1e6 * t_compile,
+         f'{t_compile:.2f} s trace+compile for the {n_rounds}-round scan '
+         f'(one-time; a ragged tail segment costs one more)')
+
 
 if __name__ == '__main__':
     main()

@@ -293,6 +293,31 @@ class FLConfig:
     platform, XLA flags — ``repro.obs.sink.run_manifest``), then one
     ``round`` row per flushed record, then stage-span and metrics
     summaries.  ``None`` keeps telemetry in-memory only (FLHistory).
+
+    ``round_fusion``: how ``FLSimulator.run`` drives rounds.  'none'
+    (default) is the legacy host loop — one jitted dispatch per stage
+    with the host between rounds.  'eager' fuses each FULL round
+    (gradients -> eq. (28) f32 solve -> transport -> update -> telemetry
+    push) into ONE jitted body, still dispatched per round from Python.
+    'scan' rolls whole segments of that same body into one
+    ``lax.scan`` dispatch — zero device->host transfers between segment
+    boundaries (params, compensation, PRNG key, AR(1) shadowing state
+    and the telemetry ring all live in the scan carry).  Both fused
+    modes run the SAME traced body, so they match bit-exactly on integer
+    artifacts and within the documented f32 ulp contract
+    (``src/repro/core/README.md``); they require
+    ``allocation_backend='jax'`` on allocating transports, since the
+    eq. (28) solve must trace inside the f32 round
+    (``allocation_jax.solve_traceable`` under the validated f32 caps).
+
+    ``scan_segment_rounds``: rounds per fused segment (flush/eval
+    boundary spacing under ``round_fusion != 'none'``).  0 = follow
+    ``telemetry_flush_every``.  The telemetry ring's capacity is always
+    the segment length, so records never wrap within a segment; every
+    segment boundary flushes (one ``device_get``) and the final ragged
+    segment drains the tail — no round is dropped or double-flushed
+    regardless of divisibility (the segment-flush rule,
+    ``src/repro/obs/README.md``).
     """
     n_devices: int = 20                  # K
     bandwidth_hz: float = 10e6           # B
@@ -327,6 +352,8 @@ class FLConfig:
     allocation_max_iters: int = 0        # 0 = auto (see docstring)
     telemetry_flush_every: int = 8       # ring capacity / flush cadence
     telemetry_path: Optional[str] = None  # JSONL sink (None = in-memory)
+    round_fusion: str = 'none'           # none | eager | scan
+    scan_segment_rounds: int = 0         # 0 = telemetry_flush_every
 
     @property
     def noise_psd_w(self) -> float:

@@ -105,9 +105,17 @@ def g_value(xp, cs, alpha, h_s, h_v, *, exp_cap=EXP_CAP):
             + cs[3] * xp.exp(xp.minimum(t4, exp_cap)))
 
 
-def g_prime_alpha(xp, cs, alpha, h_s, h_v, *, exp_cap=EXP_CAP):
-    """dG/dalpha, eq. (69) — the Newton–Raphson target of Lemma 3."""
-    a = xp.clip(alpha, 1e-12, 1.0 - 1e-12)
+def g_prime_alpha(xp, cs, alpha, h_s, h_v, *, exp_cap=EXP_CAP,
+                  a_eps=1e-12):
+    """dG/dalpha, eq. (69) — the Newton–Raphson target of Lemma 3.
+
+    ``a_eps`` is the boundary clip for alpha and must be representable
+    away from 1 in the working dtype: ``1 - 1e-12`` rounds to exactly
+    1.0 in float32, which makes ``om = 0`` and turns the 0*inf products
+    below into NaN — f32 callers pass a wider epsilon (see
+    ``allocation_jax._caps``).
+    """
+    a = xp.clip(alpha, a_eps, 1.0 - a_eps)
     om = 1.0 - a
     t1, t2, t3, t4 = g_exponents(xp, a, h_s, h_v)
     dv = h_v / om ** 2                  # d/dalpha [H_v/(1-a)]

@@ -81,14 +81,19 @@ class _Caps(NamedTuple):
     h_floor: float
     log_floor: float
     newton_eps: float
+    a_eps: float
 
 
 def _caps(dtype) -> _Caps:
     if dtype == jnp.float64:
-        return _Caps(AC.EXP_CAP, AC.POW_CAP, AC.H_FLOOR, AC.LOG_FLOOR, 1e-8)
+        return _Caps(AC.EXP_CAP, AC.POW_CAP, AC.H_FLOOR, AC.LOG_FLOOR,
+                     1e-8, 1e-12)
     # f32: exp(80) ~ 5.5e34 and 2^120 ~ 1.3e36 stay finite; the H floor
-    # saturates just inside -FLT_MAX
-    return _Caps(80.0, 120.0, -3e38, -85.0, 1e-4)
+    # saturates just inside -FLT_MAX.  a_eps must keep 1 - a_eps strictly
+    # below 1.0 in f32 (1 - 1e-12 rounds to exactly 1.0, making om = 0
+    # and NaN-ing the barrier gradient via 0 * inf); f32 spacing at 1.0
+    # is ~6e-8, so 1e-6 is the boundary clip
+    return _Caps(80.0, 120.0, -3e38, -85.0, 1e-4, 1e-6)
 
 
 # ---------------------------------------------------------------------------
@@ -239,7 +244,8 @@ def optimize_alpha(prob: JaxAllocationProblem, beta, n_grid: int = 256,
 
     # G' on the grid: (n_grid, K)
     gp = AC.g_prime_alpha(jnp, cs, grid[:, None], h_s[None, :],
-                          h_v[None, :], exp_cap=caps.exp_cap)
+                          h_v[None, :], exp_cap=caps.exp_cap,
+                          a_eps=caps.a_eps)
     best_alpha = jnp.full_like(h_s, 1.0) * a_max
     best_val = AC.g_value(jnp, cs, best_alpha, h_s, h_v,
                           exp_cap=caps.exp_cap)
@@ -255,9 +261,11 @@ def optimize_alpha(prob: JaxAllocationProblem, beta, n_grid: int = 256,
 
     def body(_, carry):
         lo, hi, x = carry
-        f = AC.g_prime_alpha(jnp, cs, x, h_s, h_v, exp_cap=caps.exp_cap)
+        f = AC.g_prime_alpha(jnp, cs, x, h_s, h_v, exp_cap=caps.exp_cap,
+                             a_eps=caps.a_eps)
         fp = (AC.g_prime_alpha(jnp, cs, x + eps, h_s, h_v,
-                               exp_cap=caps.exp_cap) - f) / eps
+                               exp_cap=caps.exp_cap,
+                               a_eps=caps.a_eps) - f) / eps
         same = (flo < 0) == (f < 0)
         lo = jnp.where(same, x, lo)
         hi = jnp.where(same, hi, x)
@@ -281,7 +289,7 @@ def optimize_alpha(prob: JaxAllocationProblem, beta, n_grid: int = 256,
 # ---------------------------------------------------------------------------
 
 def _surrogate(prob, caps, alpha, beta0):
-    a = jnp.clip(alpha, 1e-12, 1.0 - 1e-12)
+    a = jnp.clip(alpha, caps.a_eps, 1.0 - caps.a_eps)
     om = 1.0 - a
     hs0, hv0 = _h_s(prob, caps, beta0), _h_v(prob, caps, beta0)
     hs0p = _h_s_prime(prob, caps, beta0)
@@ -388,7 +396,7 @@ def optimize_beta_barrier(prob: JaxAllocationProblem, alpha, beta0,
     s = _ordered_sum(beta)
     beta = jnp.where(s >= 1.0, beta / s * 0.95, beta)
     ln10 = np.log(10.0)
-    a = jnp.clip(alpha, 1e-12, 1.0 - 1e-12)
+    a = jnp.clip(alpha, caps.a_eps, 1.0 - caps.a_eps)
     om = 1.0 - a
     cs = _cs(prob)
 
@@ -465,20 +473,26 @@ def solve_traceable(prob: JaxAllocationProblem, method: str = 'alternating',
         else:
             beta_n = optimize_beta_sca(prob, alpha_n, beta, caps=caps)
         obj = _objective(prob, caps, alpha_n, beta_n)
+        # a non-finite iterate (f32 saturation) must not poison the
+        # carry: freeze on the last good point instead of accepting it
+        bad = ~jnp.isfinite(obj)
         conv = jnp.abs(prev - obj) <= tol * (1.0 + jnp.abs(obj))
-        alpha2 = jnp.where(done, alpha, alpha_n)
-        beta2 = jnp.where(done, beta, beta_n)
-        prev2 = jnp.where(done, prev, obj)
-        iters2 = jnp.where(done, iters, i + 1)
-        objs2 = objs.at[i].set(jnp.where(done, jnp.nan, obj))
-        return alpha2, beta2, prev2, done | conv, iters2, objs2
+        keep = done | bad
+        alpha2 = jnp.where(keep, alpha, alpha_n)
+        beta2 = jnp.where(keep, beta, beta_n)
+        prev2 = jnp.where(keep, prev, obj)
+        iters2 = jnp.where(keep, iters, i + 1)
+        objs2 = objs.at[i].set(jnp.where(keep, jnp.nan, obj))
+        return alpha2, beta2, prev2, done | conv | bad, iters2, objs2
 
     init = (alpha_u, beta_u, jnp.asarray(jnp.inf, dtype),
             jnp.asarray(False), jnp.int32(0), nan_objs)
     alpha, beta, prev, _, iters, objs = lax.fori_loop(0, max_iters, body,
                                                       init)
-    # safeguard: never return anything worse than the uniform default
-    worse = prev > uniform_obj
+    # safeguard: never return anything worse than the uniform default.
+    # Written NaN-proof (~(prev <= uniform)) so a non-finite objective
+    # falls back to uniform instead of escaping the comparison
+    worse = ~(prev <= uniform_obj)
     alpha = jnp.where(worse, alpha_u, alpha)
     beta = jnp.where(worse, beta_u, beta)
     prev = jnp.where(worse, uniform_obj, prev)

@@ -86,6 +86,37 @@ def block_fading_trajectory(key, base_gains, n_rounds: int,
     return base * 10.0 ** (shadow_std_db * zs / 10.0)
 
 
+# --- the same AR(1) process as per-round scanned state -----------------
+#
+# The fused multi-round scan (training/fl_loop.py round_fusion) cannot
+# precompute a host-side (n_rounds, K) trajectory — the shadowing state
+# must live in the scan carry.  shadow_init/shadow_step implement the
+# identical z-recursion one round at a time: z_0 ~ N(0, 1),
+# z_n = rho z_{n-1} + sqrt(1 - rho^2) eps_n with eps_n drawn from a
+# per-round key.  The *marginals* match block_fading_trajectory exactly;
+# the draws differ (the batch form consumes one (n_rounds, K) normal
+# block, the stepped form one (K,) normal per round-key), so the two
+# parameterizations are each internally reproducible but not
+# cross-comparable draw-for-draw.
+
+def shadow_init(key, k: int) -> Array:
+    """z_0 of the Gauss–Markov shadowing track, (K,) float32."""
+    return jax.random.normal(key, (k,), jnp.float32)
+
+
+def shadow_step(key, z, rho: float = 0.9) -> Array:
+    """One AR(1) transition z -> rho z + sqrt(1-rho^2) eps(key).
+    Traceable; ``key`` should be folded from the round's PRNG state."""
+    c = jnp.sqrt(jnp.asarray(1.0 - rho ** 2, z.dtype))
+    return rho * z + c * jax.random.normal(key, z.shape, z.dtype)
+
+
+def shadow_gains(base_gains, z, shadow_std_db: float = 4.0) -> Array:
+    """Instantaneous large-scale gains for shadowing state ``z``."""
+    base = jnp.asarray(base_gains)
+    return base * 10.0 ** (shadow_std_db * z.astype(base.dtype) / 10.0)
+
+
 # ---------------------------------------------------------------------------
 # capacities (9), (10) — given an instantaneous fading realization
 # ---------------------------------------------------------------------------

@@ -563,7 +563,8 @@ def spfl_aggregate_tree(grads_tree, gbar_tree, q: Array, p: Array,
                         n_retx: int = 0, wire: Optional[str] = None,
                         channel: Optional[str] = None,
                         collective: Optional[str] = None, mesh=None,
-                        client_axes: Optional[tuple] = None):
+                        client_axes: Optional[tuple] = None,
+                        round_idx=None):
     """SP-FL over per-client gradient pytrees (leaves (K, ...)).
 
     The quantizer range, the packet outcomes and the 1/q weights are
@@ -594,6 +595,14 @@ def spfl_aggregate_tree(grads_tree, gbar_tree, q: Array, p: Array,
     all leaves, with sign retransmissions re-sending the same payload
     under a fresh channel draw (the fresh header stamp lives in the
     framing words, which the tree path draws but does not materialize).
+
+    ``round_idx`` (optional, traced scalar OK) stamps the round into the
+    transmission PRNG stream — the tree path materializes no headers, so
+    the round enters through the key instead of the framing words.  A
+    scanned multi-round body can therefore hold one key and pass the
+    traced round index, mirroring the flat path's traced-header stamp.
+    ``None`` (default) leaves the key untouched, preserving the exact
+    draws of every existing caller.
     """
     wire = fl.wire if wire is None else wire
     channel = fl.channel if channel is None else channel
@@ -608,6 +617,8 @@ def spfl_aggregate_tree(grads_tree, gbar_tree, q: Array, p: Array,
     if stats is None:
         stats = tree_client_stats(grads_tree)
     K = q.shape[0]
+    if round_idx is not None:
+        key = jax.random.fold_in(key, round_idx)
     kq, ko = jax.random.split(key)
     q_eff = 1.0 - (1.0 - q) ** (n_retx + 1)
 
@@ -756,9 +767,12 @@ def error_free_aggregate_tree(grads_tree, fl: FLConfig, key,
                               stats: Optional[dict] = None,
                               wire: Optional[str] = None,
                               collective: Optional[str] = None, mesh=None,
-                              client_axes: Optional[tuple] = None):
+                              client_axes: Optional[tuple] = None,
+                              round_idx=None):
     """Quantized-but-lossless tree aggregation (arctic-480b fallback and
-    the error-free baseline at LLM scale)."""
+    the error-free baseline at LLM scale).  ``round_idx`` stamps the
+    round into the quantizer PRNG stream (traced scalar OK, as on
+    ``spfl_aggregate_tree``); ``None`` keeps existing draws."""
     wire = fl.wire if wire is None else wire
     assert wire in WIRE_KINDS, wire
     collective, client_axes = _resolve_collective(
@@ -769,6 +783,8 @@ def error_free_aggregate_tree(grads_tree, fl: FLConfig, key,
         stats = tree_client_stats(grads_tree)
     g_min, g_max = stats['g_min'], stats['g_max']
     bits = fl.quant_bits
+    if round_idx is not None:
+        key = jax.random.fold_in(key, round_idx)
     leaves, treedef = jax.tree.flatten(grads_tree)
     keys = jax.random.split(key, len(leaves))
     K = leaves[0].shape[0]

@@ -8,6 +8,16 @@ The ``*_packed`` family is the materialized-wire hot path: packed uint32
 word buffers (repro.wire.format layout) in and out, with the client-side
 quantize->pack and PS-side unpack->dequantize->compensate->weight each
 fused into one HBM pass (repro.wire.pack_kernel).
+
+Trace-purity contract: every wrapper here is a pure function of its
+array arguments — shapes and ``bits``/``k`` are the only static inputs,
+all runtime values (gmin/gmax, mod_ok, weights, BER, word offsets, PRNG
+keys) pass through ``jnp.asarray`` and stay traced.  The fused
+multi-round ``lax.scan`` bodies (training/fl_loop.py round_fusion,
+training/distributed.py make_fused_fl_scan) rely on this: the whole
+transport — these kernels included — must trace once and iterate
+on-device with zero host transfers, so nothing in this module may
+branch on a concrete array value or force one to the host.
 """
 from __future__ import annotations
 

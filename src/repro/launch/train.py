@@ -37,14 +37,22 @@ def run(arch: str, steps: int, clients: int, batch: int, seq: int,
         log_every: int = 1, wire: str = 'analytic',
         collective: str = 'gather', allocation_backend: str = 'numpy',
         allocation_cadence: str = 'static',
+        round_fusion: str = 'none',
         telemetry_path: Optional[str] = None) -> dict:
     cfg = get_arch(arch)
+    if round_fusion != 'none' and allocation_backend != 'jax':
+        # fused rounds solve eq. (28) in-trace; the jax engine is the
+        # only one that can — promote instead of bouncing the user
+        print("round_fusion: promoting allocation_backend='numpy' -> "
+              "'jax' (in-trace eq. (28) solve)", flush=True)
+        allocation_backend = 'jax'
     fl = FLConfig(n_devices=clients, learning_rate=lr,
                   bandwidth_hz=bandwidth_hz, tx_power_dbm=tx_power_dbm,
                   allocator=allocator, transport=transport_kind, seed=seed,
                   wire=wire, collective=collective,
                   allocation_backend=allocation_backend,
-                  allocation_cadence=allocation_cadence)
+                  allocation_cadence=allocation_cadence,
+                  round_fusion=round_fusion)
     key = jax.random.PRNGKey(seed)
     params = tf.init_params(cfg, key)
     dim = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
@@ -70,17 +78,25 @@ def run(arch: str, steps: int, clients: int, batch: int, seq: int,
     if collective == 'sharded':
         from repro.launch.mesh import make_host_mesh
         mesh = make_host_mesh()
+    sink = (JsonlSink(telemetry_path, run_manifest(
+        fl, mesh=mesh, extra={'driver': 'launch.train', 'arch': arch,
+                              'round_fusion': fl.round_fusion}))
+        if telemetry_path else None)
+    toks = synth_tokens(clients * batch * 4, seq + 1, cfg.vocab_size, seed)
+    toks = toks.reshape(clients, batch * 4, seq + 1)
+
+    if fl.round_fusion != 'none':
+        return _run_fused(cfg, fl, params, toks, gains, batch, seq,
+                          steps, transport_kind, key, sink, log_every,
+                          mesh)
+
     step = jax.jit(dist.make_fl_train_step(cfg, fl, transport_kind,
                                            mesh=mesh))
     # per-step RoundTelemetry JSONL with the shared run manifest (this
     # driver already syncs per step for logging, so rows are written
-    # inline; the zero-sync ring path lives in training/fl_loop.py)
-    sink = (JsonlSink(telemetry_path, run_manifest(
-        fl, mesh=mesh, extra={'driver': 'launch.train', 'arch': arch}))
-        if telemetry_path else None)
+    # inline; the zero-sync ring path lives in training/fl_loop.py and
+    # the fused segment driver above)
     gbar = dist.init_gbar(params)
-    toks = synth_tokens(clients * batch * 4, seq + 1, cfg.vocab_size, seed)
-    toks = toks.reshape(clients, batch * 4, seq + 1)
 
     q = jnp.ones((clients,))
     p = jnp.ones((clients,))
@@ -149,6 +165,75 @@ def run(arch: str, steps: int, clients: int, batch: int, seq: int,
     return history
 
 
+def _run_fused(cfg, fl: FLConfig, params, toks, gains, batch: int,
+               seq: int, steps: int, transport_kind: str, key, sink,
+               log_every: int, mesh) -> dict:
+    """Segment-dispatched fused driver: the whole round (grads ->
+    in-trace eq. (28) -> transport -> update) is one traced body;
+    'scan' rolls a telemetry segment of rounds into ONE ``lax.scan``
+    dispatch, 'eager' dispatches the same body once per round.  The
+    host syncs only at segment boundaries (ring flush + logging)."""
+    from repro.obs import ringbuf as obs_ring
+
+    seg_len = fl.scan_segment_rounds or max(1, fl.telemetry_flush_every)
+    pool = jnp.asarray(toks)            # (K, batch*4, seq+1) resident
+    n_slots = pool.shape[1] // batch
+
+    def batch_fn(n):
+        # traceable batch feed: dynamic slice into the resident pool
+        # keyed on the round index (host feeding would reintroduce the
+        # per-round sync the fused path removes)
+        sl = (n.astype(jnp.int32) % n_slots) * batch
+        t = jax.lax.dynamic_slice_in_dim(pool, sl, batch, axis=1)
+        return {'tokens': t[..., :seq]}
+
+    segment, init_carry = dist.make_fused_fl_scan(
+        cfg, fl, gains, batch_fn, transport_kind=transport_kind,
+        mesh=mesh)
+    seg_fn = jax.jit(segment)
+    carry = init_carry(params, jax.random.fold_in(key, 100), seg_len)
+
+    history = {'loss': [], 'q': [], 'p': [], 'step_s': []}
+    done = 0
+    while done < steps:
+        m = min(seg_len, steps - done)
+        ns = jnp.arange(done, done + m, dtype=jnp.uint32)
+        t0 = time.time()
+        if fl.round_fusion == 'scan':
+            carry, seg_losses = seg_fn(carry, ns)   # ONE dispatch
+        else:                                       # 'eager': per round
+            parts = []
+            for i in range(m):
+                carry, lm = seg_fn(carry, ns[i:i + 1])
+                parts.append(lm)
+            seg_losses = jnp.concatenate(parts)
+        # ---- segment boundary: the driver's only host sync ----
+        params_, opt_state, gbar, key_, z, ring = carry
+        recs, ring = obs_ring.flush(ring)           # one device_get
+        carry = (params_, opt_state, gbar, key_, z, ring)
+        losses_h = np.asarray(seg_losses)
+        dt = time.time() - t0
+        for i, rec in enumerate(recs):
+            row = to_row(rec)
+            row['loss'] = float(losses_h[i])
+            row['step_s'] = dt / m
+            history['loss'].append(float(losses_h[i]))
+            history['q'].append(row['q_mean'])
+            history['p'].append(row['p_mean'])
+            history['step_s'].append(dt / m)
+            if sink is not None:
+                sink.write_round(row)
+        if (done // seg_len) % max(1, log_every) == 0:
+            print(f'seg [{done:4d}..{done + m - 1:4d}] '
+                  f'loss {losses_h[-1]:.4f} '
+                  f'q̄ {history["q"][-1]:.3f} p̄ {history["p"][-1]:.3f} '
+                  f'{dt:.2f}s ({dt / m:.2f}s/round)', flush=True)
+        done += m
+    if sink is not None:
+        sink.close()
+    return history
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument('--arch', default='smollm-135m-reduced')
@@ -178,6 +263,13 @@ def main():
                     choices=['static', 'per_round'],
                     help="'per_round' evolves channel gains every round "
                          "via the seeded block-fading process")
+    ap.add_argument('--round-fusion', default='none',
+                    choices=['none', 'eager', 'scan'],
+                    help="'scan' fuses whole telemetry segments of "
+                         "rounds into one lax.scan dispatch (zero host "
+                         "sync between flushes; needs --allocation-"
+                         "backend jax on spfl); 'eager' dispatches the "
+                         "same fused body once per round")
     ap.add_argument('--telemetry-out', default=None,
                     help='write per-step RoundTelemetry JSONL (+ run '
                          'manifest) to this path')
@@ -188,6 +280,7 @@ def main():
         args.tx_power_dbm, wire=args.wire, collective=args.collective,
         allocation_backend=args.allocation_backend,
         allocation_cadence=args.allocation_cadence,
+        round_fusion=args.round_fusion,
         telemetry_path=args.telemetry_out)
 
 

@@ -49,6 +49,22 @@ def ring_init(proto, capacity: int) -> TelemetryRing:
     return TelemetryRing(buf, jnp.zeros((), jnp.int32))
 
 
+def ring_init_abstract(proto_sds, capacity: int) -> TelemetryRing:
+    """``ring_init`` from a ``jax.eval_shape`` record prototype.
+
+    The fused multi-round scan needs the ring in the scan carry BEFORE
+    any round has produced a concrete record; the round body's record
+    structure is known abstractly (``jax.eval_shape(round_core, ...)``),
+    and this builds the matching zeroed ring from the ShapeDtypeStruct
+    pytree without tracing or running anything.
+    """
+    assert capacity >= 1, capacity
+    buf = jax.tree.map(
+        lambda s: jnp.zeros((capacity,) + tuple(s.shape), s.dtype),
+        proto_sds)
+    return TelemetryRing(buf, jnp.zeros((), jnp.int32))
+
+
 def ring_push(ring: TelemetryRing, rec) -> TelemetryRing:
     """Write ``rec`` into the next slot.  Pure + traceable — the round
     interior's only telemetry op."""

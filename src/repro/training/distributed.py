@@ -37,9 +37,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import FLConfig, ModelConfig
+from repro.core import allocation_jax as alloc_jax
+from repro.core import channel
 from repro.core import transport as tr
 from repro.models import transformer as tf
+from repro.obs import ringbuf as obs_ring
 from repro.obs.record import round_scalars
+from repro.training.optimizer import Optimizer, sgd
 
 
 def init_gbar(params) -> Any:
@@ -123,6 +127,180 @@ def make_fl_train_step(cfg: ModelConfig, fl: FLConfig,
         return new_params, new_gbar, metrics
 
     return train_step
+
+
+def make_fused_fl_round(cfg: ModelConfig, fl: FLConfig,
+                        optimizer: Optional[Optimizer] = None,
+                        transport_kind: str = 'spfl',
+                        unroll: bool = False, mesh=None):
+    """The WHOLE Algorithm-2 round as one traceable function — the
+    LLM-scale twin of ``fl_loop._fused_round_core``.
+
+    Returns ``round_fn(params, opt_state, gbar, batch, gains, key,
+    round_idx) -> (params', opt_state', gbar', rec, loss)``: per-client
+    grads -> tree stats -> in-trace float32 eq. (28) solve -> tree
+    transport (round index as a traced scalar into the PRNG stream) ->
+    optimizer update -> compensation roll -> condensed telemetry record.
+    No host value is consumed, so the function scans
+    (:func:`make_fused_fl_scan`).
+
+    Unlike the host driver's one-round-stale scalar report
+    (launch/train.py), the fused solve sees the CURRENT round's exact
+    per-client stats — including the exact v_k = <|g_k|, gbar> the host
+    path can only approximate — because the gradients are already on
+    device when eq. (28) is traced into the same dispatch.
+
+    ``optimizer`` defaults to plain SGD at ``fl.learning_rate`` (the
+    paper's eq. (6) update, identical to ``make_fl_train_step``'s
+    inline step); its state rides the scan carry.
+    """
+    if fl.collective == 'sharded' and mesh is None:
+        raise ValueError("fl.collective='sharded' needs the mesh passed "
+                         "into make_fused_fl_round")
+    if transport_kind not in ('spfl', 'error_free'):
+        raise ValueError(
+            f'LLM-scale transport must be spfl|error_free, '
+            f'got {transport_kind!r}')
+    if transport_kind == 'spfl' and fl.allocation_backend != 'jax':
+        raise ValueError("fused rounds require allocation_backend='jax' "
+                         "(eq. (28) must solve in-trace)")
+    opt = optimizer if optimizer is not None else sgd(fl.learning_rate)
+    K = fl.n_devices
+    p_w = jnp.full((K,), fl.tx_power_w, jnp.float32)
+    method = fl.allocator
+    max_iters = fl.allocation_max_iters or 6
+
+    def alloc_f32(grads, gbar, stats, gains):
+        """In-trace tree-stats eq. (28): exact per-client g2/v, shared
+        gb2 (the compensation tree is global at LLM scale), Lemma-2
+        delta^2 — all float32, solved by ``solve_traceable``."""
+        gb2s = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                   for g in jax.tree.leaves(gbar))
+        gb2 = jnp.full((K,), gb2s)
+        v = sum(
+            jnp.sum(jnp.abs(g.astype(jnp.float32)).reshape(K, -1)
+                    * b.astype(jnp.float32).reshape(1, -1), axis=1)
+            for g, b in zip(jax.tree.leaves(grads), jax.tree.leaves(gbar)))
+        d2 = tr.delta_sq_tree(stats, fl.quant_bits).astype(jnp.float32)
+        prob = alloc_jax.problem_from_stats(
+            stats['g2'], gb2, v, d2, gains, p_w, stats['dim'], fl,
+            dtype=jnp.float32)
+
+        def solved(_):
+            s = alloc_jax.solve_traceable(prob, method,
+                                          max_iters=max_iters)
+            return s.q, s.p, s.objective
+
+        def uniform(_):
+            s = alloc_jax.solve_traceable(prob, 'uniform')
+            return s.q, s.p, s.objective
+
+        if method == 'uniform':
+            return uniform(None)
+        # round 0 (gbar = 0) degenerates to alpha=1/ghat=0: fall back
+        # to uniform via lax.cond — no device->host sync in the guard
+        return jax.lax.cond(gb2s > 0.0, solved, uniform, None)
+
+    def round_fn(params, opt_state, gbar, batch, gains, key, round_idx):
+        def client_loss(params_, bk):
+            return tf.loss_fn(params_, cfg, bk['tokens'], bk.get('prefix'),
+                              unroll=unroll)
+
+        def one(bk):
+            return jax.value_and_grad(client_loss)(params, bk)
+
+        losses, grads = jax.vmap(one)(batch)
+
+        stats = tr.tree_client_stats(grads)
+        obj = None
+        if transport_kind == 'spfl':
+            q, p, obj = alloc_f32(grads, gbar, stats, gains)
+            ghat, _, diag = tr.spfl_aggregate_tree(
+                grads, gbar, q, p, fl, key, stats=stats, wire=fl.wire,
+                channel=fl.channel, mesh=mesh, round_idx=round_idx)
+        else:
+            q = jnp.ones((K,))
+            p = jnp.ones((K,))
+            ghat, _, diag = tr.error_free_aggregate_tree(
+                grads, fl, key, stats=stats, wire=fl.wire, mesh=mesh,
+                round_idx=round_idx)
+
+        new_params, new_opt = opt.update(ghat, opt_state, params)
+        new_gbar = jax.tree.map(lambda g: jnp.abs(g), ghat)
+        rec = diag.with_allocation(q, p, objective=obj,
+                                   round_idx=round_idx).condensed()
+        return new_params, new_opt, new_gbar, rec, jnp.mean(losses)
+
+    return round_fn
+
+
+def make_fused_fl_scan(cfg: ModelConfig, fl: FLConfig, base_gains,
+                       batch_fn, optimizer: Optional[Optimizer] = None,
+                       transport_kind: str = 'spfl', unroll: bool = False,
+                       mesh=None):
+    """Roll :func:`make_fused_fl_round` over whole segments with
+    ``jax.lax.scan`` — N rounds per dispatch, zero host transfers
+    between segment boundaries.
+
+    Scan carry: ``(params, opt_state, gbar, key, shadow_z, ring)`` —
+    optimizer state, compensation tree, the AR(1) block-fading state
+    (advanced in-trace when ``allocation_cadence='per_round'``) and the
+    on-device telemetry ring all live on device for the segment.
+
+    ``batch_fn(n) -> batch`` must be traceable (e.g. a
+    ``lax.dynamic_slice`` into a resident token pool keyed on the round
+    index) — a host-side batch feed would reintroduce the per-round
+    sync this path exists to remove.
+
+    Returns ``(segment, init_carry)``:
+
+    * ``segment(carry, ns)`` — scan the round body over the traced
+      round-index vector ``ns`` (uint32); jit it once and reuse (a
+      ragged final segment costs one extra compile).
+    * ``init_carry(params, key, seg_len)`` — initial carry with the
+      ring sized to ``seg_len`` (one slot per round: no intra-segment
+      wrap) built from an ``eval_shape`` prototype, so nothing runs
+      before the first dispatch.
+    """
+    opt = optimizer if optimizer is not None else sgd(fl.learning_rate)
+    round_fn = make_fused_fl_round(cfg, fl, opt, transport_kind, unroll,
+                                   mesh)
+    gains_j = jnp.asarray(base_gains, jnp.float32)
+    per_round_gains = (fl.allocation_cadence == 'per_round'
+                       and transport_kind == 'spfl')
+
+    def body(carry, n):
+        params, opt_state, gbar, key, z, ring = carry
+        key, kr = jax.random.split(key)
+        if per_round_gains:
+            z2 = channel.shadow_step(jax.random.fold_in(kr, 0x5AD0), z)
+            gains_n = channel.shadow_gains(gains_j, z2)
+        else:
+            z2, gains_n = z, gains_j
+        params2, opt2, gbar2, rec, loss = round_fn(
+            params, opt_state, gbar, batch_fn(n), gains_n, kr, n)
+        # the traceable push (the donated jitted wrapper cannot appear
+        # inside a scan body)
+        ring2 = obs_ring.ring_push(ring, rec)
+        return (params2, opt2, gbar2, key, z2, ring2), loss
+
+    def init_carry(params, key, seg_len: int):
+        opt_state = opt.init(params)
+        gbar = init_gbar(params)
+        z0 = channel.shadow_init(jax.random.fold_in(key, 0x0FAD),
+                                 fl.n_devices)
+        rec_sds = jax.eval_shape(
+            lambda p_, o_, g_, k_: round_fn(
+                p_, o_, g_, batch_fn(jnp.uint32(0)), gains_j, k_,
+                jnp.uint32(0))[3],
+            params, opt_state, gbar, key)
+        ring = obs_ring.ring_init_abstract(rec_sds, seg_len)
+        return (params, opt_state, gbar, key, z0, ring)
+
+    def segment(carry, ns):
+        return jax.lax.scan(body, carry, ns)
+
+    return segment, init_carry
 
 
 def make_standard_train_step(cfg: ModelConfig, fl: FLConfig,

@@ -21,6 +21,27 @@ stats, eq. (28) solve and (q, p) in one dispatch, no host round-trip,
 'per_round'`` additionally evolves the channel gains every round via
 the seeded block-fading process (``channel.block_fading_trajectory``)
 instead of freezing the round-0 geometry.
+
+``FLConfig.round_fusion`` selects how rounds are dispatched:
+
+* ``'none'`` (default) — the host loop above: one jitted dispatch per
+  stage, telemetry ring-pushed per round, flushed on cadence.
+* ``'eager'`` — the ENTIRE round (grads -> fading step -> f32 eq. (28)
+  solve -> transport -> update -> compensation -> telemetry push) is one
+  jitted body, dispatched once per round from a host loop.
+* ``'scan'`` — the same body rolled over a whole telemetry segment by
+  ``jax.lax.scan``: ONE dispatch per ``scan_segment_rounds`` rounds
+  (default: ``telemetry_flush_every``), with params, compensation state,
+  PRNG key, AR(1) shadowing state and the telemetry ring as scan carry.
+  Zero device->host transfers happen between segment boundaries; the
+  boundary does one ring flush (one ``device_get``) plus the eval.
+
+'eager' and 'scan' trace the SAME round body, so they agree bit-exactly
+on every integer field and to f32 rounding on floats — the parity the
+fused-round tests pin.  Fused modes solve eq. (28) in float32 *inside*
+the trace (``allocation_jax`` f32 caps; see core/README.md for the
+measured f32-vs-f64 contract) and therefore require
+``allocation_backend='jax'`` on allocating transports.
 """
 from __future__ import annotations
 
@@ -255,8 +276,244 @@ class FLSimulator:
         return sol, stats
 
     # ------------------------------------------------------------------
+    # fused rounds (FLConfig.round_fusion = 'eager' | 'scan')
+    # ------------------------------------------------------------------
+    def _fused_round_core(self):
+        """The whole round as ONE traceable function.
+
+        ``round_core(params, gbar, kr, z, n) -> (params', gbar', z',
+        rec, loss_mean)``: per-client grads -> AR(1) fading step (when
+        ``allocation_cadence='per_round'``) -> in-trace float32 eq. (28)
+        solve -> transport (round ``n`` as a traced scalar) -> update ->
+        compensation roll -> condensed telemetry record.  No host value
+        is consumed anywhere, so the body scans (`_run_fused`).
+
+        The allocation guard against an empty compensation history is a
+        ``lax.cond`` on ``max(gbar^2) > 0`` — the traced twin of the
+        host path's ``float(gb2.max()) == 0.0`` check in
+        :meth:`_allocate`, which would be a device->host sync here.
+        """
+        fl = self.fl
+        kind = fl.transport
+        dim = self.dim
+        gains_j = jnp.asarray(self.gains, jnp.float32)
+        p_w_j = jnp.asarray(self.p_w, jnp.float32)
+        method = fl.allocator
+        max_iters = fl.allocation_max_iters or 6
+        per_round_gains = fl.allocation_cadence == 'per_round'
+        allocating = kind in ('spfl', 'spfl_retx')
+
+        def alloc_f32(grads, gbar, gains_n):
+            """Steps 3–4 in-trace, float32 end to end (the f64 closed
+            forms live behind an ``enable_x64`` host wrapper and cannot
+            appear inside this f32 trace — see allocation_jax)."""
+            gb = gbar if gbar.ndim == 2 else jnp.broadcast_to(
+                gbar, grads.shape)
+            g2 = jnp.sum(grads ** 2, axis=1)
+            gb2 = jnp.sum(gb ** 2, axis=1)
+            v = jnp.sum(jnp.abs(grads) * gb, axis=1)
+            d2 = jax.vmap(
+                lambda g: quantize_mod.expected_quant_mse(
+                    g, fl.quant_bits))(grads)
+            prob = alloc_jax.problem_from_stats(
+                g2, gb2, v, d2, gains_n, p_w_j, dim, fl,
+                dtype=jnp.float32)
+
+            def solved(_):
+                s = alloc_jax.solve_traceable(prob, method,
+                                              max_iters=max_iters)
+                return s.q, s.p, s.objective
+
+            def uniform(_):
+                s = alloc_jax.solve_traceable(prob, 'uniform')
+                return s.q, s.p, s.objective
+
+            if method == 'uniform':
+                return uniform(None)
+            # no compensation history yet (round 0): optimizing against
+            # gbar=0 degenerates to alpha=1 / ghat=0 — fall back to
+            # uniform WITHOUT a host sync
+            return jax.lax.cond(jnp.max(gb2) > 0.0, solved, uniform, None)
+
+        def round_core(params, gbar, kr, z, n):
+            losses, grads = self._per_client_grads(
+                params, self.client_x, self.client_y)
+
+            if per_round_gains and allocating:
+                z2 = channel.shadow_step(jax.random.fold_in(kr, 0x5AD0), z)
+                gains_n = channel.shadow_gains(gains_j, z2)
+            else:
+                z2 = z
+                gains_n = gains_j
+
+            obj = None
+            if allocating:
+                q, p, obj = alloc_f32(grads, gbar, gains_n)
+            else:
+                q = jnp.ones(self.K)
+                p = jnp.ones(self.K)
+
+            ghat, diag = self._run_transport(kind, grads, gbar, q, p,
+                                             kr, n)
+            new_params = self._apply_update(params, ghat)
+
+            if fl.compensation == 'last_global':
+                gbar2 = jnp.abs(ghat)
+            elif fl.compensation == 'last_local':
+                gbar2 = jnp.abs(grads)
+            elif fl.compensation == 'seeded_random':
+                gbar2 = jnp.abs(jax.random.normal(
+                    jax.random.fold_in(jax.random.PRNGKey(fl.seed + 99),
+                                       n),
+                    (dim,))) * 0.01
+            else:                    # zeros: leave as-is
+                gbar2 = gbar
+
+            rec = diag.with_allocation(q, p, objective=obj,
+                                       round_idx=n).condensed()
+            return new_params, gbar2, z2, rec, jnp.mean(losses)
+
+        return round_core
+
+    def _fused_round_body(self):
+        """Scan body: carry = (params, gbar, key, z, ring); x = round
+        index (traced uint32); y = mean client loss of the round."""
+        round_core = self._fused_round_core()
+
+        def round_body(carry, n):
+            params, gbar, key, z, ring = carry
+            key, kr = jax.random.split(key)
+            params2, gbar2, z2, rec, loss_mean = round_core(
+                params, gbar, kr, z, n)
+            # the traceable push, NOT the donated jitted wrapper — the
+            # ring is scan carry, donation is the dispatcher's business
+            ring2 = obs_ring.ring_push(ring, rec)
+            return (params2, gbar2, key, z2, ring2), loss_mean
+
+        return round_body
+
+    def _fused_init_carry(self, seg_len: int):
+        """Initial scan carry.  The telemetry ring is sized to the
+        segment (one slot per round — no intra-segment wrap possible)
+        and built from an ``eval_shape`` prototype of the round body's
+        record, so no round runs before the first dispatch."""
+        round_core = self._fused_round_core()
+        z0 = channel.shadow_init(
+            jax.random.fold_in(jax.random.PRNGKey(self._seed), 0x0FAD),
+            self.K)
+        rec_sds = jax.eval_shape(
+            lambda p_, g_, k_, z_, n_: round_core(p_, g_, k_, z_, n_)[3],
+            self.params, self.gbar, self.key, z0, jnp.uint32(0))
+        ring = obs_ring.ring_init_abstract(rec_sds, seg_len)
+        return (self.params, self.gbar, self.key, z0, ring)
+
+    def _run_fused(self, n_rounds: int, eval_every: int,
+                   compute_bound: bool) -> FLHistory:
+        """Segment-dispatched run: 'scan' issues ONE ``lax.scan`` per
+        telemetry segment, 'eager' one jitted round-body call per round
+        (same traced body — the integer-bit-exact reference for 'scan').
+
+        Host syncs happen ONLY at segment boundaries: one ring flush
+        (single ``device_get``) + the global eval.  ``eval_every`` is
+        therefore quantized to segment boundaries; every boundary both
+        flushes and evaluates, and the final ragged segment drains its
+        tail, so no round's telemetry is dropped or double-flushed
+        whatever ``telemetry_flush_every`` divides.
+        """
+        fl = self.fl
+        kind = fl.transport
+        if fl.round_fusion not in ('eager', 'scan'):
+            raise ValueError(f'round_fusion must be none|eager|scan, '
+                             f'got {fl.round_fusion!r}')
+        if compute_bound:
+            raise ValueError("compute_bound=True requires "
+                             "round_fusion='none' (the Theorem-1 bound "
+                             "needs host-side per-round stats)")
+        if kind in ('spfl', 'spfl_retx') and fl.allocation_backend != 'jax':
+            raise ValueError("round_fusion requires "
+                             "allocation_backend='jax' on allocating "
+                             "transports (eq. (28) must solve in-trace)")
+        hist = FLHistory()
+        flush_every = max(1, fl.telemetry_flush_every)
+        seg_len = fl.scan_segment_rounds or flush_every
+        sink = (JsonlSink(fl.telemetry_path,
+                          run_manifest(fl, extra={
+                              'driver': 'fl_loop',
+                              'round_fusion': fl.round_fusion}))
+                if fl.telemetry_path else None)
+        packed_agreement = (fl.wire == 'packed'
+                            and kind in ('spfl', 'spfl_retx', 'error_free'))
+
+        round_body = self._fused_round_body()
+        carry = self._fused_init_carry(seg_len)
+        if fl.round_fusion == 'scan':
+            seg_fn = jax.jit(
+                lambda c, ns: jax.lax.scan(round_body, c, ns))
+        else:
+            body_jit = jax.jit(round_body)
+
+        start = self._round
+        done = 0
+        while done < n_rounds:
+            m = min(seg_len, n_rounds - done)
+            ns = jnp.arange(start + done, start + done + m,
+                            dtype=jnp.uint32)
+            t0 = time.time()
+            with self.trace.span('fused_segment'):
+                if fl.round_fusion == 'scan':
+                    carry, seg_losses = seg_fn(carry, ns)
+                else:
+                    losses_l = []
+                    for i in range(m):
+                        carry, lm = body_jit(carry, ns[i])
+                        losses_l.append(lm)
+                    seg_losses = jnp.stack(losses_l)
+
+            # ---- segment boundary: the run's only host sync points ----
+            params, gbar, key, z, ring = carry
+            recs, ring = obs_ring.flush(ring)        # ONE device_get
+            carry = (params, gbar, key, z, ring)
+            for rec in recs:
+                row = obs_record.to_row(rec)
+                hist.payload_bits.append(row['payload_bits'])
+                hist.q_mean.append(row['q_mean'])
+                hist.p_mean.append(row['p_mean'])
+                hist.sign_ok_frac.append(row['sign_ok_frac'])
+                hist.mod_ok_frac.append(row['mod_ok_frac'])
+                if packed_agreement:
+                    hist.sign_agreement.append(row['sign_agreement'])
+                hist.retransmissions.append(row['retransmissions'])
+                self.metrics.observe_round(row)
+                if sink is not None:
+                    sink.write_round(row)
+            prev_loss = float(seg_losses[-1])
+            loss, acc = self._global_metrics(
+                params, self.client_x, self.client_y,
+                self.test_x, self.test_y)
+            hist.loss.append(float(loss))
+            hist.test_acc.append(float(acc))
+            hist.loss_delta.append(float(loss) - prev_loss)
+            wall = time.time() - t0
+            # eq. (28) is fused into the round dispatch; there is no
+            # separately timeable host alloc stage
+            hist.alloc_time_s.extend([0.0] * m)
+            hist.round_time_s.extend([wall / m] * m)
+            done += m
+
+        self.params, self.gbar, self.key = carry[0], carry[1], carry[2]
+        self._round += n_rounds
+        self.metrics.observe_alloc(host_solver_calls=self.host_solver_calls)
+        if sink is not None:
+            sink.write_spans(self.trace.summary())
+            sink.write_metrics(self.metrics.snapshot())
+            sink.close()
+        return hist
+
+    # ------------------------------------------------------------------
     def run(self, n_rounds: int, eval_every: int = 1,
             compute_bound: bool = False) -> FLHistory:
+        if self.fl.round_fusion != 'none':
+            return self._run_fused(n_rounds, eval_every, compute_bound)
         hist = FLHistory()
         fl = self.fl
         kind = fl.transport

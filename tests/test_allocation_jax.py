@@ -167,6 +167,51 @@ def test_batched_solve_matches_numpy_reference_over_64_fading_draws():
 
 
 # ---------------------------------------------------------------------------
+# float32 trace parity (the fused-round in-trace solve, ISSUE 7)
+# ---------------------------------------------------------------------------
+#
+# The fused lax.scan round solves eq. (28) in float32 INSIDE the round
+# trace (f64 only exists behind the enable_x64 host wrappers).  The f32
+# caps (allocation_jax._caps: exp/pow/log saturation + the wider alpha
+# boundary clip a_eps=1e-6 — 1 - 1e-12 rounds to exactly 1.0 in f32 and
+# NaN-ed the barrier gradient via 0*inf) keep every iterate finite; the
+# contract below binds on what the round actually consumes (objective,
+# q, p).  alpha/beta are checked loosely only: near-flat objective
+# regions make the argmin tie-break precision-sensitive (measured worst
+# drift over the K x SNR x method grid: dalpha ~2e-2 at obj_rel ~2e-7).
+F32_TOL = dict(obj_rtol=1e-4,      # measured worst 1.9e-5
+               qp_atol=5e-3,       # measured worst dq 2.2e-4, dp 1.1e-3
+               ab_atol=5e-2)       # argmin ties on flat objectives
+
+
+@pytest.mark.parametrize('method', ['alternating', 'barrier'])
+@pytest.mark.parametrize('k', [4, 8, 32])
+@pytest.mark.parametrize('power', [-4.0, -14.0, -24.0, -34.0])
+def test_f32_trace_parity_grid(method, k, power):
+    prob = _problem(k=k, power_dbm=power, seed=k + int(-power))
+    ref = AL.solve(prob, method, max_iters=3)
+    jp32 = AJ.from_reference(prob, dtype=jax.numpy.float32)
+    sol = jax.jit(AJ.solve_traceable,
+                  static_argnames=('method', 'max_iters'))(
+        jp32, method, max_iters=3)
+    q = np.asarray(sol.q)
+    p = np.asarray(sol.p)
+    obj = float(sol.objective)
+    # every f32 iterate must stay finite (the K=32 / -4 dBm barrier cell
+    # NaN-ed before the a_eps fix)
+    assert np.isfinite(obj), (method, k, power)
+    assert np.all(np.isfinite(q)) and np.all(np.isfinite(p))
+    assert obj == pytest.approx(ref.objective, rel=F32_TOL['obj_rtol'],
+                                abs=1e-10)
+    np.testing.assert_allclose(q, ref.q, atol=F32_TOL['qp_atol'])
+    np.testing.assert_allclose(p, ref.p, atol=F32_TOL['qp_atol'])
+    np.testing.assert_allclose(np.asarray(sol.alpha), ref.alpha,
+                               atol=F32_TOL['ab_atol'])
+    np.testing.assert_allclose(np.asarray(sol.beta), ref.beta,
+                               atol=F32_TOL['ab_atol'])
+
+
+# ---------------------------------------------------------------------------
 # allocation invariants (seeded grid — runs without hypothesis too)
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,287 @@
+"""Fused-round contract (ISSUE 7): scan == eager, zero host sync.
+
+``round_fusion='eager'`` and ``round_fusion='scan'`` trace the SAME
+round body (``fl_loop._fused_round_body``); the only difference is the
+dispatcher (one jitted call per round vs one ``lax.scan`` per telemetry
+segment).  The contract pinned here:
+
+* integer-valued telemetry (payload bits, retransmissions, packet-fate
+  fractions) agrees BIT-EXACTLY between the two modes;
+* float telemetry (q/p means) agrees to f32 ulps and losses to the
+  documented compounding tolerance (XLA may schedule the scanned body's
+  f32 arithmetic differently — see core/README.md);
+* a whole scanned segment runs under ``jax.transfer_guard('disallow')``
+  — zero device->host transfers between flush boundaries;
+* telemetry flushes exactly once per round whatever
+  ``telemetry_flush_every`` divides: ring capacity = segment length, a
+  flush at every segment boundary, and a final ragged-segment drain.
+"""
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import FLConfig
+from repro.training.fl_loop import build_simulator
+
+INT_KEYS = ('payload_bits', 'retransmissions', 'sign_ok_frac',
+            'mod_ok_frac')
+FLOAT_KEYS = ('q_mean', 'p_mean')
+
+
+def _fl(**kw):
+    base = dict(n_devices=4, allocator='barrier', seed=0,
+                allocation_backend='jax', telemetry_flush_every=2)
+    base.update(kw)
+    return FLConfig(**base)
+
+
+def _run(fl, n_rounds=5):
+    sim = build_simulator(fl, per_device=40, n_test=60)
+    return sim.run(n_rounds)
+
+
+# ---------------------------------------------------------------------------
+# scan == eager parity across wire x channel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize('wire,chan', [('analytic', 'bernoulli'),
+                                       ('packed', 'bernoulli'),
+                                       ('packed', 'bitlevel')])
+def test_scan_matches_eager(wire, chan):
+    he = _run(_fl(wire=wire, channel=chan, round_fusion='eager'))
+    hs = _run(_fl(wire=wire, channel=chan, round_fusion='scan'))
+    for k in INT_KEYS:
+        assert getattr(he, k) == getattr(hs, k), k   # bit-exact
+    for k in FLOAT_KEYS:
+        # q/p inherit the compounded f32 param drift through the
+        # gradient stats the allocator consumes (~1e-5 by round 5)
+        np.testing.assert_allclose(getattr(hs, k), getattr(he, k),
+                                   atol=1e-4, err_msg=k)
+    # f32 param drift compounds across scanned rounds (documented)
+    np.testing.assert_allclose(hs.loss, he.loss, rtol=2e-3)
+    assert len(he.payload_bits) == 5
+    assert all(np.isfinite(he.loss)) and all(np.isfinite(hs.loss))
+
+
+def test_scan_matches_eager_retx_and_compensation_modes():
+    for kw in (dict(transport='spfl_retx'),
+               dict(compensation='last_local'),
+               dict(compensation='seeded_random'),
+               dict(compensation='zeros')):
+        he = _run(_fl(round_fusion='eager', **kw), n_rounds=3)
+        hs = _run(_fl(round_fusion='scan', **kw), n_rounds=3)
+        for k in INT_KEYS:
+            assert getattr(he, k) == getattr(hs, k), (kw, k)
+        assert all(np.isfinite(hs.loss)), kw
+
+
+def test_scan_per_round_cadence_runs_finite():
+    # AR(1) shadowing as scan carry (channel.shadow_step) — marginals
+    # match the host trajectory, draws are scan-internal
+    h = _run(_fl(round_fusion='scan', allocation_cadence='per_round'),
+             n_rounds=4)
+    assert all(np.isfinite(h.loss))
+    assert len(h.q_mean) == 4
+
+
+# ---------------------------------------------------------------------------
+# zero-sync: whole segment under the transfer guard
+# ---------------------------------------------------------------------------
+
+def test_whole_segment_under_transfer_guard():
+    sim = build_simulator(_fl(round_fusion='scan'), per_device=40,
+                          n_test=60)
+    body = sim._fused_round_body()
+    seg = jax.jit(lambda c, ns: jax.lax.scan(body, c, ns))
+    carry = sim._fused_init_carry(4)
+    ns0 = jnp.arange(0, 4, dtype=jnp.uint32)
+    carry, _ = seg(carry, ns0)                 # compile outside the guard
+    jax.block_until_ready(carry)
+    ns1 = jnp.arange(4, 8, dtype=jnp.uint32)
+    with jax.transfer_guard('disallow'):
+        carry, losses = seg(carry, ns1)
+        jax.block_until_ready((carry, losses))
+    assert bool(np.all(np.isfinite(np.asarray(losses))))
+
+
+def test_fused_alloc_guard_is_traced():
+    """The zero-compensation-history guard must be a lax.cond, not a
+    host float() — the whole first segment (which contains the gbar=0
+    round the guard exists for) runs under the transfer guard."""
+    sim = build_simulator(_fl(round_fusion='scan'), per_device=40,
+                          n_test=60)
+    body = sim._fused_round_body()
+    seg = jax.jit(lambda c, ns: jax.lax.scan(body, c, ns))
+    ns = jnp.arange(0, 2, dtype=jnp.uint32)
+    jax.block_until_ready(seg.lower(sim._fused_init_carry(2), ns)
+                          .compile())
+    carry = sim._fused_init_carry(2)
+    jax.block_until_ready(carry)
+    with jax.transfer_guard('disallow'):
+        carry, _ = seg(carry, ns)
+        jax.block_until_ready(carry)
+
+
+# ---------------------------------------------------------------------------
+# flush cadence: no dropped / double-flushed rounds
+# ---------------------------------------------------------------------------
+
+def test_ring_flush_across_ragged_segments(tmp_path):
+    """13 rounds with segment length 5 -> segments of 5, 5, 3.  Every
+    round's record must surface exactly once, in order."""
+    path = str(tmp_path / 'telemetry.jsonl')
+    fl = _fl(round_fusion='scan', telemetry_flush_every=5,
+             telemetry_path=path)
+    h = _run(fl, n_rounds=13)
+    assert len(h.payload_bits) == 13
+    rows = [json.loads(line) for line in open(path)]
+    rounds = [r['round'] for r in rows if r.get('type') == 'round']
+    assert rounds == list(range(13))
+    # three segment boundaries -> three eval points
+    assert len(h.loss) == 3
+
+
+def test_segment_length_override():
+    # scan_segment_rounds decouples the scan window from the flush
+    # cadence default
+    fl = _fl(round_fusion='scan', telemetry_flush_every=10,
+             scan_segment_rounds=3)
+    h = _run(fl, n_rounds=7)          # segments 3, 3, 1
+    assert len(h.payload_bits) == 7
+    assert len(h.loss) == 3
+
+
+# ---------------------------------------------------------------------------
+# guard rails
+# ---------------------------------------------------------------------------
+
+def test_fused_requires_jax_backend():
+    sim = build_simulator(_fl(round_fusion='scan',
+                              allocation_backend='numpy'),
+                          per_device=40, n_test=60)
+    with pytest.raises(ValueError, match='jax'):
+        sim.run(2)
+
+
+def test_fused_rejects_compute_bound():
+    sim = build_simulator(_fl(round_fusion='eager'), per_device=40,
+                          n_test=60)
+    with pytest.raises(ValueError, match='compute_bound'):
+        sim.run(2, compute_bound=True)
+
+
+def test_fused_rejects_unknown_mode():
+    sim = build_simulator(_fl(), per_device=40, n_test=60)
+    sim.fl = dataclasses.replace(sim.fl, round_fusion='typo')
+    with pytest.raises(ValueError, match='none|eager|scan'):
+        sim.run(2)
+
+
+# ---------------------------------------------------------------------------
+# LLM-scale fused scan (training.distributed.make_fused_fl_scan)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope='module')
+def llm_setup():
+    from repro.configs.registry import get_arch
+    from repro.data import synth_tokens
+    from repro.models import transformer as tf
+    cfg = get_arch('smollm-135m').reduced()
+    key = jax.random.PRNGKey(0)
+    params = tf.init_params(cfg, key)
+    K, b, T = 4, 2, 64
+    toks = jnp.asarray(
+        synth_tokens(K * b, T, cfg.vocab_size, 0).reshape(K, b, T))
+    return cfg, params, toks, key
+
+
+def _llm_scan(cfg, fl, toks, gains):
+    from repro.training import distributed as D
+
+    def batch_fn(n):
+        del n                        # single resident batch per round
+        return {'tokens': toks}
+
+    return D.make_fused_fl_scan(cfg, fl, gains, batch_fn)
+
+
+def test_llm_fused_scan_matches_per_round_dispatch(llm_setup):
+    cfg, params, toks, key = llm_setup
+    fl = FLConfig(n_devices=4, allocator='barrier',
+                  allocation_backend='jax', wire='packed')
+    gains = np.full(4, 1e-7)
+    segment, init_carry = _llm_scan(cfg, fl, toks, gains)
+    seg = jax.jit(segment)
+
+    c_scan = init_carry(params, key, 4)
+    c_scan, losses_scan = seg(c_scan, jnp.arange(4, dtype=jnp.uint32))
+
+    c_eager = init_carry(params, key, 4)
+    parts = []
+    for i in range(4):               # same body, length-1 scans
+        c_eager, lm = seg(c_eager, jnp.arange(i, i + 1,
+                                              dtype=jnp.uint32))
+        parts.append(lm)
+    losses_eager = jnp.concatenate(parts)
+
+    from repro.obs import ringbuf as obs_ring
+    recs_s, _ = obs_ring.flush(c_scan[-1])
+    recs_e, _ = obs_ring.flush(c_eager[-1])
+    assert len(recs_s) == len(recs_e) == 4
+    for rs, re in zip(recs_s, recs_e):
+        assert np.array_equal(np.asarray(rs.sign_ok),
+                              np.asarray(re.sign_ok))
+        assert np.array_equal(np.asarray(rs.mod_ok),
+                              np.asarray(re.mod_ok))
+        assert float(rs.payload_bits) == float(re.payload_bits)
+        assert int(np.asarray(rs.round_idx)) == int(np.asarray(
+            re.round_idx))
+        np.testing.assert_allclose(np.asarray(rs.q), np.asarray(re.q),
+                                   atol=1e-6)
+    np.testing.assert_allclose(np.asarray(losses_scan),
+                               np.asarray(losses_eager), rtol=2e-3)
+
+
+def test_llm_fused_segment_transfer_guard(llm_setup):
+    cfg, params, toks, key = llm_setup
+    fl = FLConfig(n_devices=4, allocator='barrier',
+                  allocation_backend='jax')
+    segment, init_carry = _llm_scan(cfg, fl, toks, np.full(4, 1e-7))
+    seg = jax.jit(segment)
+    carry = init_carry(params, key, 3)
+    ns0 = jnp.arange(0, 3, dtype=jnp.uint32)
+    carry, _ = seg(carry, ns0)
+    jax.block_until_ready(carry)
+    ns1 = jnp.arange(3, 6, dtype=jnp.uint32)
+    with jax.transfer_guard('disallow'):
+        carry, losses = seg(carry, ns1)
+        jax.block_until_ready((carry, losses))
+    assert bool(np.all(np.isfinite(np.asarray(losses))))
+
+
+def test_llm_fused_optimizer_state_in_carry(llm_setup):
+    from repro.training.optimizer import get_optimizer
+    cfg, params, toks, key = llm_setup
+    fl = FLConfig(n_devices=4, allocator='uniform',
+                  allocation_backend='jax')
+    from repro.training import distributed as D
+
+    def batch_fn(n):
+        del n
+        return {'tokens': toks}
+
+    opt = get_optimizer('momentum', fl.learning_rate)
+    segment, init_carry = D.make_fused_fl_scan(
+        cfg, fl, np.full(4, 1e-7), batch_fn, optimizer=opt)
+    carry = init_carry(params, key, 3)
+    carry, losses = jax.jit(segment)(carry,
+                                     jnp.arange(3, dtype=jnp.uint32))
+    # momentum state advanced on device inside the scan
+    vel = carry[1]
+    vmax = max(float(jnp.max(jnp.abs(v))) for v in jax.tree.leaves(vel))
+    assert vmax > 0.0
+    assert bool(np.all(np.isfinite(np.asarray(losses))))
