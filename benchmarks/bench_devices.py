@@ -1,8 +1,16 @@
 """Fig. 9 — test accuracy vs the number of participating devices K
-(fixed total bandwidth -> per-device band shrinks as K grows)."""
+(fixed total bandwidth -> per-device band shrinks as K grows).
+
+One-dispatch sweep: spfl FL points run ``allocation_backend='jax'``
+(``host_solver_calls == 0`` asserted per point), and the ragged-K
+allocation sweep — every K in one zero-padded ``stack_problems`` ->
+``solve_batched`` call (mask semantics in core/README.md) — emits the
+``fig9_alloc_K{k}`` rows plus the ``fig9_alloc_grid`` early-exit
+comparison."""
 from __future__ import annotations
 
-from common import PER_DEVICE, emit, final_acc, run_fl
+from bench_allocation import rep_problem, solve_grid
+from common import emit, final_acc, run_fl
 
 KS = (5, 10, 20, 30)
 METHODS = ('spfl', 'dds', 'scheduling')
@@ -14,9 +22,16 @@ def main() -> None:
         for kind in METHODS:
             name = f'fig9_K{k}_{kind}'
             h, row = run_fl(name, n_devices=k, transport=kind,
-                            tx_power_dbm=POWER)
+                            tx_power_dbm=POWER,
+                            allocation_backend='jax')
+            assert row['host_solver_calls'] == 0, row
             emit(row['name'], row['us_per_call'],
                  f'final_acc={final_acc(h):.4f}')
+
+    # the ragged K sweep's allocation problems as ONE padded dispatch
+    probs = [rep_problem(k, seed=9, power_dbm=POWER) for k in KS]
+    solve_grid(probs, 'barrier', 6, 'fig9_alloc_grid',
+               [f'fig9_alloc_K{k}' for k in KS])
 
 
 if __name__ == '__main__':

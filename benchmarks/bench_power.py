@@ -3,10 +3,19 @@
 The paper's key figure: SP-FL degrades gracefully as power shrinks
 (sign-prioritization), one-bit is competitive at very low power, DDS needs
 abundant power, error-free is the ceiling.
+
+The sweep's eq. (28) solving is one-dispatch end to end: the spfl FL
+points run ``allocation_backend='jax'`` (the per-round solve is an
+on-device dispatch — ``host_solver_calls`` stays 0 across the whole
+sweep, asserted below), and the standalone allocation sweep over the
+power grid is ONE ``stack_problems`` -> ``solve_batched`` call emitting
+the ``fig7_alloc_P{p}`` rows plus the ``fig7_alloc_grid`` early-exit
+comparison (shared grid helper in bench_allocation).
 """
 from __future__ import annotations
 
-from common import emit, final_acc, run_fl
+from bench_allocation import rep_problem, solve_grid
+from common import DEVICES, emit, final_acc, run_fl
 
 POWERS = (-44.0, -38.0, -32.0, -24.0, -4.0)
 METHODS = ('error_free', 'spfl', 'dds', 'onebit', 'scheduling')
@@ -16,9 +25,17 @@ def main() -> None:
     for p in POWERS:
         for kind in METHODS:
             name = f'fig7_P{p:g}_{kind}'
-            h, row = run_fl(name, transport=kind, tx_power_dbm=p)
+            h, row = run_fl(name, transport=kind, tx_power_dbm=p,
+                            allocation_backend='jax')
+            # the zero-host-solve guarantee of the one-dispatch sweep
+            assert row['host_solver_calls'] == 0, row
             emit(row['name'], row['us_per_call'],
                  f'final_acc={final_acc(h):.4f}')
+
+    # the power sweep's allocation problems as ONE batched dispatch
+    probs = [rep_problem(DEVICES, seed=7, power_dbm=p) for p in POWERS]
+    solve_grid(probs, 'barrier', 6, 'fig7_alloc_grid',
+               [f'fig7_alloc_P{p:g}' for p in POWERS])
 
 
 if __name__ == '__main__':

@@ -50,7 +50,8 @@ def run_fl(name: str, rounds: int = None, compute_bound: bool = False,
     h = sim.run(rounds or ROUNDS, compute_bound=compute_bound)
     dt = time.time() - t0
     n = rounds or ROUNDS
-    return h, dict(name=name, us_per_call=1e6 * dt / n)
+    return h, dict(name=name, us_per_call=1e6 * dt / n,
+                   host_solver_calls=sim.host_solver_calls)
 
 
 def emit(name: str, us_per_call: float, derived):

@@ -79,7 +79,9 @@ def report(path: str) -> None:
               f'({pct:+6.1f}%){flag}{note}')
     for name in prev_rows:
         if name not in cur_names:
-            print(f'   {name:<44} DROPPED')
+            # present in the previous entry, gone from the latest —
+            # renames/retirements must be visible in CI, not silent
+            print(f'   {name:<44} REMOVED')
 
 
 def main() -> None:

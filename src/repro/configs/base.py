@@ -281,6 +281,19 @@ class FLConfig:
     host-cost-bound 2 for 'alternating' and the solver default 6 for
     'barrier'; jax runs 6 for either (iterations are cheap on-device).
 
+    ``allocation_tol``: relative-objective convergence tolerance of the
+    jax solver's outer loop (``|prev-obj| <= tol*(1+|obj|)``).  0.0 =
+    the engine default (1e-5, matching the NumPy reference).
+
+    ``allocation_early_exit``: lower the jax solver's convergence-
+    flagged loops to bounded-trip ``lax.while_loop``s that leave as soon
+    as the iterate converges, instead of burning the full fixed-trip
+    budget.  Bit-identical to the fixed-trip lowering (the loops freeze
+    their carries once the done flag fires); False restores the
+    fixed-trip schedule for apples-to-apples benchmarking.  The solver
+    reports its effort either way: ``FLHistory.alloc_iters`` /
+    ``alloc_exit_reason`` per round (NaN on paths that don't solve).
+
     ``telemetry_flush_every``: rounds between device->host telemetry
     flushes.  Per-round ``RoundTelemetry`` records accumulate in an
     on-device ring buffer (``repro.obs.ringbuf``) and cross to the host
@@ -350,6 +363,8 @@ class FLConfig:
     allocation_backend: str = 'numpy'    # numpy | jax
     allocation_cadence: str = 'static'   # static | per_round
     allocation_max_iters: int = 0        # 0 = auto (see docstring)
+    allocation_tol: float = 0.0          # 0 = engine default 1e-5
+    allocation_early_exit: bool = True   # while_loop early exit (jax)
     telemetry_flush_every: int = 8       # ring capacity / flush cadence
     telemetry_path: Optional[str] = None  # JSONL sink (None = in-memory)
     round_fusion: str = 'none'           # none | eager | scan

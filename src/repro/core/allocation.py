@@ -320,13 +320,15 @@ def solve(prob: AllocationProblem, method: str = 'alternating',
         alpha = np.full(K, 0.5)
         q, p = success_probs_np(prob, alpha, beta)
         return Allocation(alpha, beta, q, p, prob.objective(alpha, beta),
-                          {'iters': 0, 'method': method})
+                          {'iters': 0, 'iters_used': 0, 'exit_reason': 0,
+                           'method': method})
 
     use_barrier = method == 'barrier'
     alpha = np.full(K, 0.5)
     uniform_obj = prob.objective(alpha, beta)
     prev = np.inf
     iters = 0
+    converged = False
     objs = []          # per-outer-iteration objective (pre-safeguard)
     for it in range(max_iters):
         iters = it + 1
@@ -339,18 +341,24 @@ def solve(prob: AllocationProblem, method: str = 'alternating',
         objs.append(obj)
         if abs(prev - obj) <= tol * (1.0 + abs(obj)):
             prev = obj
+            converged = True
             break
         prev = obj
     # safeguard: never return anything worse than the uniform default
     # (the barrier method's strictly-interior start can lose to uniform
     # in degenerate regimes)
-    if prev > uniform_obj:
+    fell_back = prev > uniform_obj
+    if fell_back:
         alpha = np.full(K, 0.5)
         beta = np.full(K, 1.0 / K)
         prev = uniform_obj
     q, p = success_probs_np(prob, alpha, beta)
+    # exit_reason mirrors allocation_jax's EXIT_* codes so both
+    # backends feed the same telemetry schema
+    reason = 3 if fell_back else (0 if converged else 1)
     return Allocation(alpha, beta, q, p, prev,
-                      {'iters': iters, 'method': method,
+                      {'iters': iters, 'iters_used': iters,
+                       'exit_reason': reason, 'method': method,
                        'objectives': objs})
 
 

@@ -16,9 +16,31 @@ flow over an :class:`JaxAllocationProblem` pytree, so that
   one dispatch solves allocations for an entire block-fading trajectory
   or an SNR x K scenario grid.
 
-Control flow is masked rather than dynamic: every early ``break`` of
+Control flow is masked AND convergence-aware: every early ``break`` of
 the reference becomes a frozen carry under a ``done`` flag with the
-same trip-count bounds, so the two engines walk the same iterates.
+same trip-count bounds, so the two engines walk the same iterates —
+and by default (``early_exit=True``) the loops are bounded-trip
+``lax.while_loop``s that stop at the exact iteration the ``done`` flag
+fires instead of burning the remaining budget on frozen no-op trips.
+Because every post-``done`` iteration of the fixed-trip form is a
+frozen carry, the early exit is *bit-identical* to the fixed-trip
+solve (``tests/test_allocation_jax.py`` pins this), composes with vmap
+(XLA's batched ``while_loop`` freezes each converged element's carry
+via select until the whole batch converges — exactly the masked
+all-converged predicate), and stays compilable inside ``lax.scan``
+(the predicate always includes the hard trip cap).  ``inner_tol > 0``
+additionally enables tolerance-bounded exits of the golden-section /
+dual-bisection / barrier-descent inner loops (interval width resp.
+iterate displacement below ``inner_tol``) — faster but no longer
+bit-identical; the measured accuracy-vs-wall-time frontier lives in
+``src/repro/core/README.md``.
+
+Ragged cohorts batch through zero-padding: ``stack_problems`` with
+heterogeneous K pads every per-client leaf to the widest cohort and
+sets the optional ``mask`` field (1 real / 0 pad).  Padded entries
+carry zero eq. (27) coefficients, so they contribute exactly ``+0.0``
+to every ordered reduction — real-client trajectories are bit-identical
+to the unpadded solve.
 
 Precision contract (documented in ``src/repro/core/README.md``): the
 closed forms (shared with the reference via ``repro.core.alloc_common``)
@@ -33,7 +55,7 @@ structure at reduced precision.
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple, Sequence
+from typing import NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -61,6 +83,17 @@ class JaxAllocationProblem(NamedTuple):
     noise_psd_w: jax.Array       # (...,)  N0 (W/Hz)
     latency_s: jax.Array         # (...,)  tau
     alpha_max: jax.Array         # (...,)  cap on the sign power share
+    mask: Optional[jax.Array] = None  # (..., K) 1.0 real / 0.0 zero-pad
+    #   (ragged-K batching; None — the common case — vanishes from the
+    #   pytree, keeping unpadded problems bit- and cache-compatible)
+
+
+# exit reasons reported by ``solve_traceable`` (JaxAllocation.exit_reason,
+# threaded into RoundTelemetry.alloc_exit_reason by the training loops)
+EXIT_CONVERGED = 0   # relative-objective criterion fired before the cap
+EXIT_ITER_CAP = 1    # burned the full max_iters budget without converging
+EXIT_NONFINITE = 2   # iterate went non-finite; froze on the last good point
+EXIT_UNIFORM_FALLBACK = 3  # solver lost to the uniform default (safeguard)
 
 
 class JaxAllocation(NamedTuple):
@@ -72,6 +105,7 @@ class JaxAllocation(NamedTuple):
     iters: jax.Array             # (...,)  outer iterations actually used
     objectives: jax.Array        # (..., max_iters) per-outer-iter objective
                                  # trajectory (NaN beyond ``iters``)
+    exit_reason: jax.Array       # (...,)  int32 EXIT_* code
 
 
 class _Caps(NamedTuple):
@@ -122,28 +156,57 @@ def problem_from_stats(g2, gb2, v, d2, gains, p_w, dim: int,
         cast(fl.alpha_max))
 
 
-def from_reference(prob: AllocationProblem,
-                   dtype=None) -> JaxAllocationProblem:
-    """Convert the NumPy reference problem into the pytree form."""
+def from_reference(prob: AllocationProblem, dtype=None,
+                   pad_to: Optional[int] = None) -> JaxAllocationProblem:
+    """Convert the NumPy reference problem into the pytree form.
+
+    ``pad_to`` widens the client axis to that many entries by appending
+    zero-coefficient pads (A=B=C=D=0, gains=p_w=1) and sets ``mask``.
+    The pads contribute exactly ``+0.0`` to every masked ordered sum, so
+    the real clients' solve is bit-identical to the unpadded problem.
+    """
     dtype = dtype or _default_dtype()
+    k = prob.n
+    n_pad = 0 if pad_to is None else pad_to - k
+    if n_pad < 0:
+        raise ValueError(f'pad_to={pad_to} < K={k}')
 
     def cast(x):
         return jnp.asarray(np.asarray(x), dtype)
 
+    def padded(x, fill):
+        x = cast(x)
+        if n_pad:
+            x = jnp.concatenate([x, jnp.full((n_pad,), fill, dtype)])
+        return x
+
     fl = prob.fl
+    mask = None
+    if pad_to is not None:
+        mask = jnp.concatenate([jnp.ones((k,), dtype),
+                                jnp.zeros((n_pad,), dtype)])
     return JaxAllocationProblem(
-        cast(prob.coef.A), cast(prob.coef.B), cast(prob.coef.C),
-        cast(prob.coef.D), cast(prob.gains), cast(prob.p_w),
+        padded(prob.coef.A, 0.0), padded(prob.coef.B, 0.0),
+        padded(prob.coef.C, 0.0), padded(prob.coef.D, 0.0),
+        padded(prob.gains, 1.0), padded(prob.p_w, 1.0),
         cast(prob.sign_bits), cast(prob.mod_bits),
         cast(fl.bandwidth_hz), cast(fl.noise_psd_w), cast(fl.latency_s),
-        cast(fl.alpha_max))
+        cast(fl.alpha_max), mask)
 
 
 def stack_problems(probs: Sequence[AllocationProblem],
                    dtype=None) -> JaxAllocationProblem:
     """Stack reference problems into one batched pytree (every leaf gains
-    a leading batch axis, so ``solve_batched`` maps ``in_axes=0``)."""
-    js = [from_reference(p, dtype) for p in probs]
+    a leading batch axis, so ``solve_batched`` maps ``in_axes=0``).
+
+    Heterogeneous cohort sizes are allowed: every problem is zero-padded
+    to the widest K (see ``from_reference(pad_to=...)``) and the stacked
+    pytree carries a per-element ``mask`` — one ``solve_batched``
+    dispatch then covers a ragged K sweep.  Homogeneous stacks keep
+    ``mask=None`` (bit- and jit-cache-compatible with the old form)."""
+    ks = {p.n for p in probs}
+    pad_to = max(ks) if len(ks) > 1 else None
+    js = [from_reference(p, dtype, pad_to=pad_to) for p in probs]
     return jax.tree.map(lambda *xs: jnp.stack(xs), *js)
 
 
@@ -181,6 +244,41 @@ def _ordered_sum(x):
     return acc
 
 
+def _msum(prob, x):
+    """Client-axis ordered sum that ignores zero-pads.  With no mask the
+    add chain is untouched; with one, pads multiply to exactly +0.0, so
+    the real clients' partial sums keep their unpadded bit patterns."""
+    return _ordered_sum(x if prob.mask is None else x * prob.mask)
+
+
+def _bounded_fori(n, body, init, stop, early_exit):
+    """``lax.fori_loop(0, n, body, init)`` with a convergence exit.
+
+    ``stop(carry) -> bool[]`` reads the loop's own ``done`` flag; when
+    ``early_exit`` the loop lowers to a bounded-trip ``lax.while_loop``
+    (predicate ``i < n  &  ~stop``) that leaves at the iteration the
+    flag fires.  Because every fixed-trip body freezes its carry once
+    ``done`` is set, the two lowerings return bit-identical carries.
+    Under vmap the batched ``while_loop`` keeps stepping until every
+    element stops, select-freezing finished elements' carries — the
+    masked all-converged predicate, for free.  The hard ``i < n`` bound
+    keeps the loop compilable inside ``lax.scan`` (the fused f32
+    in-round path).
+    """
+    if not early_exit:
+        return lax.fori_loop(0, n, body, init)
+
+    def cond(ic):
+        i, carry = ic
+        return (i < n) & ~stop(carry)
+
+    def wbody(ic):
+        i, carry = ic
+        return i + 1, body(i, carry)
+
+    return lax.while_loop(cond, wbody, (jnp.int32(0), init))[1]
+
+
 def _cs(prob):
     return (prob.A, prob.B, prob.C, prob.D)
 
@@ -210,9 +308,10 @@ def _h_v_prime(prob, caps, beta):
 
 
 def _objective(prob, caps, alpha, beta):
-    return _ordered_sum(AC.g_value(jnp, _cs(prob), alpha, _h_s(prob, caps, beta),
-                              _h_v(prob, caps, beta),
-                              exp_cap=caps.exp_cap))
+    return _msum(prob, AC.g_value(jnp, _cs(prob), alpha,
+                                  _h_s(prob, caps, beta),
+                                  _h_v(prob, caps, beta),
+                                  exp_cap=caps.exp_cap))
 
 
 def success_probs(prob: JaxAllocationProblem, alpha, beta):
@@ -307,8 +406,15 @@ def _surrogate(prob, caps, alpha, beta0):
     return surrogate
 
 
-def _golden_vec(f, shape, dtype, iters: int = 48):
-    """Fixed-trip golden section on [BETA_MIN, BETA_MAX], elementwise."""
+def _golden_vec(f, shape, dtype, iters: int = 48,
+                early_exit: bool = True, width_tol: float = 0.0):
+    """Golden section on [BETA_MIN, BETA_MAX], elementwise.
+
+    ``width_tol > 0`` stops once every element's bracket is narrower
+    than it (tolerance-bounded exit: the returned midpoint is within
+    ``width_tol/2`` of the fixed-trip one); ``width_tol=0`` runs the
+    full fixed-trip schedule bit-identically (the interval never
+    reaches exact zero width, so the predicate only trips the cap)."""
     gr = (np.sqrt(5.0) - 1.0) / 2.0
     lo = jnp.full(shape, AC.BETA_MIN, dtype)
     hi = jnp.full(shape, AC.BETA_MAX, dtype)
@@ -324,13 +430,18 @@ def _golden_vec(f, shape, dtype, iters: int = 48):
         d2 = lo + gr * (hi - lo)
         return lo, hi, c2, d2, f(c2), f(d2)
 
-    carry = lax.fori_loop(0, iters, body, (lo, hi, c, d, f(c), f(d)))
+    def stop(carry):
+        return jnp.max(carry[1] - carry[0]) <= width_tol
+
+    carry = _bounded_fori(iters, body, (lo, hi, c, d, f(c), f(d)),
+                          stop, early_exit and width_tol > 0.0)
     return 0.5 * (carry[0] + carry[1])
 
 
 def optimize_beta_sca(prob: JaxAllocationProblem, alpha, beta0,
                       sca_rounds: int = 8, tol: float = 1e-6,
-                      caps: _Caps = None):
+                      caps: _Caps = None, early_exit: bool = True,
+                      inner_tol: float = 0.0):
     caps = caps or _caps(prob.A.dtype)
     dtype = beta0.dtype
     shape = beta0.shape
@@ -341,33 +452,45 @@ def optimize_beta_sca(prob: JaxAllocationProblem, alpha, beta0,
 
         def beta_of_lambda(lam):
             return _golden_vec(lambda b: surrogate(b) + lam * b, shape,
-                               dtype)
+                               dtype, early_exit=early_exit,
+                               width_tol=inner_tol)
 
         b0 = beta_of_lambda(jnp.asarray(0.0, dtype))
 
         def dual(_):
             # grow the dual upper bracket (×10 from 1.0; 30 steps reach
-            # the reference's 1e30 stop) ...
-            def grow(_, hi):
-                need = (_ordered_sum(beta_of_lambda(hi)) > 1.0) & (hi < 1e30)
-                return jnp.where(need, hi * 10.0, hi)
+            # the reference's 1e30 stop); once `need` clears, further
+            # trips are frozen no-ops — the while form exits there
+            def grow(_, carry):
+                hi, cont = carry
+                need = (cont & (_msum(prob, beta_of_lambda(hi)) > 1.0)
+                        & (hi < 1e30))
+                return jnp.where(need, hi * 10.0, hi), need
 
-            hi = lax.fori_loop(0, 30, grow, jnp.asarray(1.0, dtype))
+            hi, _ = _bounded_fori(
+                30, grow, (jnp.asarray(1.0, dtype), jnp.asarray(True)),
+                lambda c: ~c[1], early_exit)
 
             # ... then 60 bisection steps on the sum constraint
+            # (``inner_tol`` stops once the dual bracket is relatively
+            # that narrow — the fixed-trip schedule reaches 2^-60)
             def bis(_, lh):
                 lo, hi = lh
                 mid = 0.5 * (lo + hi)
-                infeas = _ordered_sum(beta_of_lambda(mid)) > 1.0
+                infeas = _msum(prob, beta_of_lambda(mid)) > 1.0
                 return jnp.where(infeas, mid, lo), jnp.where(infeas, hi, mid)
 
-            _, hi = lax.fori_loop(0, 60, bis,
-                                  (jnp.asarray(0.0, dtype), hi))
-            b = beta_of_lambda(hi)
-            return b * jnp.minimum(1.0, 1.0 / jnp.maximum(_ordered_sum(b),
-                                                          1e-12))
+            def bis_stop(lh):
+                return (lh[1] - lh[0]) <= inner_tol * lh[1]
 
-        b = lax.cond(_ordered_sum(b0) > 1.0, dual, lambda _: b0, None)
+            _, hi = _bounded_fori(60, bis, (jnp.asarray(0.0, dtype), hi),
+                                  bis_stop,
+                                  early_exit and inner_tol > 0.0)
+            b = beta_of_lambda(hi)
+            return b * jnp.minimum(1.0, 1.0 / jnp.maximum(
+                _msum(prob, b), 1e-12))
+
+        b = lax.cond(_msum(prob, b0) > 1.0, dual, lambda _: b0, None)
         # MM guarantee: only accept descent on the true objective
         cur = _objective(prob, caps, alpha, b)
         accept = (cur <= prev) & ~done
@@ -377,8 +500,9 @@ def optimize_beta_sca(prob: JaxAllocationProblem, alpha, beta0,
         return beta2, prev2, done | conv
 
     prev0 = _objective(prob, caps, alpha, beta0)
-    beta, _, _ = lax.fori_loop(0, sca_rounds, sca_body,
-                               (beta0, prev0, jnp.asarray(False)))
+    beta, _, _ = _bounded_fori(sca_rounds, sca_body,
+                               (beta0, prev0, jnp.asarray(False)),
+                               lambda c: c[2], early_exit)
     return beta
 
 
@@ -389,11 +513,13 @@ def optimize_beta_sca(prob: JaxAllocationProblem, alpha, beta0,
 def optimize_beta_barrier(prob: JaxAllocationProblem, alpha, beta0,
                           mu0: float = 10.0, mu_growth: float = 10.0,
                           outer: int = 5, inner: int = 200,
-                          lr: float = 1e-3, caps: _Caps = None):
+                          lr: float = 1e-3, caps: _Caps = None,
+                          early_exit: bool = True,
+                          inner_tol: float = 0.0):
     caps = caps or _caps(prob.A.dtype)
     dtype = beta0.dtype
     beta = jnp.maximum(beta0, 1e-4)
-    s = _ordered_sum(beta)
+    s = _msum(prob, beta)
     beta = jnp.where(s >= 1.0, beta / s * 0.95, beta)
     ln10 = np.log(10.0)
     a = jnp.clip(alpha, caps.a_eps, 1.0 - caps.a_eps)
@@ -410,10 +536,12 @@ def optimize_beta_barrier(prob: JaxAllocationProblem, alpha, beta0,
 
         def inner_body(_, carry):
             beta, done = carry
-            slack = 1.0 - _ordered_sum(beta)
+            slack = 1.0 - _msum(prob, beta)
             grad = (gdbeta(beta)
                     - (1.0 / (mu * ln10))
                     * (1.0 / beta - 1.0 / (1.0 - beta) - 1.0 / slack))
+            if prob.mask is not None:
+                grad = grad * prob.mask   # pads hold their init point
             gn = jnp.sqrt(_ordered_sum(grad * grad))
             step = lr / (1.0 + gn)
 
@@ -422,7 +550,7 @@ def optimize_beta_barrier(prob: JaxAllocationProblem, alpha, beta0,
             def back(_, tc):
                 t, new = tc
                 infeas = (jnp.any(new <= 0) | jnp.any(new >= 1)
-                          | (_ordered_sum(new) >= 1.0))
+                          | (_msum(prob, new) >= 1.0))
                 cont = infeas & (t > 1e-8)
                 t2 = jnp.where(cont, 0.5 * t, t)
                 new2 = jnp.where(cont, beta - t2 * step * grad, new)
@@ -431,11 +559,19 @@ def optimize_beta_barrier(prob: JaxAllocationProblem, alpha, beta0,
             t, new = lax.fori_loop(0, 27, back, (jnp.asarray(1.0, dtype),
                                                  beta - step * grad))
             give_up = (gn < 1e-14) | (t <= 1e-8)
+            # displacement criterion for the ~28k-step descent: once the
+            # backtracked move falls below ``inner_tol`` the iterate has
+            # stalled at this mu — tolerance-bounded (the fixed-trip form
+            # keeps inching; bound documented in core/README.md).
+            # inner_tol=0 only stops on an exactly-fixed point, which is
+            # absorbing and therefore bit-identical.
+            stalled = jnp.max(jnp.abs(new - beta)) <= inner_tol
             beta2 = jnp.where(~done & ~give_up, new, beta)
-            return beta2, done | give_up
+            return beta2, done | give_up | stalled
 
-        beta, _ = lax.fori_loop(0, inner, inner_body,
-                                (beta, jnp.asarray(False)))
+        beta, _ = _bounded_fori(inner, inner_body,
+                                (beta, jnp.asarray(False)),
+                                lambda c: c[1], early_exit)
         return beta
 
     return lax.fori_loop(0, outer, outer_body, beta)
@@ -447,31 +583,50 @@ def optimize_beta_barrier(prob: JaxAllocationProblem, alpha, beta0,
 
 def solve_traceable(prob: JaxAllocationProblem, method: str = 'alternating',
                     max_iters: int = 6, tol: float = 1e-5,
-                    n_grid: int = 256,
-                    newton_iters: int = 40) -> JaxAllocation:
-    """The solver as a pure traceable function — embed in any jit/vmap."""
+                    n_grid: int = 256, newton_iters: int = 40,
+                    early_exit: bool = True,
+                    inner_tol: float = 0.0) -> JaxAllocation:
+    """The solver as a pure traceable function — embed in any jit/vmap.
+
+    ``early_exit`` lowers every convergence-flagged loop (the outer
+    alternating loop, the SCA rounds, the dual bracket growth, the
+    barrier descent) to a bounded-trip ``lax.while_loop`` that leaves
+    when its ``done`` flag fires — bit-identical to the fixed-trip
+    lowering, vmap-safe, scan-compilable.  ``inner_tol > 0``
+    additionally unlocks tolerance-bounded exits of the golden-section /
+    dual-bisection / barrier inner loops (see core/README.md for the
+    accuracy contract); 0 keeps those loops reference-faithful.
+    """
     caps = _caps(prob.A.dtype)
     dtype = prob.A.dtype
     k = prob.gains.shape[-1]
-    beta_u = jnp.full((k,), 1.0 / k, dtype)
+    if prob.mask is None:
+        beta_u = jnp.full((k,), 1.0 / k, dtype)
+    else:
+        beta_u = prob.mask / _ordered_sum(prob.mask)
     alpha_u = jnp.full((k,), 0.5, dtype)
     nan_objs = jnp.full((max_iters,), jnp.nan, dtype)
     if method == 'uniform':
         q, p = success_probs(prob, alpha_u, beta_u)
         return JaxAllocation(alpha_u, beta_u, q, p,
                              _objective(prob, caps, alpha_u, beta_u),
-                             jnp.int32(0), nan_objs)
+                             jnp.int32(0), nan_objs,
+                             jnp.int32(EXIT_CONVERGED))
 
     uniform_obj = _objective(prob, caps, alpha_u, beta_u)
     use_barrier = method == 'barrier'
 
     def body(i, carry):
-        alpha, beta, prev, done, iters, objs = carry
+        alpha, beta, prev, done, bad_seen, iters, objs = carry
         alpha_n = optimize_alpha(prob, beta, n_grid, newton_iters, caps)
         if use_barrier:
-            beta_n = optimize_beta_barrier(prob, alpha_n, beta, caps=caps)
+            beta_n = optimize_beta_barrier(prob, alpha_n, beta, caps=caps,
+                                           early_exit=early_exit,
+                                           inner_tol=inner_tol)
         else:
-            beta_n = optimize_beta_sca(prob, alpha_n, beta, caps=caps)
+            beta_n = optimize_beta_sca(prob, alpha_n, beta, caps=caps,
+                                       early_exit=early_exit,
+                                       inner_tol=inner_tol)
         obj = _objective(prob, caps, alpha_n, beta_n)
         # a non-finite iterate (f32 saturation) must not poison the
         # carry: freeze on the last good point instead of accepting it
@@ -483,12 +638,14 @@ def solve_traceable(prob: JaxAllocationProblem, method: str = 'alternating',
         prev2 = jnp.where(keep, prev, obj)
         iters2 = jnp.where(keep, iters, i + 1)
         objs2 = objs.at[i].set(jnp.where(keep, jnp.nan, obj))
-        return alpha2, beta2, prev2, done | conv | bad, iters2, objs2
+        return (alpha2, beta2, prev2, done | conv | bad,
+                bad_seen | (bad & ~done), iters2, objs2)
 
     init = (alpha_u, beta_u, jnp.asarray(jnp.inf, dtype),
-            jnp.asarray(False), jnp.int32(0), nan_objs)
-    alpha, beta, prev, _, iters, objs = lax.fori_loop(0, max_iters, body,
-                                                      init)
+            jnp.asarray(False), jnp.asarray(False), jnp.int32(0),
+            nan_objs)
+    alpha, beta, prev, done, bad_seen, iters, objs = _bounded_fori(
+        max_iters, body, init, lambda c: c[3], early_exit)
     # safeguard: never return anything worse than the uniform default.
     # Written NaN-proof (~(prev <= uniform)) so a non-finite objective
     # falls back to uniform instead of escaping the comparison
@@ -496,75 +653,93 @@ def solve_traceable(prob: JaxAllocationProblem, method: str = 'alternating',
     alpha = jnp.where(worse, alpha_u, alpha)
     beta = jnp.where(worse, beta_u, beta)
     prev = jnp.where(worse, uniform_obj, prev)
+    reason = jnp.where(
+        worse, jnp.int32(EXIT_UNIFORM_FALLBACK),
+        jnp.where(bad_seen, jnp.int32(EXIT_NONFINITE),
+                  jnp.where(done, jnp.int32(EXIT_CONVERGED),
+                            jnp.int32(EXIT_ITER_CAP))))
     q, p = success_probs(prob, alpha, beta)
-    return JaxAllocation(alpha, beta, q, p, prev, iters, objs)
+    return JaxAllocation(alpha, beta, q, p, prev, iters, objs, reason)
 
 
-_solve_jit = jax.jit(solve_traceable,
-                     static_argnames=('method', 'max_iters', 'tol',
-                                      'n_grid', 'newton_iters'))
+_STATIC = ('method', 'max_iters', 'tol', 'n_grid', 'newton_iters',
+           'early_exit', 'inner_tol')
+
+_solve_jit = jax.jit(solve_traceable, static_argnames=_STATIC)
 
 
-@functools.partial(jax.jit, static_argnames=('method', 'max_iters', 'tol',
-                                             'n_grid', 'newton_iters'))
+@functools.partial(jax.jit, static_argnames=_STATIC)
 def _solve_batched_jit(prob, method='alternating', max_iters=6, tol=1e-5,
-                       n_grid=256, newton_iters=40):
+                       n_grid=256, newton_iters=40, early_exit=True,
+                       inner_tol=0.0):
     return jax.vmap(lambda pr: solve_traceable(
-        pr, method, max_iters, tol, n_grid, newton_iters))(prob)
+        pr, method, max_iters, tol, n_grid, newton_iters, early_exit,
+        inner_tol))(prob)
 
 
 def solve_batched(prob: JaxAllocationProblem, method: str = 'alternating',
                   max_iters: int = 6, tol: float = 1e-5, n_grid: int = 256,
-                  newton_iters: int = 40) -> JaxAllocation:
+                  newton_iters: int = 40, early_exit: bool = True,
+                  inner_tol: float = 0.0) -> JaxAllocation:
     """One dispatch over a batch of problems.
 
     Every leaf of ``prob`` must carry a leading batch axis (see
     ``stack_problems`` / ``batch_over_gains``).  Runs under x64 so the
     batched solutions carry full f64 precision (and keep the jit cache
     keyed consistently — the wrapper re-enters the same trace context on
-    every call).
+    every call).  Early exit composes with the batch: the lowered
+    ``while_loop`` steps until every element converged, select-freezing
+    finished elements — still bit-identical to a loop of single solves.
     """
     with enable_x64():
         return _solve_batched_jit(prob, method, max_iters, tol, n_grid,
-                                  newton_iters)
+                                  newton_iters, early_exit, inner_tol)
 
 
 @functools.partial(jax.jit, static_argnames=('dim', 'fl', 'method',
-                                             'max_iters'))
+                                             'max_iters', 'tol',
+                                             'early_exit'))
 def _solve_stats_jit(g2, gb2, v, d2, gains, p_w, dim, fl, method,
-                     max_iters):
+                     max_iters, tol, early_exit):
     prob = problem_from_stats(g2, gb2, v, d2, gains, p_w, dim, fl,
                               dtype=jnp.float64)
-    return solve_traceable(prob, method, max_iters)
+    return solve_traceable(prob, method, max_iters, tol=tol,
+                           early_exit=early_exit)
 
 
 def solve_from_stats(g2, gb2, v, d2, gains, p_w, dim: int, fl: FLConfig,
-                     method: str = 'alternating',
-                     max_iters: int = 6) -> JaxAllocation:
+                     method: str = 'alternating', max_iters: int = 6,
+                     tol: float = 1e-5,
+                     early_exit: bool = True) -> JaxAllocation:
     """One jitted dispatch from the devices' scalar report to the round's
     allocation — the ``allocation_backend='jax'`` path of the training
     drivers (no host NumPy between the stats and (q, p))."""
     with enable_x64():
         return _solve_stats_jit(g2, gb2, v, d2, gains, p_w, dim, fl,
-                                method, max_iters)
+                                method, max_iters, tol, early_exit)
 
 
 def solve(prob, method: str = 'alternating', max_iters: int = 6,
-          tol: float = 1e-5) -> Allocation:
+          tol: float = 1e-5, early_exit: bool = True,
+          inner_tol: float = 0.0) -> Allocation:
     """Drop-in for ``allocation.solve``: accepts the NumPy reference
     problem (or a pre-built pytree), solves on-device under x64, returns
-    the host :class:`Allocation`."""
+    the host :class:`Allocation` with ``info['iters_used']`` /
+    ``info['exit_reason']`` reporting the solver effort."""
     with enable_x64():
         jp = from_reference(prob) if isinstance(prob, AllocationProblem) \
             else prob
-        sol = _solve_jit(jp, method=method, max_iters=max_iters, tol=tol)
+        sol = _solve_jit(jp, method=method, max_iters=max_iters, tol=tol,
+                         early_exit=early_exit, inner_tol=inner_tol)
         objs = np.asarray(sol.objectives)
+    iters_used = int(sol.iters)
     return Allocation(np.asarray(sol.alpha, np.float64),
                       np.asarray(sol.beta, np.float64),
                       np.asarray(sol.q, np.float64),
                       np.asarray(sol.p, np.float64),
                       float(sol.objective),
-                      {'iters': int(sol.iters), 'method': method,
-                       'backend': 'jax',
+                      {'iters': iters_used, 'iters_used': iters_used,
+                       'exit_reason': int(sol.exit_reason),
+                       'method': method, 'backend': 'jax',
                        'objectives': [float(o) for o in
                                       objs[~np.isnan(objs)]]})

@@ -38,6 +38,8 @@ def run(arch: str, steps: int, clients: int, batch: int, seq: int,
         collective: str = 'gather', allocation_backend: str = 'numpy',
         allocation_cadence: str = 'static',
         round_fusion: str = 'none',
+        allocation_tol: float = 0.0,
+        allocation_early_exit: bool = True,
         telemetry_path: Optional[str] = None) -> dict:
     cfg = get_arch(arch)
     if round_fusion != 'none' and allocation_backend != 'jax':
@@ -52,7 +54,9 @@ def run(arch: str, steps: int, clients: int, batch: int, seq: int,
                   wire=wire, collective=collective,
                   allocation_backend=allocation_backend,
                   allocation_cadence=allocation_cadence,
-                  round_fusion=round_fusion)
+                  round_fusion=round_fusion,
+                  allocation_tol=allocation_tol,
+                  allocation_early_exit=allocation_early_exit)
     key = jax.random.PRNGKey(seed)
     params = tf.init_params(cfg, key)
     dim = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
@@ -120,7 +124,9 @@ def run(arch: str, steps: int, clients: int, batch: int, seq: int,
                     # never runs the NumPy optimizer
                     jsol = alloc_jax.solve_from_stats(
                         g2, gb2, v, d2, gains_n, p_w, dim, fl, allocator,
-                        max_iters=fl.allocation_max_iters or 6)
+                        max_iters=fl.allocation_max_iters or 6,
+                        tol=fl.allocation_tol or 1e-5,
+                        early_exit=fl.allocation_early_exit)
                     q = jsol.q.astype(jnp.float32)
                     p = jsol.p.astype(jnp.float32)
                 else:
@@ -270,6 +276,16 @@ def main():
                          "sync between flushes; needs --allocation-"
                          "backend jax on spfl); 'eager' dispatches the "
                          "same fused body once per round")
+    ap.add_argument('--allocation-tol', type=float, default=0.0,
+                    help='relative-objective convergence tolerance of '
+                         'the eq. (28) outer loop (0 = engine default '
+                         '1e-5)')
+    ap.add_argument('--allocation-early-exit', default=True,
+                    action=argparse.BooleanOptionalAction,
+                    help='leave the jax solver loops as soon as the '
+                         'iterate converges (bit-identical to the '
+                         'fixed-trip schedule); --no-allocation-early-'
+                         'exit restores fixed-trip for benchmarking')
     ap.add_argument('--telemetry-out', default=None,
                     help='write per-step RoundTelemetry JSONL (+ run '
                          'manifest) to this path')
@@ -281,6 +297,8 @@ def main():
         allocation_backend=args.allocation_backend,
         allocation_cadence=args.allocation_cadence,
         round_fusion=args.round_fusion,
+        allocation_tol=args.allocation_tol,
+        allocation_early_exit=args.allocation_early_exit,
         telemetry_path=args.telemetry_out)
 
 

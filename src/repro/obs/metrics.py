@@ -187,6 +187,16 @@ class MetricsRegistry:
         if obj is not None:
             al.histogram('objective_hist').observe(obj)
             al.gauge('objective').set(obj)
+        # solver effort: iterations-to-converge histogram + exit-reason
+        # counters make the accuracy-vs-wall-time map reconstructible
+        # from the metrics snapshot alone (NaN = path didn't solve)
+        iters = row.get('alloc_iters')
+        if iters is not None and not math.isnan(iters):
+            al.gauge('alloc_iters').set(iters)
+            al.histogram('alloc_iters_hist').observe(iters)
+        reason = row.get('alloc_exit_reason')
+        if reason is not None and not math.isnan(reason):
+            al.counter(f'alloc_exit_reason_{int(reason)}').inc(1.0)
 
     def observe_alloc(self, *, host_solver_calls: Optional[int] = None,
                       outer_residual: Optional[float] = None) -> None:

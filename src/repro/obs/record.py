@@ -43,7 +43,8 @@ Array = jax.Array
 # scalar summary keys — MUST match the per-round FLHistory list names
 # (training.fl_loop appends one entry per key per round at flush)
 SCALAR_KEYS = ('payload_bits', 'retransmissions', 'sign_ok_frac',
-               'mod_ok_frac', 'q_mean', 'p_mean', 'sign_agreement')
+               'mod_ok_frac', 'q_mean', 'p_mean', 'sign_agreement',
+               'alloc_iters', 'alloc_exit_reason')
 # per-client (K,) vectors serialized into JSONL rows when present
 VECTOR_KEYS = ('sign_ok', 'mod_ok', 'accepted', 'sign_flips', 'mod_flips',
                'sign_crc_ok', 'mod_crc_ok', 'retx_attempts', 'q', 'p')
@@ -76,11 +77,18 @@ class RoundTelemetry(NamedTuple):
     round_idx: Optional[Array] = None     # scalar uint32 — round number
     agreement: Optional[Array] = None     # scalar — precomputed sign-vote
     #   agreement (see :meth:`condensed`); supersedes ``sign_votes`` when set
+    alloc_iters: Optional[Array] = None   # scalar int32 — solver outer
+    #   iterations to converge this round (early-exit effort telemetry)
+    alloc_exit_reason: Optional[Array] = None  # scalar int32 — the
+    #   solver's EXIT_* code (core.allocation_jax: 0 converged,
+    #   1 iteration cap, 2 non-finite iterate, 3 uniform fallback)
 
     # ------------------------------------------------------------------
     def with_allocation(self, q: Array, p: Array,
                         objective: Optional[Array] = None,
-                        round_idx: Optional[Array] = None
+                        round_idx: Optional[Array] = None,
+                        iters: Optional[Array] = None,
+                        exit_reason: Optional[Array] = None
                         ) -> 'RoundTelemetry':
         """Attach the round's allocation state (device arrays, no host
         transfer — pure ``_replace``)."""
@@ -89,6 +97,10 @@ class RoundTelemetry(NamedTuple):
             kw['alloc_objective'] = objective
         if round_idx is not None:
             kw['round_idx'] = round_idx
+        if iters is not None:
+            kw['alloc_iters'] = iters
+        if exit_reason is not None:
+            kw['alloc_exit_reason'] = exit_reason
         return self._replace(**kw)
 
     def condensed(self) -> 'RoundTelemetry':
@@ -136,6 +148,10 @@ def round_scalars(t: RoundTelemetry) -> Dict[str, Array]:
         'sign_agreement': (jnp.asarray(t.agreement, jnp.float32)
                            if t.agreement is not None
                            else sign_agreement(t.sign_votes, t.sign_ok)),
+        'alloc_iters': nan if t.alloc_iters is None else jnp.asarray(
+            t.alloc_iters, jnp.float32),
+        'alloc_exit_reason': nan if t.alloc_exit_reason is None
+        else jnp.asarray(t.alloc_exit_reason, jnp.float32),
     }
 
 
@@ -177,6 +193,10 @@ def to_row(t: RoundTelemetry, round_idx: Optional[int] = None
         'p_mean': math.nan if t.p is None else float(
             np.asarray(t.p, np.float32).mean()),
         'sign_agreement': agreement,
+        'alloc_iters': math.nan if t.alloc_iters is None
+        else _np_scalar(t.alloc_iters),
+        'alloc_exit_reason': math.nan if t.alloc_exit_reason is None
+        else _np_scalar(t.alloc_exit_reason),
         'alloc_objective': None if t.alloc_objective is None
         else _np_scalar(t.alloc_objective),
     }

@@ -169,6 +169,8 @@ def make_fused_fl_round(cfg: ModelConfig, fl: FLConfig,
     p_w = jnp.full((K,), fl.tx_power_w, jnp.float32)
     method = fl.allocator
     max_iters = fl.allocation_max_iters or 6
+    alloc_tol = fl.allocation_tol or 1e-5
+    early_exit = fl.allocation_early_exit
 
     def alloc_f32(grads, gbar, stats, gains):
         """In-trace tree-stats eq. (28): exact per-client g2/v, shared
@@ -188,12 +190,14 @@ def make_fused_fl_round(cfg: ModelConfig, fl: FLConfig,
 
         def solved(_):
             s = alloc_jax.solve_traceable(prob, method,
-                                          max_iters=max_iters)
-            return s.q, s.p, s.objective
+                                          max_iters=max_iters,
+                                          tol=alloc_tol,
+                                          early_exit=early_exit)
+            return s.q, s.p, s.objective, s.iters, s.exit_reason
 
         def uniform(_):
             s = alloc_jax.solve_traceable(prob, 'uniform')
-            return s.q, s.p, s.objective
+            return s.q, s.p, s.objective, s.iters, s.exit_reason
 
         if method == 'uniform':
             return uniform(None)
@@ -212,9 +216,9 @@ def make_fused_fl_round(cfg: ModelConfig, fl: FLConfig,
         losses, grads = jax.vmap(one)(batch)
 
         stats = tr.tree_client_stats(grads)
-        obj = None
+        obj = iters = reason = None
         if transport_kind == 'spfl':
-            q, p, obj = alloc_f32(grads, gbar, stats, gains)
+            q, p, obj, iters, reason = alloc_f32(grads, gbar, stats, gains)
             ghat, _, diag = tr.spfl_aggregate_tree(
                 grads, gbar, q, p, fl, key, stats=stats, wire=fl.wire,
                 channel=fl.channel, mesh=mesh, round_idx=round_idx)
@@ -228,7 +232,8 @@ def make_fused_fl_round(cfg: ModelConfig, fl: FLConfig,
         new_params, new_opt = opt.update(ghat, opt_state, params)
         new_gbar = jax.tree.map(lambda g: jnp.abs(g), ghat)
         rec = diag.with_allocation(q, p, objective=obj,
-                                   round_idx=round_idx).condensed()
+                                   round_idx=round_idx, iters=iters,
+                                   exit_reason=reason).condensed()
         return new_params, new_opt, new_gbar, rec, jnp.mean(losses)
 
     return round_fn

@@ -82,6 +82,9 @@ class FLHistory:
     q_mean: List[float] = field(default_factory=list)         # mean sign succ
     p_mean: List[float] = field(default_factory=list)         # mean mod succ
     sign_agreement: List[float] = field(default_factory=list)  # packed wire
+    alloc_iters: List[float] = field(default_factory=list)     # solver outer
+    # iterations to converge (NaN on rounds/paths without a solve)
+    alloc_exit_reason: List[float] = field(default_factory=list)  # EXIT_*
     retransmissions: List[float] = field(default_factory=list)
     # host wall-time of step 4.  On allocation_backend='numpy' this is
     # the full eq. (28) solve; on 'jax' the solve is an async device
@@ -197,6 +200,8 @@ class FLSimulator:
             dim = self.dim
             method = fl.allocator
             max_iters = fl.allocation_max_iters or 6
+            alloc_tol = fl.allocation_tol or 1e-5
+            early_exit = fl.allocation_early_exit
 
             def alloc_on_device(grads, gbar, gains, p_w):
                 """Steps 3–4 fully on-device: stats -> eq. (28) -> (q, p)."""
@@ -217,23 +222,27 @@ class FLSimulator:
 
                 def solved(_):
                     s = alloc_jax.solve_traceable(prob, method,
-                                                  max_iters=max_iters)
-                    return s.alpha, s.beta, s.q, s.p, s.objective
+                                                  max_iters=max_iters,
+                                                  tol=alloc_tol,
+                                                  early_exit=early_exit)
+                    return (s.alpha, s.beta, s.q, s.p, s.objective,
+                            s.iters, s.exit_reason)
 
                 def uniform(_):
                     s = alloc_jax.solve_traceable(prob, 'uniform')
-                    return s.alpha, s.beta, s.q, s.p, s.objective
+                    return (s.alpha, s.beta, s.q, s.p, s.objective,
+                            s.iters, s.exit_reason)
 
                 if method == 'uniform':
-                    alpha, beta, q, p, obj = uniform(None)
+                    alpha, beta, q, p, obj, iters, reason = uniform(None)
                 else:
                     # no compensation history yet (round 0): optimizing
                     # against gbar=0 degenerates to alpha=1 / ghat=0
-                    alpha, beta, q, p, obj = jax.lax.cond(
+                    alpha, beta, q, p, obj, iters, reason = jax.lax.cond(
                         jnp.max(gb2) > 0.0, solved, uniform, None)
                 return (q.astype(jnp.float32), p.astype(jnp.float32),
                         alpha.astype(jnp.float32),
-                        beta.astype(jnp.float32), obj)
+                        beta.astype(jnp.float32), obj, iters, reason)
 
             # traced (and always re-entered) under x64: the closed forms
             # overflow f32 — see allocation_jax's precision contract
@@ -300,6 +309,8 @@ class FLSimulator:
         p_w_j = jnp.asarray(self.p_w, jnp.float32)
         method = fl.allocator
         max_iters = fl.allocation_max_iters or 6
+        alloc_tol = fl.allocation_tol or 1e-5
+        early_exit = fl.allocation_early_exit
         per_round_gains = fl.allocation_cadence == 'per_round'
         allocating = kind in ('spfl', 'spfl_retx')
 
@@ -321,12 +332,14 @@ class FLSimulator:
 
             def solved(_):
                 s = alloc_jax.solve_traceable(prob, method,
-                                              max_iters=max_iters)
-                return s.q, s.p, s.objective
+                                              max_iters=max_iters,
+                                              tol=alloc_tol,
+                                              early_exit=early_exit)
+                return s.q, s.p, s.objective, s.iters, s.exit_reason
 
             def uniform(_):
                 s = alloc_jax.solve_traceable(prob, 'uniform')
-                return s.q, s.p, s.objective
+                return s.q, s.p, s.objective, s.iters, s.exit_reason
 
             if method == 'uniform':
                 return uniform(None)
@@ -346,9 +359,9 @@ class FLSimulator:
                 z2 = z
                 gains_n = gains_j
 
-            obj = None
+            obj = iters = reason = None
             if allocating:
-                q, p, obj = alloc_f32(grads, gbar, gains_n)
+                q, p, obj, iters, reason = alloc_f32(grads, gbar, gains_n)
             else:
                 q = jnp.ones(self.K)
                 p = jnp.ones(self.K)
@@ -369,8 +382,9 @@ class FLSimulator:
             else:                    # zeros: leave as-is
                 gbar2 = gbar
 
-            rec = diag.with_allocation(q, p, objective=obj,
-                                       round_idx=n).condensed()
+            rec = diag.with_allocation(q, p, objective=obj, round_idx=n,
+                                       iters=iters,
+                                       exit_reason=reason).condensed()
             return new_params, gbar2, z2, rec, jnp.mean(losses)
 
         return round_core
@@ -482,6 +496,8 @@ class FLSimulator:
                 hist.mod_ok_frac.append(row['mod_ok_frac'])
                 if packed_agreement:
                     hist.sign_agreement.append(row['sign_agreement'])
+                hist.alloc_iters.append(row['alloc_iters'])
+                hist.alloc_exit_reason.append(row['alloc_exit_reason'])
                 hist.retransmissions.append(row['retransmissions'])
                 self.metrics.observe_round(row)
                 if sink is not None:
@@ -562,6 +578,8 @@ class FLSimulator:
                     # (K > 32 exceeds the vote word) — so the list stays
                     # aligned with the other per-round histories
                     hist.sign_agreement.append(row['sign_agreement'])
+                hist.alloc_iters.append(row['alloc_iters'])
+                hist.alloc_exit_reason.append(row['alloc_exit_reason'])
                 hist.retransmissions.append(row['retransmissions'])
                 self.metrics.observe_round(row)
                 if sink is not None:
@@ -574,7 +592,7 @@ class FLSimulator:
                 self.params, self.client_x, self.client_y)
 
             ta = time.time()
-            alloc_obj = None
+            alloc_obj = alloc_iters = alloc_reason = None
             with self.trace.span('alloc_solve'):
                 if kind in ('spfl', 'spfl_retx'):
                     gains_n = gains_j if traj is None else traj[n]
@@ -582,7 +600,8 @@ class FLSimulator:
                         # one on-device dispatch, no host round-trip (the
                         # x64 re-entry keeps the jit cache key stable)
                         with enable_x64():
-                            q, p, _, _, alloc_obj = self._alloc_jax(
+                            (q, p, _, _, alloc_obj, alloc_iters,
+                             alloc_reason) = self._alloc_jax(
                                 grads, self.gbar, gains_n, p_w_j)
                         sol, stats = None, None
                     else:
@@ -593,6 +612,10 @@ class FLSimulator:
                             else np.asarray(gains_n, np.float64))
                         q, p = jnp.asarray(sol.q), jnp.asarray(sol.p)
                         alloc_obj = sol.objective
+                        alloc_iters = jnp.int32(
+                            sol.info.get('iters_used', 0))
+                        alloc_reason = jnp.int32(
+                            sol.info.get('exit_reason', 0))
                         objs = sol.info.get('objectives', [])
                         if len(objs) >= 2:
                             self.metrics.observe_alloc(
@@ -636,7 +659,8 @@ class FLSimulator:
             # plus one jitted dynamic-update; no host transfer here
             rec = diag.with_allocation(
                 q, p, objective=alloc_obj,
-                round_idx=jnp.uint32(self._round - 1)).condensed()
+                round_idx=jnp.uint32(self._round - 1),
+                iters=alloc_iters, exit_reason=alloc_reason).condensed()
             if ring is None:
                 ring = obs_ring.ring_init(rec, flush_every)
             ring = obs_ring.push(ring, rec)

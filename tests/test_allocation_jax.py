@@ -285,3 +285,128 @@ def test_property_engines_agree(seed, power):
     prob = _problem(k=6, power_dbm=power, seed=seed)
     _assert_parity(AL.solve(prob, 'barrier'), AJ.solve(prob, 'barrier'),
                    'barrier')
+
+
+# ---------------------------------------------------------------------------
+# convergence-aware early exit (ISSUE 8)
+# ---------------------------------------------------------------------------
+#
+# The early-exit lowering replaces the fixed-trip fori loops with
+# bounded-trip while loops whose predicates are the done flags the
+# fixed-trip bodies already used to freeze their carries — leaving the
+# loop where the flag fires consumes the same final carry, so the
+# default (inner_tol=0) early-exit solve is BIT-identical to the
+# fixed-trip one, not merely within the parity tolerance.  inner_tol>0
+# unlocks the tolerance-bounded inner exits (golden width / dual
+# bisection / barrier displacement) and is bounded by the documented
+# contract instead.
+
+def _bits_equal(a: AL.Allocation, b: AL.Allocation):
+    for f in ('alpha', 'beta', 'q', 'p'):
+        assert np.array_equal(getattr(a, f), getattr(b, f)), f
+    assert a.objective == b.objective
+
+
+@pytest.mark.parametrize('method', ['alternating', 'barrier'])
+@pytest.mark.parametrize('k', [4, 8, 32])
+@pytest.mark.parametrize('power', [-6.0, -24.0])
+def test_early_exit_bit_matches_fixed_trip_grid(method, k, power):
+    prob = _problem(k=k, power_dbm=power, seed=k + 2)
+    ee = AJ.solve(prob, method, max_iters=3, early_exit=True)
+    ft = AJ.solve(prob, method, max_iters=3, early_exit=False)
+    _bits_equal(ee, ft)
+    assert ee.info['iters_used'] == ft.info['iters_used']
+    assert ee.info['exit_reason'] == ft.info['exit_reason']
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 500), power=st.floats(-35.0, -2.0),
+       k=st.sampled_from([4, 6]))
+def test_property_early_exit_bit_matches_fixed_trip(seed, power, k):
+    prob = _problem(k=k, power_dbm=power, seed=seed)
+    _bits_equal(AJ.solve(prob, 'alternating', max_iters=3,
+                         early_exit=True),
+                AJ.solve(prob, 'alternating', max_iters=3,
+                         early_exit=False))
+
+
+@pytest.mark.parametrize('method', ['alternating', 'barrier'])
+def test_vmap_batch_early_exit_bit_matches_single_solves(method):
+    """Batched early exit composes with vmap: the lowered while_loop
+    steps until every element's predicate clears, select-freezing the
+    finished ones — still bit-identical to single early-exit solves."""
+    probs = [_problem(k=6, power_dbm=p, seed=s)
+             for s, p in enumerate([-4.0, -16.0, -28.0, -8.0])]
+    with enable_x64():
+        batched = AJ.stack_problems(probs)
+    sol = AJ.solve_batched(batched, method, max_iters=3, early_exit=True)
+    for i, prob in enumerate(probs):
+        with enable_x64():
+            one = AJ._solve_jit(AJ.from_reference(prob), method=method,
+                                max_iters=3, early_exit=True)
+        for f in ('alpha', 'beta', 'q', 'p', 'objective', 'iters',
+                  'exit_reason'):
+            a = np.asarray(getattr(sol, f)[i])
+            b = np.asarray(getattr(one, f))
+            assert np.array_equal(a, b), (method, i, f)
+
+
+@pytest.mark.parametrize('method', ['alternating', 'barrier'])
+def test_ragged_stack_padded_solve_matches_unpadded(method):
+    """Heterogeneous cohort sizes in one dispatch: zero-coefficient pads
+    contribute exactly +0.0 to every masked ordered sum, so the real
+    clients' solution is bit-identical to the unpadded single solve."""
+    probs = [_problem(k=4, power_dbm=-10.0, seed=21),
+             _problem(k=8, power_dbm=-22.0, seed=22)]
+    with enable_x64():
+        batched = AJ.stack_problems(probs)
+    assert batched.mask is not None and batched.A.shape == (2, 8)
+    np.testing.assert_array_equal(
+        np.asarray(batched.mask),
+        [[1, 1, 1, 1, 0, 0, 0, 0], [1] * 8])
+    sol = AJ.solve_batched(batched, method, max_iters=3)
+    for i, prob in enumerate(probs):
+        k = prob.n
+        one = AJ.solve(prob, method, max_iters=3)
+        for f in ('alpha', 'beta', 'q', 'p'):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(sol, f)[i][:k]), getattr(one, f),
+                err_msg=(method, i, f))
+        assert float(sol.objective[i]) == one.objective, (method, i)
+
+
+def test_exit_reason_and_iters_semantics():
+    prob = _problem(k=6, power_dbm=-18.0, seed=31)
+    # uniform never iterates and always "converges"
+    u = AJ.solve(prob, 'uniform')
+    assert u.info['iters_used'] == 0
+    assert u.info['exit_reason'] == AJ.EXIT_CONVERGED
+    # a generous budget converges before the cap
+    sol = AJ.solve(prob, 'alternating', max_iters=8)
+    assert 0 < sol.info['iters_used'] < 8
+    assert sol.info['exit_reason'] == AJ.EXIT_CONVERGED
+    # a 1-iteration budget cannot satisfy |prev - obj| with prev = inf
+    capped = AJ.solve(prob, 'alternating', max_iters=1)
+    assert capped.info['iters_used'] == 1
+    assert capped.info['exit_reason'] in (AJ.EXIT_ITER_CAP,
+                                          AJ.EXIT_UNIFORM_FALLBACK)
+    # the NumPy reference mirrors the schema (same EXIT_* codes)
+    ref = AL.solve(prob, 'alternating', max_iters=8)
+    assert ref.info['iters_used'] == sol.info['iters_used']
+    assert ref.info['exit_reason'] == AJ.EXIT_CONVERGED
+
+
+@pytest.mark.parametrize('method', ['alternating', 'barrier'])
+def test_inner_tol_frontier_within_contract(method):
+    """inner_tol > 0 unlocks the tolerance-bounded inner exits (golden
+    width / dual bisection / barrier displacement); the endpoint drift
+    is bounded by the documented parity contract for the method."""
+    tol = TOL[method]
+    for k, power, seed in [(4, -8.0, 41), (8, -26.0, 42)]:
+        prob = _problem(k=k, power_dbm=power, seed=seed)
+        exact = AJ.solve(prob, method, max_iters=3, inner_tol=0.0)
+        fast = AJ.solve(prob, method, max_iters=3, inner_tol=1e-6)
+        assert fast.objective == pytest.approx(
+            exact.objective, rel=tol['obj_rtol'], abs=1e-12)
+        np.testing.assert_allclose(fast.q, exact.q, atol=tol['qp_atol'])
+        np.testing.assert_allclose(fast.p, exact.p, atol=tol['qp_atol'])
