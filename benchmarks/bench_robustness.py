@@ -1,0 +1,45 @@
+"""ISSUE 9 — accuracy under byzantine cohorts, with and without the
+packed-domain screen, plus the screen's wall-clock overhead.
+
+Grid: attack in {none, signflip, scaled, labelflip} x screen {off, on}
+at the constrained power point (the regime where SP-FL's sign priority
+matters and a poisoned sign packet hurts most).  Derived: final test
+accuracy per cell, and for the benign pair the screening overhead as a
+fraction of round wall-clock — the acceptance bar is < 5% (asserted
+outside BENCH_SMOKE; the benign screened round is bit-exact vs
+unscreened, so the overhead is pure vote/z-score arithmetic).
+"""
+from __future__ import annotations
+
+from common import SMOKE, emit, final_acc, run_fl
+
+ATTACKS = ('none', 'signflip', 'scaled', 'labelflip')
+POWER = -37.0
+ATTACK_FRAC = 0.25
+
+
+def main() -> None:
+    us = {}
+    for attack in ATTACKS:
+        for screen in (False, True):
+            tag = 'on' if screen else 'off'
+            name = f'robust_{attack}_screen_{tag}'
+            h, row = run_fl(name, transport='spfl', wire='packed',
+                            tx_power_dbm=POWER, dirichlet_alpha=0.1,
+                            attack=attack, attack_frac=ATTACK_FRAC,
+                            screen=screen)
+            us[(attack, screen)] = row['us_per_call']
+            emit(row['name'], row['us_per_call'],
+                 f'final_acc={final_acc(h):.4f}')
+    # screening overhead on the benign round (same config + gate math)
+    overhead = (us[('none', True)] - us[('none', False)]) / us[
+        ('none', False)]
+    emit('robust_screen_overhead', us[('none', True)],
+         f'overhead_frac={overhead:.4f}')
+    if not SMOKE:
+        assert overhead < 0.05, (
+            f'screening overhead {overhead:.1%} exceeds the 5% budget')
+
+
+if __name__ == '__main__':
+    main()

@@ -46,6 +46,7 @@ SUITES = [
     ('bitchannel', 'bench_bitchannel'),      # CRC-driven erasures + retx
     ('distributed', 'bench_distributed'),    # sharded packed collective
     ('roofline', 'roofline'),                # deliverable (g)
+    ('robustness', 'bench_robustness'),      # byzantine + screening
 ]
 
 _ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), '..'))

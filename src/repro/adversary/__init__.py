@@ -1,0 +1,23 @@
+"""Fault injection + screening for the FL round — byzantine clients,
+stragglers/dropouts, and the packed-domain defense that gates them out.
+
+* ``clients`` — attacker transforms (sign-flip, scaled-update,
+  label-flip) expressed on the packed payload words / quantizer state,
+  plus the seeded Gilbert straggler process whose (K,) state rides the
+  fused-scan carry like the AR(1) channel shadowing state.
+* ``screen`` — per-client suspicion from sign-vote disagreement
+  (repro.wire.vote, no unpack) and robust z-scores on the packet-header
+  range scalars, turned into a multiplicative gate on the decode-once
+  kernel's existing weight vector (zero-weight rows are bit-exact
+  no-ops, so screening = weighting).
+
+Everything is a pure per-client transform keyed by ``jax.random.fold_in``
+from the run seed — scan vs eager rounds stay bit-identical, and no
+``np.random`` global state is ever touched.
+"""
+from repro.adversary.clients import (  # noqa: F401
+    ATTACK_KINDS, BYZ_FOLD, STRAGGLER_FOLD, bernoulli_active,
+    byzantine_mask, flip_labels, flip_signs, scale_ranges,
+    signflip_frames, straggler_init, straggler_probs, straggler_step,
+)
+from repro.adversary.screen import robust_z, screen_gate  # noqa: F401

@@ -1,0 +1,153 @@
+"""Adversarial client models + straggler/dropout process.
+
+Attacks are *pure per-client transforms* applied at the point the lie
+is told on the real wire:
+
+* ``signflip`` — the byzantine client transmits the bitwise complement
+  of its sign payload.  On the packed wire this is an XOR of the framed
+  sign buffer's payload words with a tail-masked all-ones pattern plus
+  an O(1) CRC patch (the xor-fold checksum is linear, so the attacker's
+  frame still verifies — the PS cannot reject it as damage; see
+  wire.format.restamp_word for the same identity used honestly).  On
+  the analytic wire it negates the quantized sign matrix.
+* ``scaled`` — the client reports ``attack_scale``-inflated
+  ``(g_min, g_max)`` range scalars in its modulus packet header *after*
+  quantizing honestly: dequantization is affine in the range, so the
+  decoded contribution is exactly ``scale *`` the honest modulus.
+* ``labelflip`` — data poisoning at setup time: the byzantine rows
+  train on ``n_classes - 1 - y``.  A transform on the client dataset,
+  not the wire; at transport level it is indistinguishable from an
+  honest client with bad data (which is the point).
+
+The byzantine set and the straggler process are seeded with
+``jax.random.fold_in`` from the run seed — never ``np.random`` global
+state — so the fused-scan and eager rounds draw bit-identical faults.
+The straggler state is a (K,) bool Gilbert chain (sticky two-state
+Markov) designed to ride a ``lax.scan`` carry next to the AR(1) channel
+shadowing state.
+"""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantize import QuantizedGradient
+from repro.wire import format as wire_fmt
+
+Array = jax.Array
+
+ATTACK_KINDS = ('none', 'signflip', 'scaled', 'labelflip')
+
+# fold_in constants for the adversary's PRNG streams — disjoint from the
+# channel shadowing (0x5AD0 / 0x0FAD) and transmission streams so adding
+# an attacker never perturbs existing honest draws
+BYZ_FOLD = 0xB12A          # byzantine membership (once per run)
+STRAGGLER_FOLD = 0xD801    # per-round straggler transition draw
+
+
+def byzantine_mask(seed: int, k: int, frac: float) -> Array:
+    """(K,) bool — floor(frac * k) byzantine clients, chosen once per
+    run by a seeded permutation (deterministic in (seed, k, frac))."""
+    m = int(math.floor(float(frac) * k))
+    if m <= 0:
+        return jnp.zeros((k,), bool)
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), BYZ_FOLD)
+    perm = jax.random.permutation(key, k)
+    return jnp.zeros((k,), bool).at[perm[:m]].set(True)
+
+
+# ---------------------------------------------------------------------------
+# attacks
+# ---------------------------------------------------------------------------
+
+def signflip_frames(sign_words: Array, mask: Array, n: int) -> Array:
+    """Packed-domain sign flip on FRAMED sign buffers (K, Ws).
+
+    XORs the payload region of each byzantine row with all-ones words
+    (tail lanes of the last payload word masked off — pad bits stay 0,
+    matching the encoder) and patches the trailing CRC word with the
+    xor-fold of the flip pattern, so the forged frame passes the PS-side
+    verify.  Headers are untouched.  Applied pre-transmit: the bit-level
+    channel then corrupts the *forged* buffer like any other.
+    """
+    k, wt = sign_words.shape
+    h, c = wire_fmt.SIGN_HEADER_WORDS, wire_fmt.CRC_WORDS
+    pat = np.zeros((wt,), np.uint32)
+    pat[h:wt - c] = np.uint32(0xFFFFFFFF)
+    tail = n % wire_fmt.GROUP
+    if tail:
+        pat[wt - c - 1] = np.uint32((1 << tail) - 1)
+    pat[-1] = np.bitwise_xor.reduce(pat)     # CRC patch: fold is linear
+    flipped = sign_words ^ jnp.asarray(pat)[None, :]
+    return jnp.where(mask[:, None], flipped, sign_words)
+
+
+def flip_signs(qg: QuantizedGradient, mask: Array) -> QuantizedGradient:
+    """Analytic-wire sign flip: negate the byzantine rows' sign matrix.
+    (The packed tree path uses this pre-pack — the encoder then stamps a
+    CRC over the forged payload, same end state as signflip_frames.)"""
+    s = jnp.where(mask[:, None], -qg.sign, qg.sign).astype(qg.sign.dtype)
+    return qg._replace(sign=s)
+
+
+def scale_ranges(qg: QuantizedGradient, mask: Array,
+                 scale: float) -> QuantizedGradient:
+    """Scaled-update attack: inflate the reported (g_min, g_max) range
+    scalars AFTER honest quantization.  Dequantization is affine in the
+    range (g_min + qidx * step), so the decoded row is exactly
+    ``scale *`` the honest modulus — a norm attack that survives the
+    wire bit-for-bit because the lie lives in the header scalars."""
+    m = mask.reshape((-1,) + (1,) * (qg.g_min.ndim - 1))
+    s = jnp.float32(scale)
+    return qg._replace(g_min=jnp.where(m, qg.g_min * s, qg.g_min),
+                       g_max=jnp.where(m, qg.g_max * s, qg.g_max))
+
+
+def flip_labels(y: Array, mask: Array, n_classes: int = 10) -> Array:
+    """Label-flip poisoning on the client datasets (setup time):
+    byzantine rows see ``n_classes - 1 - y``."""
+    return jnp.where(mask[:, None], n_classes - 1 - y, y)
+
+
+# ---------------------------------------------------------------------------
+# straggler / dropout process
+# ---------------------------------------------------------------------------
+
+def straggler_probs(rate: float, stickiness: float):
+    """Gilbert-chain transition probabilities with stationary inactive
+    fraction ``rate``.  ``stickiness`` is the inactive state's
+    persistence: p_recover = 1 - stickiness, and p_fail is set so the
+    chain's stationary distribution stalls exactly ``rate`` of clients
+    (p_fail / (p_fail + p_recover) == rate)."""
+    rate = float(rate)
+    st = min(max(float(stickiness), 0.0), 0.999)
+    p_rec = 1.0 - st
+    p_fail = min(1.0, rate * p_rec / max(1.0 - rate, 1e-6))
+    return p_fail, p_rec
+
+
+def straggler_init(k: int) -> Array:
+    """(K,) bool straggler state (True = active); starts all-active."""
+    return jnp.ones((k,), bool)
+
+
+def straggler_step(key, state: Array, rate: float, stickiness: float):
+    """One sticky Markov transition -> (new_state, active_this_round).
+
+    Scan-carry friendly: (K,) bool in, (K,) bool out, one uniform draw.
+    rate == 0 is the identity (p_fail == 0, all clients stay active).
+    """
+    p_fail, p_rec = straggler_probs(rate, stickiness)
+    u = jax.random.uniform(key, state.shape)
+    nxt = jnp.where(state, u >= p_fail, u < p_rec)
+    return nxt, nxt
+
+
+def bernoulli_active(key, k: int, rate: float) -> Array:
+    """Memoryless dropout draw (K,) bool — the tree/LLM path's stand-in
+    where no straggler state rides the carry (training.distributed)."""
+    return jax.random.uniform(key, (k,)) >= float(rate)

@@ -1,0 +1,98 @@
+"""Packed-domain screening: per-client suspicion -> weight gate.
+
+Two cheap, decode-free statistics the PS already holds:
+
+* **Sign-vote disagreement** (packed flat wire): each client's popcount
+  Hamming distance to the majority sign word (repro.wire.vote).  A
+  sign-flipping byzantine client is *anti-correlated* with the majority,
+  so its disagreement fraction sits far above the benign cohort's.
+  Only clients disagreeing on a strict majority of lanes (frac > 1/2)
+  are eligible — a benign client can never be vote-flagged for merely
+  having an unusual-but-aligned gradient.
+* **Norm-report outliers**: a robust z-score (median/MAD) on the log of
+  the ``g_max`` range scalar decoded from the O(K) modulus packet
+  headers — the scaled-update attack inflates exactly this report.
+
+Both z-scores are median/MAD with an absolute floor on the MAD scale, so
+a tightly-clustered benign cohort (MAD ~ 0) cannot amplify round-off
+into false positives: with no attacker the gate is exactly 1.0
+everywhere and ``w * 1.0`` leaves the aggregation bit-identical.
+
+The verdict is a multiplicative {0, 1} gate on the decode-once kernel's
+existing per-client weight vector — zero-weight rows are already
+bit-exact no-ops in ``kernels.ops.spfl_accumulate_kernel`` / its jnp
+twin / the sharded psum path, so screening adds no kernel memory
+traffic.  Trace-pure throughout (median/threshold are traced; only
+shapes are static).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+# MAD floors: benign cohorts cluster tightly, and |x - med| / MAD blows
+# up as MAD -> 0.  The floor sets the minimum deviation that can reach
+# the threshold: at the default z = 4, a client must disagree with the
+# majority on >= 20 percentage points more lanes than the median client
+# (0.05 * 4), or report a range >= e**1.4 ~ 4x off the median (0.35 * 4).
+VOTE_MAD_FLOOR = 0.05      # disagreement-fraction space
+NORM_MAD_FLOOR = 0.35      # log-range space
+# Structural anti-majority rule: an honest client's sign vector can sit
+# far from the cohort (non-IID data legitimately spreads disagreement
+# fractions, inflating the MAD and burying a flipped client at ~2 robust
+# sigmas) but it can never disagree with the majority on MORE than half
+# its lanes while the cohort itself is consensual — only a sign-mirrored
+# client does that.  So: frac > 1/2 + ANTI_EPS while the median client
+# sits below 1/2 - CONSENSUS_EPS is flagged outright (suspicion forced
+# past any threshold).  The consensus guard keeps near-tie cohorts
+# (i.i.d. gradients, frac ~ 1/2 everywhere) immune to tie-break noise.
+VOTE_ANTI_EPS = 0.02       # client-side anti-majority margin
+VOTE_CONSENSUS_EPS = 0.05  # cohort-side consensus margin on the median
+
+
+def robust_z(x: Array, valid: Array, floor: float) -> Array:
+    """|x - median| / max(1.4826 * MAD, floor) over the valid rows.
+
+    Median/MAD are computed on the valid subset only (NaN-masked
+    ``jnp.nanmedian`` — CRC-failed or dropped rows must not shift the
+    center).  Invalid rows and degenerate cohorts (everything masked ->
+    NaN statistics) score 0.
+    """
+    xn = jnp.where(valid, x, jnp.nan)
+    med = jnp.nanmedian(xn)
+    mad = jnp.nanmedian(jnp.abs(xn - med))
+    z = jnp.abs(x - med) / jnp.maximum(1.4826 * mad, floor)
+    return jnp.where(valid & jnp.isfinite(z), z, 0.0)
+
+
+def screen_gate(g_max: Array, mod_valid: Array, disagree=None,
+                n_lanes: int = 0, sign_valid=None, z_thresh: float = 4.0):
+    """Suspicion scores -> multiplicative weight gate.
+
+    g_max: (K,) or (K, 1) reported range scalars (header decode);
+    mod_valid: (K,) bool rows whose norm report is trustworthy (CRC-ok,
+    not dropped).  ``disagree``/``n_lanes``/``sign_valid`` add the
+    sign-vote test when the packed flat wire provides it (the tree path
+    screens on norms only).  Returns (gate (K,) f32 in {0, 1},
+    suspect (K,) bool, suspicion (K,) f32 — the max of the z-scores).
+    """
+    logr = jnp.log(jnp.maximum(g_max.reshape(-1), 1e-30))
+    suspicion = robust_z(logr, mod_valid, NORM_MAD_FLOOR)
+    if disagree is not None:
+        frac = disagree.astype(jnp.float32) / max(int(n_lanes), 1)
+        z_vote = robust_z(frac, sign_valid, VOTE_MAD_FLOOR)
+        z_vote = jnp.where(frac > 0.5, z_vote, 0.0)   # anti-majority only
+        # structural flag: anti-majority inside a consensual cohort
+        # (see VOTE_ANTI_EPS note above) scores past any threshold
+        fn = jnp.where(sign_valid, frac, jnp.nan)
+        med = jnp.nanmedian(fn)
+        anti = (sign_valid & (frac > 0.5 + VOTE_ANTI_EPS)
+                & (med < 0.5 - VOTE_CONSENSUS_EPS))
+        z_vote = jnp.where(anti, jnp.maximum(z_vote, 2.0 * z_thresh),
+                           z_vote)
+        suspicion = jnp.maximum(suspicion, z_vote)
+    suspect = suspicion > z_thresh
+    gate = jnp.where(suspect, 0.0, 1.0)
+    return gate, suspect, suspicion

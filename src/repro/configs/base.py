@@ -331,6 +331,39 @@ class FLConfig:
     segment drains the tail — no round is dropped or double-flushed
     regardless of divisibility (the segment-flush rule,
     ``src/repro/obs/README.md``).
+
+    Adversarial cohort + defense (repro.adversary; wire/README.md
+    "Packed-domain screening"):
+
+    ``attack``: fault injection on floor(``attack_frac`` * K) byzantine
+    clients chosen once per run by a seeded permutation.  'signflip'
+    transmits the bitwise complement of the sign payload (packed wire:
+    XOR of the framed words with an O(1) CRC patch, so the forged frame
+    verifies); 'scaled' inflates the reported (g_min, g_max) range
+    scalars by ``attack_scale`` (exactly scale x the honest modulus
+    after decode); 'labelflip' trains the byzantine rows on
+    ``n_classes - 1 - y`` (data poisoning — honest radio).
+
+    ``dropout_rate`` / ``straggler_stickiness``: seeded Gilbert
+    straggler process — each round a (K,) bool active state steps a
+    sticky two-state Markov chain whose stationary stalled fraction is
+    ``dropout_rate`` (stickiness = the stalled state's persistence).
+    Inactive clients transmit nothing: their rows enter the decode-once
+    kernel with weight 0 (bit-exact no-ops) and the aggregation mean
+    renormalizes over the present count.  The state rides the fused-scan
+    carry next to the AR(1) shadowing state.
+
+    ``screen`` / ``screen_z``: the packed-domain byzantine defense —
+    per-client suspicion from sign-vote disagreement popcounts (no
+    unpack) and robust z-scores on the header range reports, gating the
+    kernel's weight vector to 0 above the ``screen_z`` threshold.  With
+    no attacker the gate is exactly 1.0 everywhere (benign rounds stay
+    within the documented ulp/f32 contract of the unscreened path).
+
+    ``min_participation``: graceful-degradation floor — when fewer than
+    ceil(m * K) modulus packets survive a round, every client falls back
+    to sign-only reuse (gbar compensation), the paper's own degradation
+    mode, instead of averaging a handful of moduli.
     """
     n_devices: int = 20                  # K
     bandwidth_hz: float = 10e6           # B
@@ -369,6 +402,14 @@ class FLConfig:
     telemetry_path: Optional[str] = None  # JSONL sink (None = in-memory)
     round_fusion: str = 'none'           # none | eager | scan
     scan_segment_rounds: int = 0         # 0 = telemetry_flush_every
+    attack: str = 'none'                 # none | signflip | scaled | labelflip
+    attack_frac: float = 0.25            # byzantine fraction (floor(f*K))
+    attack_scale: float = 10.0           # 'scaled' range inflation factor
+    dropout_rate: float = 0.0            # stationary straggler fraction
+    straggler_stickiness: float = 0.5    # stalled-state persistence
+    screen: bool = False                 # packed-domain byzantine defense
+    screen_z: float = 4.0                # robust-z suspicion threshold
+    min_participation: float = 0.0       # mod-packet floor -> sign-only
 
     @property
     def noise_psd_w(self) -> float:

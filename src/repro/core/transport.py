@@ -84,6 +84,8 @@ from typing import NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.adversary import clients as adv_clients
+from repro.adversary import screen as adv_screen
 from repro.configs.base import FLConfig
 from repro.core import bitchannel
 from repro.core import channel as chan
@@ -97,6 +99,7 @@ from repro.obs.trace import stage_scope
 from repro.wire import corrupt as wire_corrupt
 from repro.wire import format as wire_fmt
 from repro.wire import packets as wire_packets
+from repro.wire import vote as wire_vote
 
 Array = jax.Array
 
@@ -152,11 +155,39 @@ def _seq_client_mean(vals: Array) -> Array:
     ``jnp.sum`` so GSPMD can lower the sharded client axis to ONE
     cross-client all-reduce (see training/distributed.py) instead of a
     serial chain of per-slice gathers."""
-    k = vals.shape[0]
+    return _seq_client_sum(vals) / vals.shape[0]
+
+
+def _seq_client_sum(vals: Array) -> Array:
+    """Sequential-order client sum (see _seq_client_mean) — split out so
+    the adversarial paths can divide by the *present* client count
+    instead of K while keeping the same accumulation order."""
     acc = vals[0]
-    for i in range(1, k):
+    for i in range(1, vals.shape[0]):
         acc = acc + vals[i]
-    return acc / k
+    return acc
+
+
+def _present_denom(k: int, active, suspect):
+    """Aggregation denominator under dropout / screening.
+
+    Baseline rounds divide by the static cohort size K.  Once clients
+    can drop (``active``) or be screened (``suspect``), dividing by K
+    would shrink the update toward zero, so the mean renormalizes over
+    the *present* clients — active and not screened.  Channel erasures
+    stay in the count: the 1/q weights already compensate them in
+    expectation.  With neither knob in play this returns the Python int
+    K (the seed paths are untouched); at full benign participation the
+    f32 sum of K ones equals float(K) exactly, so a screened-but-clean
+    round divides by the same f32 value as ``acc / K``.
+    """
+    if active is None and suspect is None:
+        return k
+    present = (jnp.ones((k,), jnp.float32) if active is None
+               else active.astype(jnp.float32))
+    if suspect is not None:
+        present = present * (1.0 - suspect.astype(jnp.float32))
+    return jnp.maximum(jnp.sum(present), 1.0)
 
 
 # ---------------------------------------------------------------------------
@@ -256,7 +287,11 @@ def spfl_aggregate(grads: Array, gbar: Array, q: Array, p: Array,
                    wire: str = 'analytic', round_idx=0,
                    channel: str = 'bernoulli',
                    collective: str = 'gather', mesh=None,
-                   client_axes: Optional[tuple] = None
+                   client_axes: Optional[tuple] = None,
+                   attack: str = 'none', byz_mask: Optional[Array] = None,
+                   attack_scale: float = 10.0,
+                   active: Optional[Array] = None, screen: bool = False,
+                   screen_z: float = 4.0, min_participation: float = 0.0
                    ) -> Tuple[Array, RoundTelemetry]:
     """Eq. (15)-(17).  grads: (K, l); gbar: (l,) or (K, l); q, p: (K,).
 
@@ -279,6 +314,22 @@ def spfl_aggregate(grads: Array, gbar: Array, q: Array, p: Array,
     bit channel corrupts and CRC-folds each shard's own rows — so no
     client payload is ever all-gathered (see the module docstring for
     the exactness contract vs 'gather').
+
+    Adversarial cohort (repro.adversary): ``attack`` in ``ATTACK_KINDS``
+    with ``byz_mask`` (K,) bool applies the attacker transform at the
+    wire level — ``'signflip'`` XORs the framed packed sign payload (CRC
+    patched, so the forged frame verifies) or negates the analytic sign
+    matrix; ``'scaled'`` inflates the reported range scalars by
+    ``attack_scale``; ``'labelflip'`` is data poisoning upstream, a
+    transport no-op.  ``active`` (K,) bool marks straggler/dropout rows:
+    they transmit nothing (sign_ok/mod_ok forced False -> zero-weight
+    rows in the kernel) and the mean renormalizes over the present
+    count.  ``screen=True`` gates each client's weight by the
+    packed-domain suspicion verdict (sign-vote disagreement + robust
+    norm z-score, ``screen_z`` threshold); ``min_participation`` is the
+    graceful-degradation floor — when fewer than ceil(m * K) modulus
+    packets survive, ALL rows fall back to sign-only reuse (gbar
+    compensation), the paper's own degradation mode.
     """
     assert wire in WIRE_KINDS, wire
     assert channel in chan.CHANNEL_KINDS, channel
@@ -287,10 +338,15 @@ def spfl_aggregate(grads: Array, gbar: Array, q: Array, p: Array,
     collective, client_axes = _resolve_collective(collective, wire, mesh,
                                                   client_axes)
     sharded = collective == 'sharded'
+    assert attack in adv_clients.ATTACK_KINDS, attack
     K, l = grads.shape
     kq, ko = jax.random.split(key)
     with stage_scope('quantize_pack'):
         qg = _per_client_quantize(grads, bits, kq)
+    if attack == 'scaled' and byz_mask is not None:
+        qg = adv_clients.scale_ranges(qg, byz_mask, attack_scale)
+    elif attack == 'signflip' and byz_mask is not None and wire != 'packed':
+        qg = adv_clients.flip_signs(qg, byz_mask)
     q_eff = 1.0 - (1.0 - q) ** (n_retx + 1)      # sign retransmission(s)
 
     extras = {}
@@ -298,6 +354,11 @@ def spfl_aggregate(grads: Array, gbar: Array, q: Array, p: Array,
     if wire == 'packed':
         with stage_scope('quantize_pack'):
             sign_words, mod_words, measured = encode_wire(qg, round_idx)
+        if attack == 'signflip' and byz_mask is not None:
+            # packed-domain attack, pre-transmit: the forged frame's CRC
+            # covers the lie, so the channel/PS treat it as pristine
+            sign_words = adv_clients.signflip_frames(sign_words,
+                                                     byz_mask, l)
         if sharded:
             sign_words = _client_constrain(sign_words, mesh, client_axes)
             mod_words = _client_constrain(mod_words, mesh, client_axes)
@@ -332,7 +393,34 @@ def spfl_aggregate(grads: Array, gbar: Array, q: Array, p: Array,
             extras = dict(retx_attempts=retx_k)
         payload = payload_base + retx * sign_bits
 
+    if active is not None:           # stragglers/dropouts transmit nothing
+        sign_ok = sign_ok & active
+        mod_ok = mod_ok & active
+        extras['active'] = active
+    if min_participation > 0.0:
+        # graceful degradation: too few surviving modulus packets ->
+        # sign-only reuse for the whole cohort (paper's fallback mode)
+        floor = int(math.ceil(min_participation * K))
+        n_mod = jnp.sum(mod_ok.astype(jnp.int32))
+        mod_ok = jnp.where(n_mod >= floor, mod_ok, jnp.zeros_like(mod_ok))
+
     w = _inverse_prob(sign_ok, q_eff)
+    suspect = None
+    if screen:
+        with stage_scope('screen'):
+            if wire == 'packed':
+                rows = wire_packets.sign_payload(sign_words)
+                maj = wire_vote.majority_words(rows, sign_ok, l)
+                dis = wire_vote.disagreement(rows, maj, l)
+                _, hdr_gmax = wire_packets.mod_header_ranges(mod_words)
+                gate, suspect, suspicion = adv_screen.screen_gate(
+                    hdr_gmax, mod_ok, dis, l, sign_ok, screen_z)
+            else:
+                gate, suspect, suspicion = adv_screen.screen_gate(
+                    qg.g_max, mod_ok, z_thresh=screen_z)
+            w = w * gate             # screening = weighting: 0-rows are
+        extras['suspect'] = suspect  # bit-exact no-ops in the kernel
+        extras['suspicion'] = suspicion
     with stage_scope('decode_aggregate'):
         if wire == 'packed':
             # decode-once: O(K) header words, then ONE fused kernel pass
@@ -354,7 +442,7 @@ def spfl_aggregate(grads: Array, gbar: Array, q: Array, p: Array,
                     wire_packets.mod_payload(mod_words),
                     jnp.asarray(gbar, jnp.float32), g_min, g_max, mod_ok,
                     w, sign_ok, l, bits)
-            ghat = acc / K
+            ghat = acc / _present_denom(K, active, suspect)
             if votes is not None:
                 extras['sign_votes'] = votes
         else:
@@ -363,7 +451,8 @@ def spfl_aggregate(grads: Array, gbar: Array, q: Array, p: Array,
                       if gbar.ndim == 1 else gbar)
             modulus = jnp.where(mod_ok[:, None], modulus, gbar_k)
             signed = qg.sign.astype(jnp.float32) * modulus
-            ghat = _seq_client_mean(w[:, None] * signed)
+            ghat = (_seq_client_sum(w[:, None] * signed)
+                    / _present_denom(K, active, suspect))
 
     return ghat, RoundTelemetry(sign_ok, mod_ok, sign_ok,
                                       jnp.asarray(payload, jnp.float32),
@@ -564,7 +653,12 @@ def spfl_aggregate_tree(grads_tree, gbar_tree, q: Array, p: Array,
                         channel: Optional[str] = None,
                         collective: Optional[str] = None, mesh=None,
                         client_axes: Optional[tuple] = None,
-                        round_idx=None):
+                        round_idx=None, attack: str = 'none',
+                        byz_mask: Optional[Array] = None,
+                        attack_scale: float = 10.0,
+                        active: Optional[Array] = None,
+                        screen: bool = False, screen_z: float = 4.0,
+                        min_participation: float = 0.0):
     """SP-FL over per-client gradient pytrees (leaves (K, ...)).
 
     The quantizer range, the packet outcomes and the 1/q weights are
@@ -603,6 +697,15 @@ def spfl_aggregate_tree(grads_tree, gbar_tree, q: Array, p: Array,
     traced round index, mirroring the flat path's traced-header stamp.
     ``None`` (default) leaves the key untouched, preserving the exact
     draws of every existing caller.
+
+    Adversarial knobs mirror ``spfl_aggregate``: ``'signflip'`` negates
+    the byzantine rows' sign matrix *before* packing (the encoder then
+    stamps a CRC over the forged payload — same end state as the flat
+    path's framed XOR); ``'scaled'`` inflates the per-client range
+    *reports* fed to the decode kernels while quantizing honestly;
+    ``active`` rows are zeroed out and the per-leaf mean renormalizes;
+    ``screen=True`` applies the norm-report robust z-gate only (the tree
+    path discards votes, so vote screening stays a flat-wire feature).
     """
     wire = fl.wire if wire is None else wire
     channel = fl.channel if channel is None else channel
@@ -623,6 +726,13 @@ def spfl_aggregate_tree(grads_tree, gbar_tree, q: Array, p: Array,
     q_eff = 1.0 - (1.0 - q) ** (n_retx + 1)
 
     g_min, g_max = stats['g_min'], stats['g_max']
+    assert attack in adv_clients.ATTACK_KINDS, attack
+    byz = byz_mask if attack in ('signflip', 'scaled') else None
+    g_min_rep, g_max_rep = g_min, g_max      # range *reports* (the lie)
+    if attack == 'scaled' and byz is not None:
+        s = jnp.float32(attack_scale)
+        g_min_rep = jnp.where(byz, g_min * s, g_min)
+        g_max_rep = jnp.where(byz, g_max * s, g_max)
     bits = fl.quant_bits
     # beyond-paper §Perf (analytic wire only — the packed wire reduces
     # packed words, narrower than any float dtype): the payload is
@@ -643,6 +753,12 @@ def spfl_aggregate_tree(grads_tree, gbar_tree, q: Array, p: Array,
         flat = lf.astype(jnp.float32).reshape(Kd, -1)
         qg = stochastic_quantize(flat, bits, lkey,
                                  g_min[:, None], g_max[:, None])
+        if attack == 'signflip' and byz is not None:
+            qg = adv_clients.flip_signs(qg, byz)
+        if attack == 'scaled' and byz is not None:
+            # the analytic dequant must see the scaled *report*
+            qg = qg._replace(g_min=g_min_rep[:, None],
+                             g_max=g_max_rep[:, None])
         qgs.append(qg)
         if wire == 'packed':
             sw = wire_fmt.pack_bits_ref(wire_fmt.sign_to_bits(qg.sign), 1)
@@ -697,7 +813,26 @@ def spfl_aggregate_tree(grads_tree, gbar_tree, q: Array, p: Array,
         mod_ok = jax.random.uniform(km, p.shape) < p
         retx = jnp.sum(retx_k).astype(jnp.float32)
         extras = dict(retx_attempts=retx_k)
+
+    if active is not None:           # stragglers/dropouts transmit nothing
+        sign_ok = sign_ok & active
+        mod_ok = mod_ok & active
+        extras['active'] = active
+    if min_participation > 0.0:
+        floor = int(math.ceil(min_participation * K))
+        n_mod = jnp.sum(mod_ok.astype(jnp.int32))
+        mod_ok = jnp.where(n_mod >= floor, mod_ok, jnp.zeros_like(mod_ok))
     w = _inverse_prob(sign_ok, q_eff)
+    suspect = None
+    if screen:
+        # tree path: norm-report screening only (votes are discarded at
+        # LLM scale — see the docstring)
+        gate, suspect, suspicion = adv_screen.screen_gate(
+            g_max_rep, mod_ok, z_thresh=screen_z)
+        w = w * gate
+        extras['suspect'] = suspect
+        extras['suspicion'] = suspicion
+    denom = _present_denom(K, active, suspect)
 
     # ---- PS: decode-once aggregate per leaf ----
     out = []
@@ -721,14 +856,14 @@ def spfl_aggregate_tree(grads_tree, gbar_tree, q: Array, p: Array,
                        else gb.reshape(-1))
             if sharded:
                 acc, _ = kops.spfl_aggregate_packed_sharded(
-                    sws[i], qws[i], gb_leaf, g_min, g_max, mod_ok, w,
-                    sign_ok, d, bits, mesh=mesh, client_axes=client_axes,
-                    with_votes=False)
+                    sws[i], qws[i], gb_leaf, g_min_rep, g_max_rep,
+                    mod_ok, w, sign_ok, d, bits, mesh=mesh,
+                    client_axes=client_axes, with_votes=False)
             else:
                 acc, _ = kops.spfl_aggregate_packed(
                     sws[i], qws[i], gb_leaf,
-                    g_min, g_max, mod_ok, w, sign_ok, d, bits)
-            out.append((acc / Kd).reshape(shape[1:]))
+                    g_min_rep, g_max_rep, mod_ok, w, sign_ok, d, bits)
+            out.append((acc / denom).reshape(shape[1:]))
             continue
         modulus = dequantize_modulus(qg)
         if per_client_gb:
@@ -741,7 +876,7 @@ def spfl_aggregate_tree(grads_tree, gbar_tree, q: Array, p: Array,
         # keep the reduction itself (-> cross-client all-reduce) in rdt,
         # and as a parallel jnp.sum: the client axis is mesh-sharded at
         # LLM scale and must lower to ONE all-reduce
-        out.append((jnp.sum(contrib, axis=0) / Kd).astype(
+        out.append((jnp.sum(contrib, axis=0) / denom).astype(
             jnp.float32).reshape(shape[1:]))
     ghat = jax.tree.unflatten(treedef, out)
 

@@ -27,13 +27,24 @@ def dirichlet_partition(labels: np.ndarray, k: int, per_device: int,
     """Each device draws its class mixture from Dirichlet(alpha); samples
     are then drawn (with replacement if a class runs short) to give every
     device exactly ``per_device`` samples — matching the paper's equal
-    |D_k| assumption."""
+    |D_k| assumption.
+
+    Classes absent from ``labels`` get their mixture mass renormalized
+    away before the multinomial draw — at sharp alpha (0.01) the
+    Dirichlet concentrates on one class, and assigning ``m > 0`` to an
+    empty pool would make ``rng.choice`` raise."""
     rng = np.random.RandomState(seed)
     by_class = [np.nonzero(labels == c)[0] for c in range(n_classes)]
+    nonempty = np.array([len(p) > 0 for p in by_class], dtype=bool)
+    if not nonempty.any():
+        raise ValueError('dirichlet_partition: no labels in [0, n_classes)')
     parts = []
     for _ in range(k):
         mix = rng.dirichlet(np.full(n_classes, alpha))
-        counts = rng.multinomial(per_device, mix)
+        mix = np.where(nonempty, mix, 0.0)
+        if mix.sum() == 0.0:        # all mass landed on empty classes
+            mix = nonempty / nonempty.sum()
+        counts = rng.multinomial(per_device, mix / mix.sum())
         take = []
         for c, m in enumerate(counts):
             if m == 0:

@@ -18,6 +18,14 @@ training/distributed.py make_fused_fl_scan) rely on this: the whole
 transport — these kernels included — must trace once and iterate
 on-device with zero host transfers, so nothing in this module may
 branch on a concrete array value or force one to the host.
+
+Screening contract: the byzantine defense (repro.adversary.screen) and
+straggler dropout never need kernel changes — both act by zeroing rows
+of the existing ``weights`` input.  A zero weight makes the kernel's
+row contribution ``0.0 * x`` on already-decoded finite values, which is
+a bit-exact no-op in f32 accumulation, so screened/dropped clients cost
+nothing and gate-all-ones rounds reproduce the unscreened aggregate
+bit for bit.
 """
 from __future__ import annotations
 

@@ -40,6 +40,10 @@ def run(arch: str, steps: int, clients: int, batch: int, seq: int,
         round_fusion: str = 'none',
         allocation_tol: float = 0.0,
         allocation_early_exit: bool = True,
+        attack: str = 'none', attack_frac: float = 0.25,
+        attack_scale: float = 10.0, dropout_rate: float = 0.0,
+        screen: bool = False, screen_z: float = 4.0,
+        min_participation: float = 0.0,
         telemetry_path: Optional[str] = None) -> dict:
     cfg = get_arch(arch)
     if round_fusion != 'none' and allocation_backend != 'jax':
@@ -56,7 +60,11 @@ def run(arch: str, steps: int, clients: int, batch: int, seq: int,
                   allocation_cadence=allocation_cadence,
                   round_fusion=round_fusion,
                   allocation_tol=allocation_tol,
-                  allocation_early_exit=allocation_early_exit)
+                  allocation_early_exit=allocation_early_exit,
+                  attack=attack, attack_frac=attack_frac,
+                  attack_scale=attack_scale, dropout_rate=dropout_rate,
+                  screen=screen, screen_z=screen_z,
+                  min_participation=min_participation)
     key = jax.random.PRNGKey(seed)
     params = tf.init_params(cfg, key)
     dim = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
@@ -286,6 +294,31 @@ def main():
                          'iterate converges (bit-identical to the '
                          'fixed-trip schedule); --no-allocation-early-'
                          'exit restores fixed-trip for benchmarking')
+    ap.add_argument('--attack', default='none',
+                    choices=['none', 'signflip', 'scaled', 'labelflip'],
+                    help='byzantine cohort model (repro.adversary); '
+                         "'labelflip' is a data-level attack and has no "
+                         'packet effect on this synthetic-token driver')
+    ap.add_argument('--attack-frac', type=float, default=0.25,
+                    help='fraction of clients in the byzantine cohort '
+                         '(floor(frac*K) clients, seeded permutation)')
+    ap.add_argument('--attack-scale', type=float, default=10.0,
+                    help="range-inflation factor of the 'scaled' attack")
+    ap.add_argument('--dropout-rate', type=float, default=0.0,
+                    help='per-round client dropout probability (i.i.d. '
+                         'per round on this driver; dropped clients '
+                         'become zero-weight rows with renormalization)')
+    ap.add_argument('--screen', default=False,
+                    action=argparse.BooleanOptionalAction,
+                    help='enable the packed-domain byzantine screen '
+                         '(sign-vote disagreement + norm-report robust '
+                         'z) gating suspect clients to weight 0')
+    ap.add_argument('--screen-z', type=float, default=4.0,
+                    help='robust z-score threshold of the screen')
+    ap.add_argument('--min-participation', type=float, default=0.0,
+                    help='if fewer than ceil(frac*K) modulus packets '
+                         'survive, drop ALL moduli and fall back to '
+                         'sign-only reuse (graceful degradation)')
     ap.add_argument('--telemetry-out', default=None,
                     help='write per-step RoundTelemetry JSONL (+ run '
                          'manifest) to this path')
@@ -299,6 +332,10 @@ def main():
         round_fusion=args.round_fusion,
         allocation_tol=args.allocation_tol,
         allocation_early_exit=args.allocation_early_exit,
+        attack=args.attack, attack_frac=args.attack_frac,
+        attack_scale=args.attack_scale, dropout_rate=args.dropout_rate,
+        screen=args.screen, screen_z=args.screen_z,
+        min_participation=args.min_participation,
         telemetry_path=args.telemetry_out)
 
 

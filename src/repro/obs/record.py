@@ -44,10 +44,12 @@ Array = jax.Array
 # (training.fl_loop appends one entry per key per round at flush)
 SCALAR_KEYS = ('payload_bits', 'retransmissions', 'sign_ok_frac',
                'mod_ok_frac', 'q_mean', 'p_mean', 'sign_agreement',
-               'alloc_iters', 'alloc_exit_reason')
+               'alloc_iters', 'alloc_exit_reason', 'participation_frac',
+               'suspect_frac')
 # per-client (K,) vectors serialized into JSONL rows when present
 VECTOR_KEYS = ('sign_ok', 'mod_ok', 'accepted', 'sign_flips', 'mod_flips',
-               'sign_crc_ok', 'mod_crc_ok', 'retx_attempts', 'q', 'p')
+               'sign_crc_ok', 'mod_crc_ok', 'retx_attempts', 'q', 'p',
+               'active', 'suspect', 'suspicion')
 
 
 class RoundTelemetry(NamedTuple):
@@ -82,6 +84,12 @@ class RoundTelemetry(NamedTuple):
     alloc_exit_reason: Optional[Array] = None  # scalar int32 — the
     #   solver's EXIT_* code (core.allocation_jax: 0 converged,
     #   1 iteration cap, 2 non-finite iterate, 3 uniform fallback)
+    active: Optional[Array] = None        # (K,) bool — not dropped/stalled
+    #   this round (repro.adversary straggler process; None = everyone)
+    suspect: Optional[Array] = None       # (K,) bool — screened out by the
+    #   packed-domain byzantine defense (weight gated to 0)
+    suspicion: Optional[Array] = None     # (K,) f32 — robust-z suspicion
+    #   score behind the verdict (adversary.screen, already O(K))
 
     # ------------------------------------------------------------------
     def with_allocation(self, q: Array, p: Array,
@@ -107,7 +115,9 @@ class RoundTelemetry(NamedTuple):
         """Reduce the (l,) packed-domain vote vector to the agreement
         scalar — its only downstream use — so ring slots stay O(K)
         instead of O(model dim).  Pure jnp reduction, traceable; push
-        ``rec.condensed()`` into the ring, not ``rec``."""
+        ``rec.condensed()`` into the ring, not ``rec``.  The adversarial
+        per-client fields (active/suspect/suspicion) are already O(K)
+        and pass through untouched."""
         if self.sign_votes is None:
             return self
         return self._replace(
@@ -152,6 +162,10 @@ def round_scalars(t: RoundTelemetry) -> Dict[str, Array]:
             t.alloc_iters, jnp.float32),
         'alloc_exit_reason': nan if t.alloc_exit_reason is None
         else jnp.asarray(t.alloc_exit_reason, jnp.float32),
+        'participation_frac': nan if t.active is None else jnp.mean(
+            t.active.astype(jnp.float32)),
+        'suspect_frac': nan if t.suspect is None else jnp.mean(
+            t.suspect.astype(jnp.float32)),
     }
 
 
@@ -199,6 +213,10 @@ def to_row(t: RoundTelemetry, round_idx: Optional[int] = None
         else _np_scalar(t.alloc_exit_reason),
         'alloc_objective': None if t.alloc_objective is None
         else _np_scalar(t.alloc_objective),
+        'participation_frac': math.nan if t.active is None else float(
+            np.asarray(t.active, np.float32).mean()),
+        'suspect_frac': math.nan if t.suspect is None else float(
+            np.asarray(t.suspect, np.float32).mean()),
     }
     for name in VECTOR_KEYS:
         val = getattr(t, name)

@@ -36,6 +36,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import adversary
 from repro.configs.base import FLConfig, ModelConfig
 from repro.core import allocation_jax as alloc_jax
 from repro.core import channel
@@ -50,6 +51,27 @@ def init_gbar(params) -> Any:
     """Compensation modulus tree (last_global style), fp32 zeros."""
     return jax.tree.map(
         lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _adversary_closures(fl: FLConfig):
+    """Byzantine mask (run-constant closure) + per-round dropout draw for
+    the LLM-scale step.  Unlike the host loop's sticky Gilbert process,
+    the fused tree path draws participation i.i.d. per round from the
+    round key — no extra scan-carry state, same STRAGGLER_FOLD stream.
+    'labelflip' has no packet-level transform here (token labels are
+    flipped at data setup by the host loop), so its mask stays unused
+    inside the transport."""
+    byz = (adversary.byzantine_mask(fl.seed, fl.n_devices, fl.attack_frac)
+           if fl.attack != 'none' else None)
+
+    def draw_active(key):
+        if fl.dropout_rate <= 0.0:
+            return None
+        return adversary.bernoulli_active(
+            jax.random.fold_in(key, adversary.STRAGGLER_FOLD),
+            fl.n_devices, fl.dropout_rate)
+
+    return byz, draw_active
 
 
 def client_batch_shapes(cfg: ModelConfig, n_clients: int,
@@ -80,6 +102,7 @@ def make_fl_train_step(cfg: ModelConfig, fl: FLConfig,
     if fl.collective == 'sharded' and mesh is None:
         raise ValueError("fl.collective='sharded' needs the mesh passed "
                          "into make_fl_train_step")
+    byz_mask, draw_active = _adversary_closures(fl)
 
     def train_step(params, batch, gbar, q, p, key):
         def client_loss(params_, bk):
@@ -94,7 +117,12 @@ def make_fl_train_step(cfg: ModelConfig, fl: FLConfig,
         if transport_kind == 'spfl':
             ghat, stats, diag = tr.spfl_aggregate_tree(
                 grads, gbar, q, p, fl, key, wire=fl.wire,
-                channel=fl.channel, mesh=mesh)
+                channel=fl.channel, mesh=mesh,
+                attack=fl.attack, byz_mask=byz_mask,
+                attack_scale=fl.attack_scale,
+                active=draw_active(key), screen=fl.screen,
+                screen_z=fl.screen_z,
+                min_participation=fl.min_participation)
         elif transport_kind == 'error_free':
             ghat, stats, diag = tr.error_free_aggregate_tree(
                 grads, fl, key, wire=fl.wire, mesh=mesh)
@@ -165,6 +193,7 @@ def make_fused_fl_round(cfg: ModelConfig, fl: FLConfig,
         raise ValueError("fused rounds require allocation_backend='jax' "
                          "(eq. (28) must solve in-trace)")
     opt = optimizer if optimizer is not None else sgd(fl.learning_rate)
+    byz_mask, draw_active = _adversary_closures(fl)
     K = fl.n_devices
     p_w = jnp.full((K,), fl.tx_power_w, jnp.float32)
     method = fl.allocator
@@ -221,7 +250,12 @@ def make_fused_fl_round(cfg: ModelConfig, fl: FLConfig,
             q, p, obj, iters, reason = alloc_f32(grads, gbar, stats, gains)
             ghat, _, diag = tr.spfl_aggregate_tree(
                 grads, gbar, q, p, fl, key, stats=stats, wire=fl.wire,
-                channel=fl.channel, mesh=mesh, round_idx=round_idx)
+                channel=fl.channel, mesh=mesh, round_idx=round_idx,
+                attack=fl.attack, byz_mask=byz_mask,
+                attack_scale=fl.attack_scale,
+                active=draw_active(key), screen=fl.screen,
+                screen_z=fl.screen_z,
+                min_participation=fl.min_participation)
         else:
             q = jnp.ones((K,))
             p = jnp.ones((K,))

@@ -57,6 +57,7 @@ import numpy as np
 from jax.experimental import enable_x64
 from jax.flatten_util import ravel_pytree
 
+from repro import adversary
 from repro.configs.base import FLConfig
 from repro.core import allocation as alloc
 from repro.core import allocation_jax as alloc_jax
@@ -86,6 +87,11 @@ class FLHistory:
     # iterations to converge (NaN on rounds/paths without a solve)
     alloc_exit_reason: List[float] = field(default_factory=list)  # EXIT_*
     retransmissions: List[float] = field(default_factory=list)
+    # adversarial-cohort telemetry (populated when the knobs are on):
+    # fraction of clients active (not straggling/dropped) and fraction
+    # screened out by the packed-domain byzantine defense
+    participation_frac: List[float] = field(default_factory=list)
+    suspect_frac: List[float] = field(default_factory=list)
     # host wall-time of step 4.  On allocation_backend='numpy' this is
     # the full eq. (28) solve; on 'jax' the solve is an async device
     # dispatch, so this records only the (intentionally tiny) host cost
@@ -117,6 +123,19 @@ class FLSimulator:
         self.dim = flat.shape[0]
         self.client_x = jnp.asarray(client_x)
         self.client_y = jnp.asarray(client_y)
+        # adversarial cohort: membership fixed once per run by a seeded
+        # permutation; label-flip poisons the byzantine rows' data HERE,
+        # at setup — that attacker's radio stays honest
+        self.byz_mask = (adversary.byzantine_mask(seed, self.K,
+                                                  fl.attack_frac)
+                         if fl.attack != 'none' else None)
+        if fl.attack == 'labelflip':
+            n_classes = int(np.max(np.asarray(client_y))) + 1
+            self.client_y = adversary.flip_labels(self.client_y,
+                                                  self.byz_mask, n_classes)
+        # straggler chain state (True = active), stepped once per round
+        # by the non-fused loop; the fused modes carry it in the scan
+        self._straggler = adversary.straggler_init(self.K)
         self.test_x = jnp.asarray(test_x)
         self.test_y = jnp.asarray(test_y)
         # static wireless geometry (paper: uniform in a 500 m cell)
@@ -173,13 +192,20 @@ class FLSimulator:
         p_w = jnp.asarray(self.p_w)
         beta_uniform = jnp.full((self.K,), 1.0 / self.K)
 
+        byz_mask = self.byz_mask
+
         @functools.partial(jax.jit, static_argnames=('kind',))
-        def run_transport(kind, grads, gbar, q, p, key, round_idx):
+        def run_transport(kind, grads, gbar, q, p, key, round_idx,
+                          active=None):
             if kind in ('spfl', 'spfl_retx'):
                 return transport.spfl_aggregate(
                     grads, gbar, q, p, fl.quant_bits, fl.b0_bits, key,
                     n_retx=1 if kind == 'spfl_retx' else 0, wire=fl.wire,
-                    round_idx=round_idx, channel=fl.channel)
+                    round_idx=round_idx, channel=fl.channel,
+                    attack=fl.attack, byz_mask=byz_mask,
+                    attack_scale=fl.attack_scale, active=active,
+                    screen=fl.screen, screen_z=fl.screen_z,
+                    min_participation=fl.min_participation)
             if kind == 'dds':
                 return transport.dds_aggregate(
                     grads, beta_uniform, gains, p_w, fl, key)
@@ -290,12 +316,14 @@ class FLSimulator:
     def _fused_round_core(self):
         """The whole round as ONE traceable function.
 
-        ``round_core(params, gbar, kr, z, n) -> (params', gbar', z',
-        rec, loss_mean)``: per-client grads -> AR(1) fading step (when
-        ``allocation_cadence='per_round'``) -> in-trace float32 eq. (28)
-        solve -> transport (round ``n`` as a traced scalar) -> update ->
-        compensation roll -> condensed telemetry record.  No host value
-        is consumed anywhere, so the body scans (`_run_fused`).
+        ``round_core(params, gbar, kr, z, st, n) -> (params', gbar', z',
+        st', rec, loss_mean)``: per-client grads -> AR(1) fading step
+        (when ``allocation_cadence='per_round'``) -> straggler-chain
+        step (``st``, when ``dropout_rate > 0``) -> in-trace float32
+        eq. (28) solve -> transport (round ``n`` as a traced scalar) ->
+        update -> compensation roll -> condensed telemetry record.  No
+        host value is consumed anywhere, so the body scans
+        (`_run_fused`).
 
         The allocation guard against an empty compensation history is a
         ``lax.cond`` on ``max(gbar^2) > 0`` — the traced twin of the
@@ -313,6 +341,7 @@ class FLSimulator:
         early_exit = fl.allocation_early_exit
         per_round_gains = fl.allocation_cadence == 'per_round'
         allocating = kind in ('spfl', 'spfl_retx')
+        dropout = fl.dropout_rate > 0.0
 
         def alloc_f32(grads, gbar, gains_n):
             """Steps 3–4 in-trace, float32 end to end (the f64 closed
@@ -348,7 +377,7 @@ class FLSimulator:
             # uniform WITHOUT a host sync
             return jax.lax.cond(jnp.max(gb2) > 0.0, solved, uniform, None)
 
-        def round_core(params, gbar, kr, z, n):
+        def round_core(params, gbar, kr, z, st, n):
             losses, grads = self._per_client_grads(
                 params, self.client_x, self.client_y)
 
@@ -359,6 +388,16 @@ class FLSimulator:
                 z2 = z
                 gains_n = gains_j
 
+            # straggler chain: its own fold of the round key, so eager,
+            # scan and the host loop draw bit-identical dropouts and the
+            # existing streams (quantizer, channel) are unperturbed
+            if dropout:
+                st2, active = adversary.straggler_step(
+                    jax.random.fold_in(kr, adversary.STRAGGLER_FOLD),
+                    st, fl.dropout_rate, fl.straggler_stickiness)
+            else:
+                st2, active = st, None
+
             obj = iters = reason = None
             if allocating:
                 q, p, obj, iters, reason = alloc_f32(grads, gbar, gains_n)
@@ -367,7 +406,7 @@ class FLSimulator:
                 p = jnp.ones(self.K)
 
             ghat, diag = self._run_transport(kind, grads, gbar, q, p,
-                                             kr, n)
+                                             kr, n, active)
             new_params = self._apply_update(params, ghat)
 
             if fl.compensation == 'last_global':
@@ -385,24 +424,25 @@ class FLSimulator:
             rec = diag.with_allocation(q, p, objective=obj, round_idx=n,
                                        iters=iters,
                                        exit_reason=reason).condensed()
-            return new_params, gbar2, z2, rec, jnp.mean(losses)
+            return new_params, gbar2, z2, st2, rec, jnp.mean(losses)
 
         return round_core
 
     def _fused_round_body(self):
-        """Scan body: carry = (params, gbar, key, z, ring); x = round
-        index (traced uint32); y = mean client loss of the round."""
+        """Scan body: carry = (params, gbar, key, z, straggler, ring)
+        — the ring stays LAST; x = round index (traced uint32); y =
+        mean client loss of the round."""
         round_core = self._fused_round_core()
 
         def round_body(carry, n):
-            params, gbar, key, z, ring = carry
+            params, gbar, key, z, st, ring = carry
             key, kr = jax.random.split(key)
-            params2, gbar2, z2, rec, loss_mean = round_core(
-                params, gbar, kr, z, n)
+            params2, gbar2, z2, st2, rec, loss_mean = round_core(
+                params, gbar, kr, z, st, n)
             # the traceable push, NOT the donated jitted wrapper — the
             # ring is scan carry, donation is the dispatcher's business
             ring2 = obs_ring.ring_push(ring, rec)
-            return (params2, gbar2, key, z2, ring2), loss_mean
+            return (params2, gbar2, key, z2, st2, ring2), loss_mean
 
         return round_body
 
@@ -415,11 +455,13 @@ class FLSimulator:
         z0 = channel.shadow_init(
             jax.random.fold_in(jax.random.PRNGKey(self._seed), 0x0FAD),
             self.K)
+        st0 = self._straggler
         rec_sds = jax.eval_shape(
-            lambda p_, g_, k_, z_, n_: round_core(p_, g_, k_, z_, n_)[3],
-            self.params, self.gbar, self.key, z0, jnp.uint32(0))
+            lambda p_, g_, k_, z_, s_, n_: round_core(
+                p_, g_, k_, z_, s_, n_)[4],
+            self.params, self.gbar, self.key, z0, st0, jnp.uint32(0))
         ring = obs_ring.ring_init_abstract(rec_sds, seg_len)
-        return (self.params, self.gbar, self.key, z0, ring)
+        return (self.params, self.gbar, self.key, z0, st0, ring)
 
     def _run_fused(self, n_rounds: int, eval_every: int,
                    compute_bound: bool) -> FLHistory:
@@ -484,9 +526,9 @@ class FLSimulator:
                     seg_losses = jnp.stack(losses_l)
 
             # ---- segment boundary: the run's only host sync points ----
-            params, gbar, key, z, ring = carry
+            params, gbar, key, z, st, ring = carry
             recs, ring = obs_ring.flush(ring)        # ONE device_get
-            carry = (params, gbar, key, z, ring)
+            carry = (params, gbar, key, z, st, ring)
             for rec in recs:
                 row = obs_record.to_row(rec)
                 hist.payload_bits.append(row['payload_bits'])
@@ -499,6 +541,11 @@ class FLSimulator:
                 hist.alloc_iters.append(row['alloc_iters'])
                 hist.alloc_exit_reason.append(row['alloc_exit_reason'])
                 hist.retransmissions.append(row['retransmissions'])
+                if fl.dropout_rate > 0.0:
+                    hist.participation_frac.append(
+                        row['participation_frac'])
+                if fl.screen:
+                    hist.suspect_frac.append(row['suspect_frac'])
                 self.metrics.observe_round(row)
                 if sink is not None:
                     sink.write_round(row)
@@ -517,6 +564,7 @@ class FLSimulator:
             done += m
 
         self.params, self.gbar, self.key = carry[0], carry[1], carry[2]
+        self._straggler = carry[4]
         self._round += n_rounds
         self.metrics.observe_alloc(host_solver_calls=self.host_solver_calls)
         if sink is not None:
@@ -581,6 +629,11 @@ class FLSimulator:
                 hist.alloc_iters.append(row['alloc_iters'])
                 hist.alloc_exit_reason.append(row['alloc_exit_reason'])
                 hist.retransmissions.append(row['retransmissions'])
+                if fl.dropout_rate > 0.0:
+                    hist.participation_frac.append(
+                        row['participation_frac'])
+                if fl.screen:
+                    hist.suspect_frac.append(row['suspect_frac'])
                 self.metrics.observe_round(row)
                 if sink is not None:
                     sink.write_round(row)
@@ -588,6 +641,16 @@ class FLSimulator:
         for n in range(n_rounds):
             t0 = time.time()
             self.key, kr = jax.random.split(self.key)
+            # straggler chain: same fold of the same round key as the
+            # fused body, so host-loop and scanned rounds drop the same
+            # clients bit-for-bit
+            if fl.dropout_rate > 0.0:
+                self._straggler, active = adversary.straggler_step(
+                    jax.random.fold_in(kr, adversary.STRAGGLER_FOLD),
+                    self._straggler, fl.dropout_rate,
+                    fl.straggler_stickiness)
+            else:
+                active = None
             losses, grads = self._per_client_grads(
                 self.params, self.client_x, self.client_y)
 
@@ -626,7 +689,7 @@ class FLSimulator:
 
             ghat, diag = self._run_transport(
                 kind, grads, self.gbar, q, p, kr,
-                jnp.uint32(self._round))
+                jnp.uint32(self._round), active)
 
             if compute_bound and sol is not None:
                 gsum = np.asarray(convergence.g_value_from_probs(

@@ -1,0 +1,86 @@
+"""Bit-sliced sign-vote majority + per-client disagreement, packed domain.
+
+Screening signal for the byzantine defense (repro.adversary.screen): the
+PS already holds every client's packed sign payload words, so the
+majority sign per coordinate and each client's Hamming distance to it
+are computable with word-parallel bit tricks — the suspicion statistic
+costs O(K * W) 32-lane word ops and never unpacks a payload.
+
+Math.  Stack the K gated sign rows (bit 1 <-> sign +1, the wire.format
+convention).  Counting set bits per lane across clients is a
+ripple-carry half-adder over ``NB = K.bit_length()`` count bit-planes
+(max count K < 2**NB, so the final carry never overflows); the majority
+bit is the bit-sliced comparison ``count > n_ok // 2`` — a strict
+majority of +1 votes, ties resolving to -1 — evaluated per 32-lane word
+against the *traced* threshold, MSB-plane first with greater/equal word
+accumulators.  Disagreement is ``popcount((row ^ majority) & lane_mask)``
+with the last word's pad lanes masked out: under the bit-level channel
+those lanes carry garbage flips that must not count as votes or
+disagreements.
+
+Everything here is trace-pure (kernels.ops contract): ``n_ok`` and the
+threshold are traced scalars, only shapes (K, W, n) are static.  Rows a
+caller wants out of the vote (CRC-failed, dropped, already screened)
+enter through the boolean ``gate`` — a gated-off row contributes no
+counts and no threshold weight, exactly like a zero-weight row in the
+decode-once kernel.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.wire import format as fmt
+
+Array = jax.Array
+
+_FULL = np.uint32(0xFFFFFFFF)
+
+
+def lane_mask_words(n: int, n_words: int) -> Array:
+    """(n_words,) uint32 validity mask: all-ones except the last word,
+    which keeps only the low ``n % 32`` lanes (pad lanes are dead)."""
+    masks = np.full((n_words,), _FULL, np.uint32)
+    tail = n % fmt.GROUP
+    if tail and n_words:
+        masks[-1] = np.uint32((1 << tail) - 1)
+    return jnp.asarray(masks)
+
+
+def majority_words(rows: Array, gate: Array, n: int) -> Array:
+    """Majority sign word per payload word over the gated client rows.
+
+    rows: (K, W) uint32 packed sign payload; gate: (K,) bool voters.
+    Returns (W,) uint32 — bit 1 where a strict majority of the gated
+    rows voted +1 (count > n_ok // 2), lane-masked for the tail word.
+    """
+    k, w = rows.shape
+    nb = max(1, int(k).bit_length())
+    gated = jnp.where(gate[:, None], rows, jnp.uint32(0))
+    # ripple-carry half-adder accumulation into nb count bit-planes
+    planes = [jnp.zeros((w,), jnp.uint32) for _ in range(nb)]
+    for r in range(k):
+        carry = gated[r]
+        for j in range(nb):
+            planes[j], carry = planes[j] ^ carry, planes[j] & carry
+    # bit-sliced per-lane compare: count > t, t traced (n_ok // 2)
+    t = jnp.sum(gate.astype(jnp.int32)) // 2
+    gt = jnp.zeros((w,), jnp.uint32)
+    eq = jnp.full((w,), _FULL, jnp.uint32)
+    for j in reversed(range(nb)):
+        tb = jnp.uint32(0) - ((t >> j) & 1).astype(jnp.uint32)  # 0 or ~0
+        cb = planes[j]
+        gt = gt | (eq & cb & ~tb)
+        eq = eq & ~(cb ^ tb)
+    return gt & lane_mask_words(n, w)
+
+
+def disagreement(rows: Array, majority: Array, n: int) -> Array:
+    """(K,) int32 — per client, the number of valid lanes whose sign bit
+    differs from the majority word (popcount of the masked XOR)."""
+    _, w = rows.shape
+    diff = (rows ^ majority[None, :]) & lane_mask_words(n, w)[None, :]
+    return jnp.sum(jax.lax.population_count(diff), axis=-1
+                   ).astype(jnp.int32)

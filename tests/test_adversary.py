@@ -1,0 +1,290 @@
+"""Adversarial cohorts + packed-domain screening (ISSUE 9).
+
+Three layers pinned here:
+
+* ``repro.adversary.clients`` — the attacker transforms are *valid*
+  protocol participants (a sign-flipped frame still CRC-verifies; a
+  scaled range report dequantizes to exactly ``scale x`` the honest
+  modulus) and the straggler/byzantine draws are deterministic pure
+  functions of the run seed (``jax.random.fold_in``, no np.random).
+* ``repro.wire.vote`` — the bit-sliced majority vote and popcount
+  disagreement match an unpacked numpy reference bit for bit,
+  including gated-off voters.
+* ``repro.core.transport`` screening — benign rounds with the screen
+  armed are BIT-EXACT vs unscreened (the gate is exactly 1.0);
+  attacked rounds flag exactly the byzantine cohort; dropped clients
+  are zero-weight rows with renormalized division; the
+  ``min_participation`` floor collapses to sign-only reuse.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import adversary as adv
+from repro.core import quantize as Q
+from repro.core import transport as TR
+from repro.wire import format as wire_fmt
+from repro.wire import packets as wire_pkt
+from repro.wire import vote as wire_vote
+
+K, L = 8, 300
+
+
+def _grads(key, correlated=True):
+    """Correlated per-client gradients — realistic FL rounds share a
+    dominant sign pattern; an i.i.d.-noise cohort has no majority for
+    a flipped client to disagree with (near-tie votes), so the vote
+    screen is only meaningful on correlated inputs."""
+    common = jax.random.normal(key, (L,))
+    noise = jax.random.normal(jax.random.fold_in(key, 1), (K, L))
+    if not correlated:
+        return noise * 0.01
+    return (common[None, :] + 0.3 * noise) * 0.01
+
+
+def _agg(grads, key, **kw):
+    gbar = jnp.abs(jax.random.normal(jax.random.fold_in(key, 2), (L,)))
+    q = jnp.full((K,), 1.0)
+    p = jnp.full((K,), 1.0)
+    kw.setdefault('wire', 'packed')
+    return TR.spfl_aggregate(grads, gbar, q, p, 4, 32,
+                             jax.random.fold_in(key, 3), **kw)
+
+
+# ---------------------------------------------------------------------------
+# attacker transforms are valid protocol participants
+# ---------------------------------------------------------------------------
+
+def test_byzantine_mask_deterministic_and_sized():
+    m1 = adv.byzantine_mask(0, K, 0.25)
+    m2 = adv.byzantine_mask(0, K, 0.25)
+    assert np.array_equal(np.asarray(m1), np.asarray(m2))
+    assert int(np.sum(np.asarray(m1))) == 2          # floor(0.25 * 8)
+    assert int(np.sum(np.asarray(adv.byzantine_mask(0, K, 0.0)))) == 0
+    # different seeds draw different cohorts (seeded permutation)
+    masks = {tuple(np.asarray(adv.byzantine_mask(s, 32, 0.25)))
+             for s in range(4)}
+    assert len(masks) > 1
+
+
+def test_signflip_frames_crc_valid_payload_flipped():
+    key = jax.random.PRNGKey(0)
+    qg = Q.stochastic_quantize(_grads(key), 4, jax.random.fold_in(key, 9))
+    gmn = jnp.min(jnp.abs(_grads(key)), axis=1)
+    gmx = jnp.max(jnp.abs(_grads(key)), axis=1)
+    sign_words, _ = wire_pkt.encode_uplink_batch(
+        qg.sign, qg.qidx, gmn, gmx, bits=4)
+    mask = adv.byzantine_mask(0, K, 0.25)
+    forged = adv.signflip_frames(sign_words, mask, L)
+    # every forged frame still CRC-verifies — the attacker is a valid
+    # protocol participant (xor-fold linearity -> O(1) CRC patch)
+    assert bool(jnp.all(wire_fmt.verify_frame(forged)))
+    lanes = wire_vote.lane_mask_words(L, sign_words.shape[-1] - 5)
+    for i in range(K):
+        h, f = np.asarray(sign_words[i]), np.asarray(forged[i])
+        if bool(mask[i]):
+            # payload inverted under the lane mask, header untouched
+            assert np.array_equal(f[4:-1] ^ h[4:-1], np.asarray(lanes))
+            assert np.array_equal(f[:4], h[:4])
+        else:
+            assert np.array_equal(f, h)
+    # decoded signs of flipped rows are the exact negation
+    dec = wire_pkt.decode_uplink_batch(
+        forged, wire_pkt.encode_uplink_batch(
+            qg.sign, qg.qidx, gmn, gmx, bits=4)[1], n=L, bits=4)
+    want = np.where(np.asarray(mask)[:, None], -np.asarray(qg.sign),
+                    np.asarray(qg.sign))
+    assert np.array_equal(np.asarray(dec.sign), want)
+
+
+def test_flip_signs_and_scale_ranges_masked_rows_only():
+    key = jax.random.PRNGKey(1)
+    qg = Q.stochastic_quantize(_grads(key), 4, jax.random.fold_in(key, 9))
+    mask = adv.byzantine_mask(1, K, 0.25)
+    flipped = adv.flip_signs(qg, mask)
+    assert flipped.sign.dtype == qg.sign.dtype
+    want = np.where(np.asarray(mask)[:, None], -np.asarray(qg.sign),
+                    np.asarray(qg.sign))
+    assert np.array_equal(np.asarray(flipped.sign), want)
+    # scaled ranges: the dequantized modulus is EXACTLY scale x honest
+    # (dequant is affine in (g_min, g_max))
+    gmn = jnp.min(jnp.abs(_grads(key)), axis=1)
+    gmx = jnp.max(jnp.abs(_grads(key)), axis=1)
+    qg2 = qg._replace(g_min=gmn[:, None], g_max=gmx[:, None])
+    scaled = adv.scale_ranges(qg2, mask, 10.0)
+    hon = np.asarray(Q.dequantize_modulus(qg2))
+    att = np.asarray(Q.dequantize_modulus(scaled))
+    np.testing.assert_allclose(att[np.asarray(mask)],
+                               10.0 * hon[np.asarray(mask)], rtol=1e-6)
+    assert np.array_equal(att[~np.asarray(mask)], hon[~np.asarray(mask)])
+
+
+def test_flip_labels():
+    y = jnp.tile(jnp.arange(10), (K, 3))[:, :20]
+    mask = jnp.asarray([True] + [False] * (K - 1))
+    fy = adv.flip_labels(y, mask, n_classes=10)
+    assert np.array_equal(np.asarray(fy[0]), 9 - np.asarray(y[0]))
+    assert np.array_equal(np.asarray(fy[1:]), np.asarray(y[1:]))
+
+
+# ---------------------------------------------------------------------------
+# straggler / dropout processes
+# ---------------------------------------------------------------------------
+
+def test_straggler_deterministic_and_stationary():
+    key = jax.random.PRNGKey(0)
+    st = adv.straggler_init(64)
+    seq1, seq2 = [], []
+    s1 = s2 = st
+    for n in range(400):
+        kn = jax.random.fold_in(key, n)
+        s1, o1 = adv.straggler_step(kn, s1, 0.3, 0.5)
+        s2, o2 = adv.straggler_step(kn, s2, 0.3, 0.5)
+        seq1.append(np.asarray(o1))
+        seq2.append(np.asarray(o2))
+    assert all(np.array_equal(a, b) for a, b in zip(seq1, seq2))
+    # stationary stalled fraction ~= rate (Gilbert calibration) after
+    # burn-in
+    stalled = 1.0 - np.mean(np.stack(seq1[50:]))
+    assert abs(stalled - 0.3) < 0.05, stalled
+
+
+def test_straggler_zero_rate_never_drops():
+    key = jax.random.PRNGKey(3)
+    s = adv.straggler_init(16)
+    for n in range(20):
+        s, out = adv.straggler_step(jax.random.fold_in(key, n), s, 0.0, 0.5)
+        assert bool(jnp.all(out))
+
+
+def test_bernoulli_active_rate_and_determinism():
+    key = jax.random.PRNGKey(7)
+    a1 = adv.bernoulli_active(key, 4096, 0.3)
+    a2 = adv.bernoulli_active(key, 4096, 0.3)
+    assert np.array_equal(np.asarray(a1), np.asarray(a2))
+    assert abs(float(jnp.mean(a1.astype(jnp.float32))) - 0.7) < 0.03
+
+
+# ---------------------------------------------------------------------------
+# bit-sliced vote vs unpacked reference
+# ---------------------------------------------------------------------------
+
+def test_majority_and_disagreement_match_unpacked_reference():
+    rng = np.random.RandomState(0)
+    n, k = 100, 7                   # ragged tail lane in the last word
+    bits = rng.randint(0, 2, size=(k, n)).astype(np.uint32)
+    w = -(-n // 32)
+    rows = np.zeros((k, w), np.uint32)
+    for i in range(k):
+        for j in range(n):
+            rows[i, j // 32] |= np.uint32(bits[i, j]) << np.uint32(j % 32)
+    gate = jnp.asarray([1, 1, 0, 1, 1, 1, 1], jnp.float32)  # one gated off
+    maj = wire_vote.majority_words(jnp.asarray(rows), gate, n)
+    # reference: strict majority of +1 among gated-in voters, ties -> 0
+    votes = bits[np.asarray(gate) > 0].sum(axis=0)
+    ref_bits = (votes > (int(np.sum(np.asarray(gate))) // 2)).astype(
+        np.uint32)
+    ref = np.zeros((w,), np.uint32)
+    for j in range(n):
+        ref[j // 32] |= ref_bits[j] << np.uint32(j % 32)
+    assert np.array_equal(np.asarray(maj), ref)
+    dis = wire_vote.disagreement(jnp.asarray(rows), maj, n)
+    ref_dis = np.array([int(np.sum(bits[i] != ref_bits))
+                        for i in range(k)])
+    assert np.array_equal(np.asarray(dis), ref_dis)
+
+
+# ---------------------------------------------------------------------------
+# transport-level screening contract
+# ---------------------------------------------------------------------------
+
+def test_benign_screen_is_bit_exact():
+    """No attack -> the gate is exactly 1.0 everywhere and the screened
+    aggregate reproduces the unscreened one bit for bit (the headline
+    no-false-positive-cost contract; kernels/ops.py docstring)."""
+    key = jax.random.PRNGKey(0)
+    g = _grads(key)
+    g0, d0 = _agg(g, key)
+    g1, d1 = _agg(g, key, screen=True)
+    assert bool(jnp.all(g0 == g1))
+    assert not bool(jnp.any(d1.suspect))
+    assert d0.suspect is None
+
+
+@pytest.mark.parametrize('wire', ['packed', 'analytic'])
+def test_scaled_attack_screened(wire):
+    key = jax.random.PRNGKey(0)
+    g = _grads(key)
+    mask = adv.byzantine_mask(0, K, 0.25)
+    _, d = _agg(g, key, wire=wire, attack='scaled', byz_mask=mask,
+                attack_scale=50.0, screen=True)
+    assert np.array_equal(np.asarray(d.suspect), np.asarray(mask))
+
+
+def test_signflip_attack_screened_and_recovered():
+    """25% sign-flippers on correlated gradients: the vote screen flags
+    exactly the byzantine cohort and the screened aggregate lands much
+    closer to the honest aggregate than the unscreened one."""
+    key = jax.random.PRNGKey(0)
+    g = _grads(key, correlated=True)
+    mask = adv.byzantine_mask(0, K, 0.25)
+    ghat_honest, _ = _agg(g, key)
+    ghat_att, _ = _agg(g, key, attack='signflip', byz_mask=mask)
+    ghat_scr, d = _agg(g, key, attack='signflip', byz_mask=mask,
+                       screen=True)
+    assert np.array_equal(np.asarray(d.suspect), np.asarray(mask))
+    err_att = float(jnp.linalg.norm(ghat_att - ghat_honest))
+    err_scr = float(jnp.linalg.norm(ghat_scr - ghat_honest))
+    assert err_scr < 0.5 * err_att, (err_scr, err_att)
+
+
+def test_signflip_iid_gradients_are_not_flagged():
+    # i.i.d. cohorts have no sign consensus — a near-tie vote must not
+    # produce false positives on the honest clients
+    key = jax.random.PRNGKey(0)
+    g = _grads(key, correlated=False)
+    mask = adv.byzantine_mask(0, K, 0.25)
+    _, d = _agg(g, key, attack='signflip', byz_mask=mask, screen=True)
+    assert not bool(jnp.any(d.suspect & ~mask))
+
+
+def test_dropout_rows_are_zero_weight_and_renormalized():
+    key = jax.random.PRNGKey(0)
+    g = _grads(key)
+    active = jnp.asarray([True, False, True, True, True, False, True,
+                          True])
+    ghat, d = _agg(g, key, active=active)
+    # an inactive client's gradient is a bit-exact no-op: corrupt it
+    # arbitrarily and nothing changes
+    g_bad = g.at[1].set(1e6).at[5].set(-1e6)
+    ghat2, _ = _agg(g_bad, key, active=active)
+    assert bool(jnp.all(ghat == ghat2))
+    assert np.array_equal(np.asarray(d.active), np.asarray(active))
+    # full participation passed explicitly == the active=None seed path
+    g_full, _ = _agg(g, key, active=jnp.ones((K,), bool))
+    g_none, _ = _agg(g, key)
+    assert bool(jnp.all(g_full == g_none))
+
+
+def test_min_participation_floor_forces_sign_only_reuse():
+    key = jax.random.PRNGKey(0)
+    g = _grads(key)
+    ghat, d = _agg(g, key, min_participation=1.1)   # floor > K: always
+    assert not bool(jnp.any(d.mod_ok))              # all moduli dropped
+    assert bool(jnp.all(jnp.isfinite(ghat)))
+    # floor satisfied -> moduli untouched (p = 1: everyone survives)
+    _, d2 = _agg(g, key, min_participation=0.5)
+    assert bool(jnp.all(d2.mod_ok))
+
+
+def test_screen_with_dropout_under_bitlevel_channel():
+    key = jax.random.PRNGKey(0)
+    g = _grads(key)
+    active = adv.bernoulli_active(jax.random.fold_in(key, 11), K, 0.25)
+    ghat, d = _agg(g, key, channel='bitlevel', screen=True,
+                   active=active, attack='signflip',
+                   byz_mask=adv.byzantine_mask(0, K, 0.25))
+    assert bool(jnp.all(jnp.isfinite(ghat)))
+    assert d.suspicion.shape == (K,)
+    assert np.array_equal(np.asarray(d.active), np.asarray(active))

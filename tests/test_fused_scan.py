@@ -88,12 +88,51 @@ def test_scan_per_round_cadence_runs_finite():
     assert len(h.q_mean) == 4
 
 
+def test_scan_matches_eager_adversarial():
+    """Attack + screen + Gilbert dropout + participation floor inside
+    the fused round: the straggler state rides the scan carry (like the
+    AR(1) shadowing state) and every draw keys off fold_in of the round
+    key — so scan and eager rounds stay BIT-IDENTICAL on the integer
+    telemetry, participation series included."""
+    kw = dict(wire='packed', channel='bitlevel', attack='signflip',
+              attack_frac=0.25, screen=True, dropout_rate=0.25,
+              min_participation=0.25)
+    he = _run(_fl(round_fusion='eager', **kw))
+    hs = _run(_fl(round_fusion='scan', **kw))
+    for k in INT_KEYS + ('participation_frac', 'suspect_frac'):
+        assert getattr(he, k) == getattr(hs, k), k   # bit-exact
+    assert len(hs.participation_frac) == 5
+    assert all(0.0 <= f <= 1.0 for f in hs.participation_frac)
+    assert all(np.isfinite(hs.loss))
+    # determinism: the same seeded config reproduces the exact series
+    hs2 = _run(_fl(round_fusion='scan', **kw))
+    assert hs.participation_frac == hs2.participation_frac
+    assert hs.suspect_frac == hs2.suspect_frac
+
+
+def test_benign_screen_bit_exact_through_training():
+    """A full screened run with no attack reproduces the unscreened
+    run bit for bit — the gate is exactly 1.0 (kernels/ops.py
+    screening contract), so arming the defense costs nothing when
+    nobody misbehaves."""
+    h0 = _run(_fl(wire='packed', round_fusion='scan'), n_rounds=4)
+    h1 = _run(_fl(wire='packed', round_fusion='scan', screen=True),
+              n_rounds=4)
+    assert h0.loss == h1.loss
+    assert h0.test_acc == h1.test_acc
+    assert all(f == 0.0 for f in h1.suspect_frac)
+
+
 # ---------------------------------------------------------------------------
 # zero-sync: whole segment under the transfer guard
 # ---------------------------------------------------------------------------
 
-def test_whole_segment_under_transfer_guard():
-    sim = build_simulator(_fl(round_fusion='scan'), per_device=40,
+@pytest.mark.parametrize('adversarial', [False, True])
+def test_whole_segment_under_transfer_guard(adversarial):
+    kw = (dict(wire='packed', channel='bitlevel', attack='signflip',
+               screen=True, dropout_rate=0.25, min_participation=0.25)
+          if adversarial else {})
+    sim = build_simulator(_fl(round_fusion='scan', **kw), per_device=40,
                           n_test=60)
     body = sim._fused_round_body()
     seg = jax.jit(lambda c, ns: jax.lax.scan(body, c, ns))

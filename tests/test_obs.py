@@ -35,7 +35,7 @@ K, L = 4, 256
 _ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), '..'))
 
 
-def _mk_rec(i=0, votes=False, crc=False):
+def _mk_rec(i=0, votes=False, crc=False, adversarial=False):
     r = RoundTelemetry(
         sign_ok=jnp.ones((K,), bool),
         mod_ok=jnp.asarray([True, False, True, True]),
@@ -48,6 +48,11 @@ def _mk_rec(i=0, votes=False, crc=False):
     if crc:
         r = r._replace(sign_crc_ok=jnp.ones((K,), bool),
                        mod_crc_ok=jnp.zeros((K,), bool))
+    if adversarial:
+        r = r._replace(active=jnp.asarray([True, True, False, True]),
+                       suspect=jnp.asarray([False, True, False, False]),
+                       suspicion=jnp.asarray([0.1, 9.0, 0.0, 0.2],
+                                             jnp.float32))
     return r.with_allocation(jnp.full((K,), 0.9), jnp.full((K,), 0.6),
                              round_idx=jnp.uint32(i))
 
@@ -146,6 +151,117 @@ def test_to_row_matches_round_scalars():
     assert row['mod_erasure_emp'] == 1.0
 
 
+def test_adversarial_fields_in_both_serializers():
+    """active/suspect/suspicion flow through both serializers: NaN
+    scalars when unmeasured (seed paths share a treedef), exact
+    fractions + (K,) vectors when the adversarial path measured them;
+    condensed() passes the O(K) fields through untouched."""
+    plain = _mk_rec()
+    s = round_scalars(plain)
+    assert math.isnan(float(s['participation_frac']))
+    assert math.isnan(float(s['suspect_frac']))
+    assert to_row(plain)['suspect'] is None
+
+    rec = _mk_rec(votes=True, adversarial=True)
+    s = round_scalars(rec)
+    assert float(s['participation_frac']) == pytest.approx(0.75)
+    assert float(s['suspect_frac']) == pytest.approx(0.25)
+    row = to_row(rec)
+    assert row['participation_frac'] == pytest.approx(0.75)
+    assert row['active'] == [True, True, False, True]
+    assert row['suspect'] == [False, True, False, False]
+    assert row['suspicion'] == pytest.approx([0.1, 9.0, 0.0, 0.2])
+    cond = rec.condensed()
+    assert cond.sign_votes is None          # O(l) vector reduced away
+    assert np.array_equal(np.asarray(cond.suspicion),
+                          np.asarray(rec.suspicion))
+    assert np.array_equal(np.asarray(cond.active), np.asarray(rec.active))
+
+
+def test_zero_transfers_with_screening_and_dropout():
+    """The transfer-guard contract extends to the adversarial config:
+    attack + packed-domain screen + dropout gating all run device-side
+    inside the jitted round, telemetry included."""
+    from repro import adversary as adv
+    fl = FLConfig(n_devices=K)
+    key = jax.random.PRNGKey(0)
+    common = jax.random.normal(key, (L,))
+    grads = (common[None, :]
+             + 0.3 * jax.random.normal(jax.random.fold_in(key, 1),
+                                       (K, L))) * 0.01
+    gbar = jnp.abs(jax.random.normal(jax.random.fold_in(key, 2), (L,)))
+    q = jnp.full((K,), 0.9)
+    p = jnp.full((K,), 0.6)
+    byz = adv.byzantine_mask(0, K, 0.25)
+
+    @jax.jit
+    def round_step(ring, kk, i):
+        active = adv.bernoulli_active(
+            jax.random.fold_in(kk, adv.STRAGGLER_FOLD), K, 0.2)
+        ghat, diag = TR.spfl_aggregate(
+            grads, gbar, q, p, fl.quant_bits, fl.b0_bits, kk,
+            wire='packed', channel='bitlevel', round_idx=i,
+            attack='signflip', byz_mask=byz, active=active,
+            screen=True, min_participation=0.25)
+        rec = diag.with_allocation(q, p, round_idx=i).condensed()
+        return ghat, obs_ring.ring_push(ring, rec)
+
+    keys = jax.random.split(jax.random.fold_in(key, 3), 6)
+    idxs = jnp.arange(6, dtype=jnp.uint32)
+    # warm-up round builds the ring prototype
+    _, diag = jax.jit(lambda kk, i: TR.spfl_aggregate(
+        grads, gbar, q, p, fl.quant_bits, fl.b0_bits, kk,
+        wire='packed', channel='bitlevel', round_idx=i,
+        attack='signflip', byz_mask=byz,
+        active=adv.bernoulli_active(
+            jax.random.fold_in(kk, adv.STRAGGLER_FOLD), K, 0.2),
+        screen=True, min_participation=0.25))(keys[0], idxs[0])
+    ring = ring_init(
+        diag.with_allocation(q, p, round_idx=idxs[0]).condensed(), 6)
+    ghat, ring = round_step(ring, keys[0], idxs[0])
+    jax.block_until_ready(ghat)
+    with jax.transfer_guard_device_to_host('disallow'):
+        for i in range(1, 5):
+            ghat, ring = round_step(ring, keys[i], idxs[i])
+        jax.block_until_ready(ghat)
+    rows, _ = obs_ring.flush(ring)
+    assert len(rows) == 5
+    for r in rows:
+        assert r.active.shape == (K,) and r.suspicion.shape == (K,)
+        assert to_row(r)['suspect_frac'] >= 0.0
+
+
+@pytest.mark.skipif(jax.device_count() < 1, reason='needs a device')
+def test_zero_transfers_screening_sharded():
+    """Sharded collective + screening under the device->host guard —
+    the global-view vote/z-score stays a GSPMD computation."""
+    from repro import adversary as adv
+    mesh = jax.make_mesh((jax.device_count(),), ('data',))
+    key = jax.random.PRNGKey(1)
+    common = jax.random.normal(key, (L,))
+    grads = (common[None, :]
+             + 0.3 * jax.random.normal(jax.random.fold_in(key, 1),
+                                       (K, L))) * 0.01
+    gbar = jnp.abs(jax.random.normal(jax.random.fold_in(key, 2), (L,)))
+    q = jnp.full((K,), 0.9)
+    p = jnp.full((K,), 0.6)
+    byz = adv.byzantine_mask(0, K, 0.25)
+    fl = FLConfig(n_devices=K)
+
+    agg = jax.jit(lambda kk, i: TR.spfl_aggregate(
+        grads, gbar, q, p, fl.quant_bits, fl.b0_bits, kk,
+        wire='packed', channel='bitlevel', collective='sharded',
+        mesh=mesh, round_idx=i, attack='signflip', byz_mask=byz,
+        screen=True))
+    g0, d0 = agg(jax.random.fold_in(key, 3), jnp.uint32(0))
+    jax.block_until_ready(g0)
+    with jax.transfer_guard_device_to_host('disallow'):
+        g1, d1 = agg(jax.random.fold_in(key, 4), jnp.uint32(1))
+        jax.block_until_ready((g1, d1.suspect))
+    assert d1.suspect.shape == (K,)
+    assert bool(np.all(np.isfinite(np.asarray(g1))))
+
+
 def test_condensed_preserves_agreement():
     rec = _mk_rec(votes=True)
     cond = rec.condensed()
@@ -221,6 +337,22 @@ def test_jsonl_round_trip(tmp_path, wire, channel, collective):
             assert r.get('sign_crc_ok') is None
     for line in path.read_text().splitlines():
         json.loads(line)                       # strict: no NaN literals
+
+
+def test_jsonl_round_trip_adversarial_fields(tmp_path):
+    fl = dataclasses.replace(FLConfig(n_devices=K), screen=True,
+                             attack='signflip', dropout_rate=0.2)
+    path = tmp_path / 'adv.jsonl'
+    with JsonlSink(str(path), run_manifest(fl)) as sink:
+        sink.write_round(to_row(_mk_rec(0, adversarial=True)))
+    man, rows = read_jsonl(str(path))
+    assert man['config']['screen'] is True
+    assert man['config']['attack'] == 'signflip'
+    r = rows[0]
+    assert r['participation_frac'] == pytest.approx(0.75)
+    assert r['suspect_frac'] == pytest.approx(0.25)
+    assert r['active'] == [True, True, False, True]
+    assert r['suspicion'] == pytest.approx([0.1, 9.0, 0.0, 0.2])
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,62 @@
+"""Federated partitioning (repro.data.partition).
+
+The regression pinned here: at sharp Dirichlet concentration
+(alpha = 0.01) the per-device mixture can put all its mass on a class
+that is ABSENT from the label pool; the multinomial then assigns
+``m > 0`` samples to an empty class and ``rng.choice`` raises.  The fix
+renormalizes the mixture over non-empty classes before drawing.
+"""
+import numpy as np
+import pytest
+
+from repro.data.partition import (
+    dirichlet_partition, iid_partition, stack_client_data,
+)
+
+
+def test_dirichlet_missing_class_does_not_crash():
+    # labels cover classes 0..8 only — class 9 has an empty pool
+    rng = np.random.RandomState(0)
+    labels = rng.randint(0, 9, size=500)
+    for seed in range(8):       # enough draws that alpha=0.01 lands
+        parts = dirichlet_partition(labels, k=8, per_device=40,
+                                    alpha=0.01, seed=seed)
+        assert len(parts) == 8
+        for p in parts:
+            assert len(p) == 40
+            assert np.all(labels[p] < 9)    # never samples the empty class
+
+
+def test_dirichlet_single_present_class():
+    labels = np.full(100, 3)                # only class 3 exists
+    parts = dirichlet_partition(labels, k=4, per_device=30, alpha=0.01,
+                                seed=0)
+    for p in parts:
+        assert len(p) == 30 and np.all(labels[p] == 3)
+
+
+def test_dirichlet_no_valid_labels_raises():
+    with pytest.raises(ValueError, match='no labels'):
+        dirichlet_partition(np.full(10, 42), k=2, per_device=5,
+                            alpha=0.5, seed=0)
+
+
+def test_dirichlet_full_pool_unchanged_contract():
+    labels = np.random.RandomState(1).randint(0, 10, size=2000)
+    parts = dirichlet_partition(labels, k=8, per_device=100, alpha=0.5,
+                                seed=0)
+    assert all(len(p) == 100 for p in parts)
+    # sharp alpha concentrates: each device dominated by few classes
+    sharp = dirichlet_partition(labels, k=8, per_device=100, alpha=0.01,
+                                seed=0)
+    for p in sharp:
+        _, counts = np.unique(labels[p], return_counts=True)
+        assert counts.max() >= 50
+
+
+def test_iid_and_stack_shapes():
+    labels = np.random.RandomState(2).randint(0, 10, size=400)
+    x = np.random.RandomState(3).rand(400, 8, 8, 3).astype(np.float32)
+    parts = iid_partition(labels, k=4, per_device=50, seed=0)
+    cx, cy = stack_client_data(x, labels, parts)
+    assert cx.shape == (4, 50, 8, 8, 3) and cy.shape == (4, 50)
