@@ -1,0 +1,82 @@
+"""ISSUE 10 — population-scale cohort sampling: round wall-clock and
+sampler overhead vs registered-device count N.
+
+Grid: N in {10^3, 10^4, 10^6} (tiny under BENCH_SMOKE), cohort size
+fixed at BENCH_DEVICES, fused-scan dispatch.  Every per-device quantity
+is lazily materialized from (seed, device id) and the cohort sampler is
+an O(K) implicit permutation (repro.population), so the round cost must
+be flat in N; the sampler + cohort-gather cost is timed standalone
+(jitted draw of ids -> power class -> gains -> shard mapping) and
+reported as a fraction of the measured round wall-clock.  Acceptance
+bar (asserted outside BENCH_SMOKE): < 5% overhead at N = 10^6.
+"""
+from __future__ import annotations
+
+import time
+
+from common import DEVICES, ROUNDS, SMOKE, emit, final_acc, run_fl
+
+import jax
+import jax.numpy as jnp
+
+from repro import population as pop
+from repro.configs.base import FLConfig
+
+N_GRID = (100, 1000) if SMOKE else (10 ** 3, 10 ** 4, 10 ** 6)
+SHARDS = 4 if SMOKE else 16
+
+
+def sampler_us(fl: FLConfig, trials: int = 50) -> float:
+    """us per jitted cohort draw: sample_cohort -> lazily-materialized
+    gains (with the shadowing track) -> virtual shard mapping — exactly
+    the per-round population work the fused body adds."""
+    base = pop.population_key(fl.seed)
+
+    @jax.jit
+    def draw(key, n):
+        c = pop.sample_cohort(key, base, fl)
+        g = pop.cohort_gains(base, c.ids, n, fl, shadowing=True)
+        return c.ids, c.present, c.p_w, g, pop.shard_ids(c.ids, SHARDS)
+
+    key = jax.random.PRNGKey(0)
+    jax.block_until_ready(draw(key, jnp.uint32(0)))   # compile
+    t0 = time.time()
+    out = None
+    for i in range(trials):
+        out = draw(jax.random.fold_in(key, i), jnp.uint32(i))
+    jax.block_until_ready(out)
+    return 1e6 * (time.time() - t0) / trials
+
+
+def main() -> None:
+    overhead_at = {}
+    for n_pop in N_GRID:
+        kw = dict(transport='spfl', wire='packed',
+                  population_n=n_pop, cohort_size=DEVICES,
+                  population_shards=SHARDS,
+                  allocation_backend='jax', round_fusion='scan',
+                  allocation_cadence='per_round')
+        h, row = run_fl(f'pop_round_N{n_pop}', **kw)
+        emit(row['name'], row['us_per_call'],
+             f'final_acc={final_acc(h):.4f},'
+             f'host_solver_calls={row["host_solver_calls"]}')
+        s_us = sampler_us(FLConfig(**kw, allocator='barrier', seed=0))
+        frac = s_us / row['us_per_call']
+        overhead_at[n_pop] = frac
+        emit(f'pop_sampler_N{n_pop}', s_us, f'overhead_frac={frac:.4f}')
+        # uniform vs availability sampler cost at the largest N only
+        # (same O(K) shape; availability adds the 4K-candidate thinning)
+        if n_pop == N_GRID[-1]:
+            fl_av = FLConfig(**{**kw, 'cohort_sampler': 'availability'},
+                             allocator='barrier', seed=0)
+            emit(f'pop_sampler_avail_N{n_pop}', sampler_us(fl_av),
+                 f'rounds={ROUNDS}')
+    if not SMOKE:
+        frac = overhead_at[N_GRID[-1]]
+        assert frac < 0.05, (
+            f'sampler+gather overhead {frac:.1%} at N={N_GRID[-1]} '
+            f'exceeds the 5% round budget')
+
+
+if __name__ == '__main__':
+    main()

@@ -47,6 +47,7 @@ SUITES = [
     ('distributed', 'bench_distributed'),    # sharded packed collective
     ('roofline', 'roofline'),                # deliverable (g)
     ('robustness', 'bench_robustness'),      # byzantine + screening
+    ('population', 'bench_population'),      # N-scale cohort sampling
 ]
 
 _ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), '..'))

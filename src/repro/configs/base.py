@@ -364,6 +364,35 @@ class FLConfig:
     ceil(m * K) modulus packets survive a round, every client falls back
     to sign-only reuse (gbar compensation), the paper's own degradation
     mode, instead of averaging a handful of moduli.
+
+    Population mode (repro.population; population/README.md):
+
+    ``population_n``: number of REGISTERED devices N.  0 (default) keeps
+    the legacy cohort == population regime (every one of ``n_devices``
+    clients participates every round).  N > 0 switches the simulator to
+    partial participation: each round samples a ``cohort_size``-device
+    cohort from the N-device population, whose per-device state
+    (annulus placement, power class, availability, shadowing track,
+    byzantine membership) is lazily materialized from (seed, device id)
+    — per-round cost is O(cohort_size), never O(N), so N = 10^6 is
+    free.  Requires ``allocation_backend='jax'`` (the eq. (28) solve
+    must re-run per cohort on-device) and is defined for the
+    spfl/error_free transports.
+
+    ``cohort_size``: sampled clients per round K (0 = ``n_devices``).
+
+    ``cohort_sampler``: 'uniform' draws K distinct ids uniformly without
+    replacement via a seeded O(K) implicit permutation; 'availability'
+    thins an oversampled candidate list by each device's per-round
+    arrival draw against its static availability class — cohorts may
+    come back ragged (absent slots are zero-weight rows, exactly like
+    stragglers).
+
+    ``population_shards``: data shards S materialized for the virtual
+    device -> shard mapping (device d reads shard d mod S).
+
+    ``availability_min``: floor of the static per-device availability
+    class in [availability_min, 1] used by the 'availability' sampler.
     """
     n_devices: int = 20                  # K
     bandwidth_hz: float = 10e6           # B
@@ -410,6 +439,11 @@ class FLConfig:
     screen: bool = False                 # packed-domain byzantine defense
     screen_z: float = 4.0                # robust-z suspicion threshold
     min_participation: float = 0.0       # mod-packet floor -> sign-only
+    population_n: int = 0                # registered devices N (0 = legacy)
+    cohort_size: int = 0                 # sampled clients/round (0 = n_devices)
+    cohort_sampler: str = 'uniform'      # uniform | availability
+    population_shards: int = 64          # data shards S for d -> d mod S
+    availability_min: float = 0.3        # floor of per-device availability
 
     @property
     def noise_psd_w(self) -> float:

@@ -45,11 +45,38 @@ class ChannelState:
     tx_power_w: np.ndarray      # (K,) per-device power budgets P_{k,n}
 
 
+def annulus_radius(u, radius_m: float, min_m: float = 10.0):
+    """Inverse CDF of the uniform-in-annulus radial density.
+
+    For placement uniform over the annulus ``min_m <= r <= radius_m`` the
+    radial CDF is ``F(r) = (r^2 - min_m^2) / (radius_m^2 - min_m^2)``, so
+    ``r = sqrt(min_m^2 + (radius_m^2 - min_m^2) u)``.  The pre-fix form
+    ``min_m + (radius_m - min_m) sqrt(u)`` is only correct at
+    ``min_m = 0``: shifting the disk inverse-CDF by ``min_m`` gives a
+    radial density proportional to ``r - min_m`` instead of ``r``, which
+    vanishes at the exclusion radius — near-PS devices were
+    under-represented relative to uniform placement.  Because path gain
+    ``d^-zeta`` is dominated by the closest devices, the mean gain was
+    biased *down* severely (~2.6x low at zeta = 3.7 for the paper's
+    10 m / 500 m geometry), understating success probabilities in every
+    tracked run.
+    Traceable; shared by the static sampler below and the lazily
+    materialized population placement (``repro.population``).
+    """
+    u = jnp.asarray(u)
+    return jnp.sqrt(min_m ** 2 + (radius_m ** 2 - min_m ** 2) * u)
+
+
 def sample_distances(key, k: int, radius_m: float,
                      min_m: float = 10.0) -> np.ndarray:
-    """Uniform-in-disk device placement around the PS (paper §V: 500 m)."""
+    """Uniform-in-annulus device placement around the PS (paper §V:
+    500 m cell, 10 m exclusion).  Uses the corrected annulus inverse CDF
+    (:func:`annulus_radius`); the old ``min_m + (radius - min_m) sqrt(u)``
+    form was NOT uniform once ``min_m > 0`` and deflated path gains —
+    see the ``annulus_radius`` docstring and the radial-CDF regression
+    test in tests/test_channel.py."""
     u = jax.random.uniform(key, (k,))
-    return np.asarray(min_m + (radius_m - min_m) * jnp.sqrt(u))
+    return np.asarray(annulus_radius(u, radius_m, min_m))
 
 
 def path_gain(distance_m: np.ndarray, zeta: float) -> np.ndarray:

@@ -3,6 +3,24 @@
 IID: shuffle and split into equal shards (2000 samples/device in §V).
 Non-IID: per-device class mixture drawn from Dirichlet(alpha_dir)
 (paper Figs. 2–3 use alpha ∈ {0.5, 0.1, 0.01}).
+
+Population regime (``k * per_device > len(labels)``) — the
+with-replacement contract:
+
+Both partitioners accept ``k`` far larger than the dataset supports
+without replacement; the population layer (``repro.population``) relies
+on this to materialize ``S`` data *shards* for N ≈ 10^6 virtual devices
+(device ``d`` reads shard ``d mod S``; no ``(N, per_device, ...)`` array
+ever exists).  The contract: every shard has exactly ``per_device``
+samples, every index is valid, and shards are (approximately) i.i.d.
+draws from the global label distribution — duplication across shards is
+expected and fine, but two shards must never be *identical copies* of
+each other, which would silently collapse the effective client
+diversity.  ``iid_partition`` therefore draws a FRESH permutation per
+wraparound pass (the old code concatenated copies of the same
+permutation, handing wrapped devices element-wise identical index
+blocks); ``dirichlet_partition`` already samples each device's class
+pools independently (with replacement once a pool runs short).
 """
 from __future__ import annotations
 
@@ -13,11 +31,15 @@ import numpy as np
 
 def iid_partition(labels: np.ndarray, k: int, per_device: int,
                   seed: int = 0) -> List[np.ndarray]:
+    """Equal IID shards; supports the population regime (see module
+    docstring).  When ``k * per_device`` exceeds the dataset, each
+    wraparound pass is a fresh seeded permutation — wrapped shards reuse
+    samples but never repeat another shard's exact index block."""
     rng = np.random.RandomState(seed)
     idx = rng.permutation(len(labels))
     need = k * per_device
-    if need > len(idx):
-        idx = np.concatenate([idx] * (-(-need // len(idx))))
+    while len(idx) < need:
+        idx = np.concatenate([idx, rng.permutation(len(labels))])
     return [idx[i * per_device:(i + 1) * per_device] for i in range(k)]
 
 
@@ -27,7 +49,11 @@ def dirichlet_partition(labels: np.ndarray, k: int, per_device: int,
     """Each device draws its class mixture from Dirichlet(alpha); samples
     are then drawn (with replacement if a class runs short) to give every
     device exactly ``per_device`` samples — matching the paper's equal
-    |D_k| assumption.
+    |D_k| assumption.  This is the with-replacement contract the
+    population layer's virtual device→shard mapping relies on (module
+    docstring): ``k`` may exceed ``len(labels) / per_device`` freely —
+    each device's mixture and index draws remain independent, so no two
+    shards are identical copies.
 
     Classes absent from ``labels`` get their mixture mass renormalized
     away before the multinomial draw — at sharp alpha (0.01) the

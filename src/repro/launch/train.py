@@ -44,8 +44,17 @@ def run(arch: str, steps: int, clients: int, batch: int, seq: int,
         attack_scale: float = 10.0, dropout_rate: float = 0.0,
         screen: bool = False, screen_z: float = 4.0,
         min_participation: float = 0.0,
-        telemetry_path: Optional[str] = None) -> dict:
+        telemetry_path: Optional[str] = None,
+        population_n: int = 0, cohort_size: int = 0,
+        cohort_sampler: str = 'uniform') -> dict:
     cfg = get_arch(arch)
+    if population_n > 0 and round_fusion == 'none':
+        # the population cohort is sampled inside the fused round body;
+        # this driver's non-fused path feeds a one-round-stale host
+        # allocator against static geometry — promote instead of bouncing
+        print("population mode: promoting round_fusion='none' -> 'scan' "
+              '(cohorts are sampled in-trace)', flush=True)
+        round_fusion = 'scan'
     if round_fusion != 'none' and allocation_backend != 'jax':
         # fused rounds solve eq. (28) in-trace; the jax engine is the
         # only one that can — promote instead of bouncing the user
@@ -64,24 +73,32 @@ def run(arch: str, steps: int, clients: int, batch: int, seq: int,
                   attack=attack, attack_frac=attack_frac,
                   attack_scale=attack_scale, dropout_rate=dropout_rate,
                   screen=screen, screen_z=screen_z,
-                  min_participation=min_participation)
+                  min_participation=min_participation,
+                  population_n=population_n, cohort_size=cohort_size,
+                  cohort_sampler=cohort_sampler)
     key = jax.random.PRNGKey(seed)
     params = tf.init_params(cfg, key)
     dim = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
-    print(f'arch={arch} params={dim/1e6:.1f}M clients={clients} '
-          f'transport={transport_kind}', flush=True)
+    k_round = cohort_size or clients
+    print(f'arch={arch} params={dim/1e6:.1f}M clients={k_round}'
+          + (f'/pop={population_n}' if population_n else '')
+          + f' transport={transport_kind}', flush=True)
 
     from repro.core import channel
-    dist_m = channel.sample_distances(jax.random.fold_in(key, 1), clients,
-                                      fl.cell_radius_m)
-    gains = channel.path_gain(np.asarray(dist_m), fl.path_loss_exp)
-    p_w = np.full(clients, fl.tx_power_w)
-    # per-round block-fading gains under allocation_cadence='per_round'
+    gains = None
     gain_traj = None
-    if fl.allocation_cadence == 'per_round':
-        gain_traj = channel.block_fading_trajectory(
-            jax.random.fold_in(key, 2), jnp.asarray(gains, jnp.float32),
-            steps)
+    p_w = np.full(k_round, fl.tx_power_w)
+    if not population_n:
+        # static geometry; population mode materializes per-cohort gains
+        # lazily from (seed, device id) instead (repro.population)
+        dist_m = channel.sample_distances(jax.random.fold_in(key, 1),
+                                          clients, fl.cell_radius_m)
+        gains = channel.path_gain(np.asarray(dist_m), fl.path_loss_exp)
+        # per-round block-fading under allocation_cadence='per_round'
+        if fl.allocation_cadence == 'per_round':
+            gain_traj = channel.block_fading_trajectory(
+                jax.random.fold_in(key, 2),
+                jnp.asarray(gains, jnp.float32), steps)
 
     # sharded packed collective: whatever devices exist, as the client
     # axis (clients must tile the device grid — the shard_map pad inside
@@ -94,8 +111,11 @@ def run(arch: str, steps: int, clients: int, batch: int, seq: int,
         fl, mesh=mesh, extra={'driver': 'launch.train', 'arch': arch,
                               'round_fusion': fl.round_fusion}))
         if telemetry_path else None)
-    toks = synth_tokens(clients * batch * 4, seq + 1, cfg.vocab_size, seed)
-    toks = toks.reshape(clients, batch * 4, seq + 1)
+    # population mode materializes population_shards data rows (virtual
+    # device -> shard mapping), not one row per registered device
+    n_rows = fl.population_shards if population_n else clients
+    toks = synth_tokens(n_rows * batch * 4, seq + 1, cfg.vocab_size, seed)
+    toks = toks.reshape(n_rows, batch * 4, seq + 1)
 
     if fl.round_fusion != 'none':
         return _run_fused(cfg, fl, params, toks, gains, batch, seq,
@@ -190,16 +210,29 @@ def _run_fused(cfg, fl: FLConfig, params, toks, gains, batch: int,
     from repro.obs import ringbuf as obs_ring
 
     seg_len = fl.scan_segment_rounds or max(1, fl.telemetry_flush_every)
-    pool = jnp.asarray(toks)            # (K, batch*4, seq+1) resident
+    pool = jnp.asarray(toks)            # (K | S, batch*4, seq+1) resident
     n_slots = pool.shape[1] // batch
 
-    def batch_fn(n):
-        # traceable batch feed: dynamic slice into the resident pool
-        # keyed on the round index (host feeding would reintroduce the
-        # per-round sync the fused path removes)
-        sl = (n.astype(jnp.int32) % n_slots) * batch
-        t = jax.lax.dynamic_slice_in_dim(pool, sl, batch, axis=1)
-        return {'tokens': t[..., :seq]}
+    if fl.population_n:
+        from repro import population as pop
+
+        def batch_fn(n, ids):
+            # population feed: each cohort slot reads its device's data
+            # shard (d mod S) out of the resident pool — still one
+            # traceable gather, no host involvement
+            rows = jnp.take(pool, pop.shard_ids(ids, pool.shape[0]),
+                            axis=0)
+            sl = (n.astype(jnp.int32) % n_slots) * batch
+            t = jax.lax.dynamic_slice_in_dim(rows, sl, batch, axis=1)
+            return {'tokens': t[..., :seq]}
+    else:
+        def batch_fn(n):
+            # traceable batch feed: dynamic slice into the resident pool
+            # keyed on the round index (host feeding would reintroduce
+            # the per-round sync the fused path removes)
+            sl = (n.astype(jnp.int32) % n_slots) * batch
+            t = jax.lax.dynamic_slice_in_dim(pool, sl, batch, axis=1)
+            return {'tokens': t[..., :seq]}
 
     segment, init_carry = dist.make_fused_fl_scan(
         cfg, fl, gains, batch_fn, transport_kind=transport_kind,
@@ -322,6 +355,19 @@ def main():
     ap.add_argument('--telemetry-out', default=None,
                     help='write per-step RoundTelemetry JSONL (+ run '
                          'manifest) to this path')
+    ap.add_argument('--population-n', type=int, default=0,
+                    help='registered-device population N (0 = legacy '
+                         'cohort == population; N > 0 samples a cohort '
+                         'per round from N virtual devices with lazily '
+                         'materialized state — repro.population)')
+    ap.add_argument('--cohort-size', type=int, default=0,
+                    help='sampled clients per round in population mode '
+                         '(0 = --clients)')
+    ap.add_argument('--cohort-sampler', default='uniform',
+                    choices=['uniform', 'availability'],
+                    help="'availability' thins the cohort by per-device "
+                         'arrival draws (ragged cohorts -> zero-weight '
+                         'rows)')
     args = ap.parse_args()
     launch_env.configure()      # pin platform/x64/XLA flags, record state
     run(args.arch, args.steps, args.clients, args.batch, args.seq,
@@ -336,7 +382,9 @@ def main():
         attack_scale=args.attack_scale, dropout_rate=args.dropout_rate,
         screen=args.screen, screen_z=args.screen_z,
         min_participation=args.min_participation,
-        telemetry_path=args.telemetry_out)
+        telemetry_path=args.telemetry_out,
+        population_n=args.population_n, cohort_size=args.cohort_size,
+        cohort_sampler=args.cohort_sampler)
 
 
 if __name__ == '__main__':

@@ -49,7 +49,7 @@ SCALAR_KEYS = ('payload_bits', 'retransmissions', 'sign_ok_frac',
 # per-client (K,) vectors serialized into JSONL rows when present
 VECTOR_KEYS = ('sign_ok', 'mod_ok', 'accepted', 'sign_flips', 'mod_flips',
                'sign_crc_ok', 'mod_crc_ok', 'retx_attempts', 'q', 'p',
-               'active', 'suspect', 'suspicion')
+               'active', 'suspect', 'suspicion', 'cohort_ids')
 
 
 class RoundTelemetry(NamedTuple):
@@ -90,6 +90,9 @@ class RoundTelemetry(NamedTuple):
     #   packed-domain byzantine defense (weight gated to 0)
     suspicion: Optional[Array] = None     # (K,) f32 — robust-z suspicion
     #   score behind the verdict (adversary.screen, already O(K))
+    cohort_ids: Optional[Array] = None    # (K,) uint32 — global device ids
+    #   of the sampled cohort (population mode, repro.population; None in
+    #   the legacy cohort == population regime)
 
     # ------------------------------------------------------------------
     def with_allocation(self, q: Array, p: Array,

@@ -1,0 +1,18 @@
+"""Population-scale device model: K-device cohorts from N registered."""
+from repro.population.population import (  # noqa: F401
+    COHORT_SAMPLERS,
+    POWER_CLASS_DB,
+    Cohort,
+    byzantine_ids,
+    cohort_gains,
+    cohort_size,
+    combine_active,
+    device_availability,
+    device_distances,
+    device_power_w,
+    permuted_ids,
+    population_key,
+    sample_cohort,
+    shadow_at,
+    shard_ids,
+)

@@ -1,0 +1,345 @@
+"""Population-scale device model — sample K-device cohorts from N≈10^6.
+
+Production wireless FL samples K ≈ tens of clients per round out of
+N ≈ 10^6 *registered* devices (partial participation, arXiv:1909.07972;
+the core scalability challenge of arXiv:2310.05076).  This module makes
+that regime first-class while keeping every per-round cost O(cohort):
+
+* **Lazily materialized per-device state.**  Nothing of size N is ever
+  allocated.  Every registered device's static state — annulus placement
+  (via the corrected inverse CDF ``channel.annulus_radius``), power
+  class, availability class, byzantine membership — is a pure function
+  of ``(population key, device id)`` evaluated on demand for the sampled
+  cohort only, via ``jax.random.fold_in`` on the global device id.
+
+* **Reproducible per-device shadowing.**  A device's AR(1) shadowing
+  track is keyed by ``(device id, round)``, so it is bit-reproducible
+  whether or not the device is sampled — a device seen at rounds 3 and
+  17 lands on the same fading trajectory a continuously-tracked device
+  would.  Exact AR(1) needs the whole innovation history; random access
+  in O(1) state is impossible, so :func:`shadow_at` evaluates the
+  truncated moving-average form over a ``SHADOW_WINDOW``-round window of
+  counter-keyed innovations, renormalized to EXACTLY unit marginal
+  variance (the truncation error lands only in the lag correlations:
+  lag-1 is ``rho (1 - rho^{2W-2}) / (1 - rho^{2W})`` ≈ rho to ~3e-4 at
+  the defaults).  Cost: O(window * cohort) per round, zero carry state.
+
+* **Seeded cohort sampling in O(K).**  Uniform-without-replacement over
+  [0, N) cannot afford the O(N) Gumbel-top-k of ``jax.random.choice``;
+  instead each round keys a Feistel-network bijection on the padded id
+  domain (cycle-walked into [0, N)) and reads the first K positions of
+  that implicit random permutation — K distinct ids, O(K) time and
+  memory, any N up to 2^31.  The ``'availability'`` sampler oversamples
+  candidate positions, thins them by each device's per-round arrival
+  draw weighted by its static availability class, and backfills missing
+  slots with absent candidates (``present=False``) — ragged cohorts
+  reuse the transport's existing zero-weight-row padding, exactly like
+  stragglers.
+
+* **Arrival/dropout layering.**  The arrival process above models
+  device-level availability; the existing Gilbert straggler chain
+  (``repro.adversary``) keeps modeling in-round stalls per cohort
+  *slot*, riding the fused-scan carry unchanged.  The two compose:
+  ``active = present & straggler_active``.
+
+* **Virtual data mapping.**  Device ``d`` reads data shard ``d mod S``
+  (:func:`shard_ids`); only ``(S, per_device, ...)`` is materialized.
+  The partitioners' with-replacement contract (``repro.data.partition``)
+  makes shards i.i.d. draws from the global distribution, so the mapping
+  is measure-preserving.
+
+Determinism contract: every draw folds either the static population key
+(:func:`population_key`, per-device state) or the per-round key handed
+in by the training loop (cohort membership, arrivals).  The fused scan,
+the eager fused body, and the host loop hand the SAME round keys down,
+so all three sample bit-identical cohorts.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FLConfig
+from repro.core import channel
+
+Array = jax.Array
+
+COHORT_SAMPLERS = ('uniform', 'availability')
+
+# fold_in constants — disjoint from every existing stream (channel
+# shadowing 0x5AD0/0x0FAD, adversary 0xB12A/0xD801, compensation +99)
+POPULATION_FOLD = 0x909C     # run seed -> population base key
+PLACEMENT_FOLD = 0x917A      # per-device annulus placement u
+POWER_FOLD = 0x50C5          # per-device power class
+AVAIL_FOLD = 0xA7A1          # per-device availability class
+SHADOW_FOLD = 0x5ADF         # per-(device, round) shadowing innovations
+BYZ_ID_FOLD = 0xB17D         # per-device byzantine membership
+COHORT_FOLD = 0xC040         # per-round cohort permutation key
+ARRIVAL_FOLD = 0x0A21        # per-(device, round) arrival draw
+
+# shadowing window W: marginal variance is renormalized exactly; the
+# truncation only nudges lag correlations (lag-1 within 3e-4 of rho at
+# rho=0.9).  Cost per round is O(W * cohort) counter-keyed normals.
+SHADOW_WINDOW = 32
+
+# candidate oversampling factor of the availability sampler: with mean
+# availability a, P(fewer than K of 4K candidates arrive) is negligible
+# for a >= ~0.3; unfilled slots degrade gracefully to present=False rows
+OVERSAMPLE = 4
+
+# per-device power classes, dB relative to FLConfig.tx_power_dbm — a
+# heterogeneous population has device classes (IoT / handset / gateway),
+# not one radio; class membership is a static per-id draw
+POWER_CLASS_DB = (-3.0, 0.0, 3.0)
+
+_FEISTEL_ROUNDS = 4
+_WALK_STEPS = 32             # cycle-walk cap; P(escape) <= 2^-WALK_STEPS
+_GOLDEN = 0x9E3779B9
+_MIX1 = 0x85EBCA6B
+_MIX2 = 0xC2B2AE35
+
+
+def population_key(seed: int) -> Array:
+    """The static per-device-state base key of a run."""
+    return jax.random.fold_in(jax.random.PRNGKey(seed), POPULATION_FOLD)
+
+
+def cohort_size(fl: FLConfig) -> int:
+    """Effective per-round cohort width K (0 = legacy ``n_devices``)."""
+    return fl.cohort_size or fl.n_devices
+
+
+# ---------------------------------------------------------------------------
+# lazily materialized per-device static state
+# ---------------------------------------------------------------------------
+
+def _per_device_uniform(base_key: Array, fold: int, ids: Array) -> Array:
+    """U(0,1) keyed by (base_key, fold, device id) — O(|ids|)."""
+    k = jax.random.fold_in(base_key, fold)
+    return jax.vmap(
+        lambda i: jax.random.uniform(jax.random.fold_in(k, i), ())
+    )(jnp.asarray(ids, jnp.uint32))
+
+
+def device_distances(base_key: Array, ids: Array, radius_m: float,
+                     min_m: float = 10.0) -> Array:
+    """Seeded annulus placement of the given device ids, (|ids|,) f32.
+    Same corrected inverse CDF as ``channel.sample_distances`` — the
+    population scales up the FIXED sampler, not the biased one."""
+    u = _per_device_uniform(base_key, PLACEMENT_FOLD, ids)
+    return channel.annulus_radius(u, radius_m, min_m).astype(jnp.float32)
+
+
+def device_power_w(base_key: Array, ids: Array, base_w: float,
+                   class_db=POWER_CLASS_DB) -> Array:
+    """Per-device power budget, (|ids|,) f32: ``base_w`` scaled by the
+    device's static power class (uniform over ``class_db``)."""
+    u = _per_device_uniform(base_key, POWER_FOLD, ids)
+    n = len(class_db)
+    cls = jnp.clip((u * n).astype(jnp.int32), 0, n - 1)
+    db = jnp.take(jnp.asarray(class_db, jnp.float32), cls)
+    return jnp.float32(base_w) * 10.0 ** (db / 10.0)
+
+
+def device_availability(base_key: Array, ids: Array,
+                        a_min: float = 0.3) -> Array:
+    """Static per-device availability class in [a_min, 1], (|ids|,) f32
+    — the arrival probability of the 'availability' sampler and its
+    implicit importance weight (devices that are online more are
+    sampled more)."""
+    u = _per_device_uniform(base_key, AVAIL_FOLD, ids)
+    return jnp.float32(a_min) + (1.0 - jnp.float32(a_min)) * u
+
+
+def byzantine_ids(base_key: Array, ids: Array, frac: float) -> Array:
+    """Per-device byzantine membership, (|ids|,) bool.  Population twin
+    of ``adversary.byzantine_mask``: membership is an i.i.d. per-id
+    Bernoulli(frac) (an exact floor(frac*N) committee would need an O(N)
+    permutation), so the byzantine fraction of a cohort is frac in
+    expectation rather than exactly."""
+    u = _per_device_uniform(base_key, BYZ_ID_FOLD, ids)
+    return u < jnp.float32(frac)
+
+
+# ---------------------------------------------------------------------------
+# reproducible per-(device, round) shadowing
+# ---------------------------------------------------------------------------
+
+def shadow_at(base_key: Array, ids: Array, n, rho: float = 0.9,
+              window: int = SHADOW_WINDOW) -> Array:
+    """Shadowing state z_n for each device id at round ``n``, (|ids|,).
+
+    Windowed moving-average evaluation of the stationary AR(1) track
+    (module docstring): ``z_n(d) = c * sum_{j<W} rho^j eps_{n-j}(d)``
+    with ``eps`` standard normals keyed by (device id, round) and
+    ``c = sqrt((1-rho^2)/(1-rho^{2W}))`` so Var[z] == 1 exactly.
+    Stateless and random-access: the same (id, n) pair yields the same
+    value whatever cohort history surrounds it.  ``n`` may be traced
+    (uint32; early rounds fold wrapped counters — still deterministic
+    and identical across eager/scan/host dispatch).
+    """
+    kd = jax.random.fold_in(base_key, SHADOW_FOLD)
+    keys = jax.vmap(lambda i: jax.random.fold_in(kd, i))(
+        jnp.asarray(ids, jnp.uint32))
+    n = jnp.asarray(n, jnp.uint32)
+    js = jnp.arange(window, dtype=jnp.uint32)
+
+    def eps_lag(j):
+        return jax.vmap(
+            lambda k: jax.random.normal(jax.random.fold_in(k, n - j), ())
+        )(keys)
+
+    eps = jax.vmap(eps_lag)(js)                      # (W, |ids|)
+    w = jnp.float32(rho) ** jnp.arange(window, dtype=jnp.float32)
+    c = jnp.sqrt((1.0 - jnp.float32(rho) ** 2)
+                 / (1.0 - jnp.float32(rho) ** (2 * window)))
+    return c * jnp.sum(w[:, None] * eps, axis=0)
+
+
+def cohort_gains(base_key: Array, ids: Array, n, fl: FLConfig,
+                 shadowing: bool = False,
+                 shadow_std_db: float = 4.0) -> Array:
+    """Large-scale gains of the sampled cohort, (|ids|,) f32: lazy
+    placement -> path loss, times the per-device shadowing track when
+    ``shadowing`` (the population twin of ``allocation_cadence=
+    'per_round'``; False freezes each device at its geometric gain)."""
+    d = device_distances(base_key, ids, fl.cell_radius_m)
+    g = d ** (-jnp.float32(fl.path_loss_exp))
+    if shadowing:
+        z = shadow_at(base_key, ids, n)
+        g = channel.shadow_gains(g, z, shadow_std_db)
+    return g.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# O(K) seeded cohort sampling: Feistel permutation + cycle walking
+# ---------------------------------------------------------------------------
+
+def _feistel_apply(x: Array, round_keys: Array, half_bits: int) -> Array:
+    """One pass of the 4-round Feistel bijection on [0, 2^(2*half_bits)).
+    fmix32-style round function; uint32 throughout."""
+    mask = jnp.uint32((1 << half_bits) - 1)
+    lo = x & mask
+    hi = (x >> jnp.uint32(half_bits)) & mask
+    for r in range(_FEISTEL_ROUNDS):
+        f = (lo + jnp.uint32(_GOLDEN)) ^ round_keys[r]
+        f = f ^ (f >> jnp.uint32(16))
+        f = f * jnp.uint32(_MIX1)
+        f = f ^ (f >> jnp.uint32(13))
+        f = f * jnp.uint32(_MIX2)
+        f = f ^ (f >> jnp.uint32(16))
+        hi, lo = lo, hi ^ (f & mask)
+    return (hi << jnp.uint32(half_bits)) | lo
+
+
+def permuted_ids(key: Array, positions: Array, n_pop: int) -> Array:
+    """Positions of an implicit seeded random permutation of [0, n_pop),
+    evaluated in O(|positions|) — never O(n_pop).
+
+    A keyed Feistel network is a bijection on the padded domain
+    [0, 2^bits); cycle-walking (re-applying while the image lands in the
+    pad) restricts it to a bijection on [0, n_pop), so distinct
+    positions map to distinct device ids.  The pad is < n_pop, so each
+    walk step escapes with probability > 1/2; after ``_WALK_STEPS``
+    fixed iterations the residual out-of-range probability is <= 2^-32
+    per element (such an element falls back to its own position —
+    harmlessly, since positions are in range and the event is
+    astronomically rare).
+    """
+    if not 0 < n_pop <= 2 ** 31:
+        raise ValueError(f'population size must be in (0, 2^31], '
+                         f'got {n_pop}')
+    bits = max(2, math.ceil(math.log2(n_pop)))
+    bits += bits % 2                       # even split for the halves
+    half = bits // 2
+    rk = jax.random.bits(key, (_FEISTEL_ROUNDS,), jnp.uint32)
+    pos = jnp.asarray(positions, jnp.uint32)
+    n = jnp.uint32(n_pop)
+    x = _feistel_apply(pos, rk, half)
+    for _ in range(_WALK_STEPS - 1):
+        x = jnp.where(x < n, x, _feistel_apply(x, rk, half))
+    return jnp.where(x < n, x, pos)
+
+
+class Cohort(NamedTuple):
+    """One round's sampled cohort — a pytree, scan-body friendly."""
+    ids: Array       # (K,) uint32 — distinct global device ids
+    present: Array   # (K,) bool — arrived this round (False rows are the
+    #   ragged-cohort padding: zero-weight in the decode-once kernel)
+    p_w: Array       # (K,) f32 — per-device power budgets (power class)
+
+
+def sample_cohort(round_key: Array, base_key: Array,
+                  fl: FLConfig) -> Cohort:
+    """Seeded per-round cohort draw, O(cohort_size) time and memory.
+
+    ``round_key`` is the training loop's per-round key (the fused scan
+    and the host loop derive it identically, so cohorts are bit-equal
+    across dispatch modes); ``base_key`` is :func:`population_key` of
+    the run seed.  ``'uniform'`` reads K positions of the round's
+    implicit permutation — K distinct ids, every device reachable.
+    ``'availability'`` thins ``OVERSAMPLE * K`` candidates by their
+    per-round arrival draw (``U < availability(id)``), keeps the first K
+    arrivals in permutation order, and backfills any shortfall with
+    absent candidates flagged ``present=False``.
+    """
+    k = cohort_size(fl)
+    n_pop = fl.population_n
+    if k > n_pop:
+        raise ValueError(f'cohort_size {k} > population_n {n_pop}')
+    perm_key = jax.random.fold_in(round_key, COHORT_FOLD)
+    if fl.cohort_sampler == 'uniform':
+        ids = permuted_ids(perm_key, jnp.arange(k, dtype=jnp.uint32),
+                           n_pop)
+        present = jnp.ones((k,), bool)
+    elif fl.cohort_sampler == 'availability':
+        m = min(OVERSAMPLE * k, n_pop)
+        cand = permuted_ids(perm_key, jnp.arange(m, dtype=jnp.uint32),
+                            n_pop)
+        avail = device_availability(base_key, cand, fl.availability_min)
+        ak = jax.random.fold_in(round_key, ARRIVAL_FOLD)
+        u = jax.vmap(
+            lambda i: jax.random.uniform(jax.random.fold_in(ak, i), ())
+        )(cand)
+        arrived = u < avail
+        # stable partition: arrivals first (permutation order preserved),
+        # absentees after — slots beyond the arrival count become the
+        # ragged present=False padding
+        rank = jnp.where(arrived, jnp.arange(m),
+                         m + jnp.arange(m))
+        order = jnp.argsort(rank)
+        ids = cand[order[:k]]
+        present = arrived[order[:k]]
+    else:
+        raise ValueError(f'cohort_sampler must be one of '
+                         f'{COHORT_SAMPLERS}, got {fl.cohort_sampler!r}')
+    p_w = device_power_w(base_key, ids, fl.tx_power_w)
+    return Cohort(ids.astype(jnp.uint32), present, p_w)
+
+
+def shard_ids(ids: Array, n_shards: int) -> Array:
+    """Virtual device -> data-shard mapping: device ``d`` reads shard
+    ``d mod S``.  Only (S, per_device, ...) is ever materialized; the
+    partitioners' with-replacement contract makes shards i.i.d. draws
+    from the global distribution, so the modular map is
+    measure-preserving."""
+    return (jnp.asarray(ids, jnp.uint32)
+            % jnp.uint32(n_shards)).astype(jnp.int32)
+
+
+def combine_active(present: Optional[Array],
+                   straggler_active: Optional[Array]) -> Optional[Array]:
+    """Compose the arrival process with the in-round Gilbert straggler
+    chain: a client contributes only if its device arrived AND its slot
+    is not stalled.  ``None`` means 'everyone' on either side (the
+    training loop passes ``present=None`` for the uniform sampler, whose
+    all-True mask carries no information — keeping the legacy telemetry
+    treedef unchanged)."""
+    if present is None:
+        return straggler_active
+    if straggler_active is None:
+        return present
+    return present & straggler_active

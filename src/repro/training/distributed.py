@@ -37,6 +37,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import adversary
+from repro import population as pop
 from repro.configs.base import FLConfig, ModelConfig
 from repro.core import allocation_jax as alloc_jax
 from repro.core import channel
@@ -53,23 +54,26 @@ def init_gbar(params) -> Any:
         lambda p: jnp.zeros(p.shape, jnp.float32), params)
 
 
-def _adversary_closures(fl: FLConfig):
+def _adversary_closures(fl: FLConfig, k: Optional[int] = None):
     """Byzantine mask (run-constant closure) + per-round dropout draw for
     the LLM-scale step.  Unlike the host loop's sticky Gilbert process,
     the fused tree path draws participation i.i.d. per round from the
     round key — no extra scan-carry state, same STRAGGLER_FOLD stream.
     'labelflip' has no packet-level transform here (token labels are
     flipped at data setup by the host loop), so its mask stays unused
-    inside the transport."""
-    byz = (adversary.byzantine_mask(fl.seed, fl.n_devices, fl.attack_frac)
-           if fl.attack != 'none' else None)
+    inside the transport.  ``k`` overrides the client-axis width (the
+    cohort width in population mode, where the slot-static byzantine
+    mask is replaced by per-id membership — population.byzantine_ids)."""
+    k = fl.n_devices if k is None else k
+    byz = (adversary.byzantine_mask(fl.seed, k, fl.attack_frac)
+           if fl.attack != 'none' and not fl.population_n else None)
 
     def draw_active(key):
         if fl.dropout_rate <= 0.0:
             return None
         return adversary.bernoulli_active(
             jax.random.fold_in(key, adversary.STRAGGLER_FOLD),
-            fl.n_devices, fl.dropout_rate)
+            k, fl.dropout_rate)
 
     return byz, draw_active
 
@@ -193,15 +197,18 @@ def make_fused_fl_round(cfg: ModelConfig, fl: FLConfig,
         raise ValueError("fused rounds require allocation_backend='jax' "
                          "(eq. (28) must solve in-trace)")
     opt = optimizer if optimizer is not None else sgd(fl.learning_rate)
-    byz_mask, draw_active = _adversary_closures(fl)
-    K = fl.n_devices
+    population = fl.population_n > 0
+    K = pop.cohort_size(fl) if population else fl.n_devices
+    byz_mask, draw_active = _adversary_closures(fl, K)
+    pop_key = pop.population_key(fl.seed) if population else None
+    ragged = population and fl.cohort_sampler == 'availability'
     p_w = jnp.full((K,), fl.tx_power_w, jnp.float32)
     method = fl.allocator
     max_iters = fl.allocation_max_iters or 6
     alloc_tol = fl.allocation_tol or 1e-5
     early_exit = fl.allocation_early_exit
 
-    def alloc_f32(grads, gbar, stats, gains):
+    def alloc_f32(grads, gbar, stats, gains, p_w_n):
         """In-trace tree-stats eq. (28): exact per-client g2/v, shared
         gb2 (the compensation tree is global at LLM scale), Lemma-2
         delta^2 — all float32, solved by ``solve_traceable``."""
@@ -214,7 +221,7 @@ def make_fused_fl_round(cfg: ModelConfig, fl: FLConfig,
             for g, b in zip(jax.tree.leaves(grads), jax.tree.leaves(gbar)))
         d2 = tr.delta_sq_tree(stats, fl.quant_bits).astype(jnp.float32)
         prob = alloc_jax.problem_from_stats(
-            stats['g2'], gb2, v, d2, gains, p_w, stats['dim'], fl,
+            stats['g2'], gb2, v, d2, gains, p_w_n, stats['dim'], fl,
             dtype=jnp.float32)
 
         def solved(_):
@@ -234,7 +241,8 @@ def make_fused_fl_round(cfg: ModelConfig, fl: FLConfig,
         # to uniform via lax.cond — no device->host sync in the guard
         return jax.lax.cond(gb2s > 0.0, solved, uniform, None)
 
-    def round_fn(params, opt_state, gbar, batch, gains, key, round_idx):
+    def round_fn(params, opt_state, gbar, batch, gains, key, round_idx,
+                 cohort=None):
         def client_loss(params_, bk):
             return tf.loss_fn(params_, cfg, bk['tokens'], bk.get('prefix'),
                               unroll=unroll)
@@ -244,16 +252,30 @@ def make_fused_fl_round(cfg: ModelConfig, fl: FLConfig,
 
         losses, grads = jax.vmap(one)(batch)
 
+        # population mode hands the sampled cohort in: per-device power
+        # class, per-id byzantine membership and arrival raggedness all
+        # derive from the cohort's global ids (lazily, O(cohort))
+        if cohort is not None:
+            p_w_n = cohort.p_w
+            byz_n = (pop.byzantine_ids(pop_key, cohort.ids,
+                                       fl.attack_frac)
+                     if fl.attack != 'none' else None)
+            present = cohort.present if ragged else None
+        else:
+            p_w_n, byz_n, present = p_w, byz_mask, None
+        active = pop.combine_active(present, draw_active(key))
+
         stats = tr.tree_client_stats(grads)
         obj = iters = reason = None
         if transport_kind == 'spfl':
-            q, p, obj, iters, reason = alloc_f32(grads, gbar, stats, gains)
+            q, p, obj, iters, reason = alloc_f32(grads, gbar, stats,
+                                                 gains, p_w_n)
             ghat, _, diag = tr.spfl_aggregate_tree(
                 grads, gbar, q, p, fl, key, stats=stats, wire=fl.wire,
                 channel=fl.channel, mesh=mesh, round_idx=round_idx,
-                attack=fl.attack, byz_mask=byz_mask,
+                attack=fl.attack, byz_mask=byz_n,
                 attack_scale=fl.attack_scale,
-                active=draw_active(key), screen=fl.screen,
+                active=active, screen=fl.screen,
                 screen_z=fl.screen_z,
                 min_participation=fl.min_participation)
         else:
@@ -268,6 +290,8 @@ def make_fused_fl_round(cfg: ModelConfig, fl: FLConfig,
         rec = diag.with_allocation(q, p, objective=obj,
                                    round_idx=round_idx, iters=iters,
                                    exit_reason=reason).condensed()
+        if cohort is not None:
+            rec = rec._replace(cohort_ids=cohort.ids)
         return new_params, new_opt, new_gbar, rec, jnp.mean(losses)
 
     return round_fn
@@ -289,7 +313,14 @@ def make_fused_fl_scan(cfg: ModelConfig, fl: FLConfig, base_gains,
     ``batch_fn(n) -> batch`` must be traceable (e.g. a
     ``lax.dynamic_slice`` into a resident token pool keyed on the round
     index) — a host-side batch feed would reintroduce the per-round
-    sync this path exists to remove.
+    sync this path exists to remove.  In population mode
+    (``fl.population_n > 0``) the signature becomes ``batch_fn(n, ids)
+    -> batch``: the sampled cohort's global device ids select each
+    slot's data (e.g. through ``population.shard_ids``), the cohort is
+    sampled in-trace from the round key, its lazily-materialized gains
+    replace ``base_gains`` (which may be ``None``), and the shadowing
+    track is stateless (``population.shadow_at`` — keyed by device id
+    and round, not carried).
 
     Returns ``(segment, init_carry)``:
 
@@ -304,20 +335,38 @@ def make_fused_fl_scan(cfg: ModelConfig, fl: FLConfig, base_gains,
     opt = optimizer if optimizer is not None else sgd(fl.learning_rate)
     round_fn = make_fused_fl_round(cfg, fl, opt, transport_kind, unroll,
                                    mesh)
-    gains_j = jnp.asarray(base_gains, jnp.float32)
+    population = fl.population_n > 0
+    pop_key = pop.population_key(fl.seed) if population else None
+    gains_j = (None if population
+               else jnp.asarray(base_gains, jnp.float32))
     per_round_gains = (fl.allocation_cadence == 'per_round'
                        and transport_kind == 'spfl')
+
+    def one_round(params, opt_state, gbar, key, z, kr, n):
+        if population:
+            # cohort gather inside the scan body: membership from the
+            # round key (bit-identical to the eager dispatch), state
+            # from the static population key — O(cohort), stateless
+            cohort = pop.sample_cohort(kr, pop_key, fl)
+            gains_n = pop.cohort_gains(pop_key, cohort.ids, n, fl,
+                                       shadowing=per_round_gains)
+            z2, batch = z, batch_fn(n, cohort.ids)
+        elif per_round_gains:
+            z2 = channel.shadow_step(jax.random.fold_in(kr, 0x5AD0), z)
+            gains_n = channel.shadow_gains(gains_j, z2)
+            cohort, batch = None, batch_fn(n)
+        else:
+            z2, gains_n = z, gains_j
+            cohort, batch = None, batch_fn(n)
+        params2, opt2, gbar2, rec, loss = round_fn(
+            params, opt_state, gbar, batch, gains_n, kr, n, cohort)
+        return params2, opt2, gbar2, z2, rec, loss
 
     def body(carry, n):
         params, opt_state, gbar, key, z, ring = carry
         key, kr = jax.random.split(key)
-        if per_round_gains:
-            z2 = channel.shadow_step(jax.random.fold_in(kr, 0x5AD0), z)
-            gains_n = channel.shadow_gains(gains_j, z2)
-        else:
-            z2, gains_n = z, gains_j
-        params2, opt2, gbar2, rec, loss = round_fn(
-            params, opt_state, gbar, batch_fn(n), gains_n, kr, n)
+        params2, opt2, gbar2, z2, rec, loss = one_round(
+            params, opt_state, gbar, key, z, kr, n)
         # the traceable push (the donated jitted wrapper cannot appear
         # inside a scan body)
         ring2 = obs_ring.ring_push(ring, rec)
@@ -327,11 +376,11 @@ def make_fused_fl_scan(cfg: ModelConfig, fl: FLConfig, base_gains,
         opt_state = opt.init(params)
         gbar = init_gbar(params)
         z0 = channel.shadow_init(jax.random.fold_in(key, 0x0FAD),
-                                 fl.n_devices)
+                                 pop.cohort_size(fl) if population
+                                 else fl.n_devices)
         rec_sds = jax.eval_shape(
-            lambda p_, o_, g_, k_: round_fn(
-                p_, o_, g_, batch_fn(jnp.uint32(0)), gains_j, k_,
-                jnp.uint32(0))[3],
+            lambda p_, o_, g_, k_: one_round(
+                p_, o_, g_, k_, z0, k_, jnp.uint32(0))[4],
             params, opt_state, gbar, key)
         ring = obs_ring.ring_init_abstract(rec_sds, seg_len)
         return (params, opt_state, gbar, key, z0, ring)

@@ -58,6 +58,7 @@ from jax.experimental import enable_x64
 from jax.flatten_util import ravel_pytree
 
 from repro import adversary
+from repro import population as pop
 from repro.configs.base import FLConfig
 from repro.core import allocation as alloc
 from repro.core import allocation_jax as alloc_jax
@@ -110,10 +111,55 @@ class FLSimulator:
                  client_y: np.ndarray, test_x: np.ndarray,
                  test_y: np.ndarray, seed: Optional[int] = None):
         self.fl = fl
-        self.K = client_x.shape[0]
-        assert self.K == fl.n_devices, (self.K, fl.n_devices)
+        self._population = fl.population_n > 0
         seed = fl.seed if seed is None else seed
         self._seed = seed
+        if self._population:
+            # population regime: client_x holds the S materialized data
+            # SHARDS of the virtual device -> shard mapping, and K is
+            # the per-round cohort width — everything per-device is
+            # lazily materialized from (seed, device id) by
+            # repro.population, so per-round cost is O(K), never O(N)
+            self.K = pop.cohort_size(fl)
+            if self.K > fl.population_n:
+                raise ValueError(f'cohort_size {self.K} > population_n '
+                                 f'{fl.population_n}')
+            if fl.cohort_sampler not in pop.COHORT_SAMPLERS:
+                raise ValueError(f'cohort_sampler must be one of '
+                                 f'{pop.COHORT_SAMPLERS}, got '
+                                 f'{fl.cohort_sampler!r}')
+            if fl.transport not in ('spfl', 'spfl_retx', 'error_free'):
+                raise ValueError(
+                    'population mode is defined for the spfl/spfl_retx/'
+                    'error_free transports (the analytic baselines pin '
+                    f'static geometry), got {fl.transport!r}')
+            if (fl.cohort_sampler == 'availability'
+                    and fl.transport == 'error_free'):
+                raise ValueError(
+                    "cohort_sampler='availability' produces ragged "
+                    'cohorts, which ride the spfl zero-weight padding — '
+                    'the error_free transport has no active mask')
+            if (fl.transport in ('spfl', 'spfl_retx')
+                    and fl.allocation_backend != 'jax'):
+                raise ValueError(
+                    "population mode requires allocation_backend='jax' "
+                    'on allocating transports — eq. (28) must re-solve '
+                    'per sampled cohort on-device')
+            if fl.compensation == 'last_local':
+                raise ValueError(
+                    "compensation='last_local' is undefined under "
+                    'partial participation: cohort slots have no stable '
+                    'device identity across rounds')
+            if fl.attack == 'labelflip':
+                raise ValueError(
+                    "attack='labelflip' is undefined in population mode:"
+                    ' data shards are shared across virtual devices, so '
+                    'poisoning a shard is not poisoning a device')
+            self._pop_key = pop.population_key(seed)
+        else:
+            self.K = client_x.shape[0]
+            assert self.K == fl.n_devices, (self.K, fl.n_devices)
+            self._pop_key = None
         self.key = jax.random.PRNGKey(seed)
         # host-side eq. (28) solves performed (stays 0 on the jax
         # backend — the per-round no-host-solve guarantee tests assert on)
@@ -126,9 +172,12 @@ class FLSimulator:
         # adversarial cohort: membership fixed once per run by a seeded
         # permutation; label-flip poisons the byzantine rows' data HERE,
         # at setup — that attacker's radio stays honest
+        # population mode draws byzantine membership per-id per cohort
+        # instead (population.byzantine_ids — lazily, from device id)
         self.byz_mask = (adversary.byzantine_mask(seed, self.K,
                                                   fl.attack_frac)
-                         if fl.attack != 'none' else None)
+                         if fl.attack != 'none' and not self._population
+                         else None)
         if fl.attack == 'labelflip':
             n_classes = int(np.max(np.asarray(client_y))) + 1
             self.client_y = adversary.flip_labels(self.client_y,
@@ -138,11 +187,19 @@ class FLSimulator:
         self._straggler = adversary.straggler_init(self.K)
         self.test_x = jnp.asarray(test_x)
         self.test_y = jnp.asarray(test_y)
-        # static wireless geometry (paper: uniform in a 500 m cell)
-        dist = channel.sample_distances(
-            jax.random.fold_in(self.key, 1), self.K, fl.cell_radius_m)
-        self.gains = channel.path_gain(np.asarray(dist), fl.path_loss_exp)
-        self.p_w = np.full(self.K, fl.tx_power_w)
+        if self._population:
+            # geometry/power are lazily materialized per cohort from the
+            # population key; these placeholders only size the closures
+            # of the unused static-geometry baselines
+            self.gains = np.ones(self.K)
+            self.p_w = np.full(self.K, fl.tx_power_w)
+        else:
+            # static wireless geometry (paper: uniform in a 500 m cell)
+            dist = channel.sample_distances(
+                jax.random.fold_in(self.key, 1), self.K, fl.cell_radius_m)
+            self.gains = channel.path_gain(np.asarray(dist),
+                                           fl.path_loss_exp)
+            self.p_w = np.full(self.K, fl.tx_power_w)
         # compensation state (flat modulus vector or per-client stack)
         if fl.compensation == 'last_local':
             self.gbar = jnp.zeros((self.K, self.dim))
@@ -196,13 +253,17 @@ class FLSimulator:
 
         @functools.partial(jax.jit, static_argnames=('kind',))
         def run_transport(kind, grads, gbar, q, p, key, round_idx,
-                          active=None):
+                          active=None, byz=None):
             if kind in ('spfl', 'spfl_retx'):
+                # population mode passes the cohort's per-id byzantine
+                # membership in ``byz``; the legacy regime closes over
+                # the run-static slot mask
                 return transport.spfl_aggregate(
                     grads, gbar, q, p, fl.quant_bits, fl.b0_bits, key,
                     n_retx=1 if kind == 'spfl_retx' else 0, wire=fl.wire,
                     round_idx=round_idx, channel=fl.channel,
-                    attack=fl.attack, byz_mask=byz_mask,
+                    attack=fl.attack,
+                    byz_mask=byz_mask if byz is None else byz,
                     attack_scale=fl.attack_scale, active=active,
                     screen=fl.screen, screen_z=fl.screen_z,
                     min_participation=fl.min_participation)
@@ -342,8 +403,12 @@ class FLSimulator:
         per_round_gains = fl.allocation_cadence == 'per_round'
         allocating = kind in ('spfl', 'spfl_retx')
         dropout = fl.dropout_rate > 0.0
+        population = self._population
+        pop_key = self._pop_key
+        ragged = population and fl.cohort_sampler == 'availability'
+        n_shards = self.client_x.shape[0]
 
-        def alloc_f32(grads, gbar, gains_n):
+        def alloc_f32(grads, gbar, gains_n, p_w_n):
             """Steps 3–4 in-trace, float32 end to end (the f64 closed
             forms live behind an ``enable_x64`` host wrapper and cannot
             appear inside this f32 trace — see allocation_jax)."""
@@ -356,7 +421,7 @@ class FLSimulator:
                 lambda g: quantize_mod.expected_quant_mse(
                     g, fl.quant_bits))(grads)
             prob = alloc_jax.problem_from_stats(
-                g2, gb2, v, d2, gains_n, p_w_j, dim, fl,
+                g2, gb2, v, d2, gains_n, p_w_n, dim, fl,
                 dtype=jnp.float32)
 
             def solved(_):
@@ -378,10 +443,37 @@ class FLSimulator:
             return jax.lax.cond(jnp.max(gb2) > 0.0, solved, uniform, None)
 
         def round_core(params, gbar, kr, z, st, n):
-            losses, grads = self._per_client_grads(
-                params, self.client_x, self.client_y)
+            if population:
+                # cohort gather: O(cohort) draws keyed off the per-round
+                # key kr (identical across none/eager/scan dispatch) and
+                # the static population key — per-device geometry, power
+                # class and shadowing are lazily materialized for the
+                # sampled ids only
+                cohort = pop.sample_cohort(kr, pop_key, fl)
+                shards = pop.shard_ids(cohort.ids, n_shards)
+                xs = jnp.take(self.client_x, shards, axis=0)
+                ys = jnp.take(self.client_y, shards, axis=0)
+                present = cohort.present if ragged else None
+                p_w_n = cohort.p_w
+                byz_n = (pop.byzantine_ids(pop_key, cohort.ids,
+                                           fl.attack_frac)
+                         if fl.attack != 'none' else None)
+            else:
+                cohort = None
+                xs, ys = self.client_x, self.client_y
+                present, p_w_n, byz_n = None, p_w_j, None
 
-            if per_round_gains and allocating:
+            losses, grads = self._per_client_grads(params, xs, ys)
+
+            if population:
+                # shadowing is stateless in population mode — keyed by
+                # (device id, round n), so a device's track is the same
+                # whether or not it was sampled in between (population.
+                # shadow_at); the z carry passes through untouched
+                z2 = z
+                gains_n = pop.cohort_gains(pop_key, cohort.ids, n, fl,
+                                           shadowing=per_round_gains)
+            elif per_round_gains and allocating:
                 z2 = channel.shadow_step(jax.random.fold_in(kr, 0x5AD0), z)
                 gains_n = channel.shadow_gains(gains_j, z2)
             else:
@@ -392,21 +484,24 @@ class FLSimulator:
             # scan and the host loop draw bit-identical dropouts and the
             # existing streams (quantizer, channel) are unperturbed
             if dropout:
-                st2, active = adversary.straggler_step(
+                st2, s_active = adversary.straggler_step(
                     jax.random.fold_in(kr, adversary.STRAGGLER_FOLD),
                     st, fl.dropout_rate, fl.straggler_stickiness)
             else:
-                st2, active = st, None
+                st2, s_active = st, None
+            # arrivals (ragged cohorts) compose with in-round stalls
+            active = pop.combine_active(present, s_active)
 
             obj = iters = reason = None
             if allocating:
-                q, p, obj, iters, reason = alloc_f32(grads, gbar, gains_n)
+                q, p, obj, iters, reason = alloc_f32(grads, gbar,
+                                                     gains_n, p_w_n)
             else:
                 q = jnp.ones(self.K)
                 p = jnp.ones(self.K)
 
             ghat, diag = self._run_transport(kind, grads, gbar, q, p,
-                                             kr, n, active)
+                                             kr, n, active, byz_n)
             new_params = self._apply_update(params, ghat)
 
             if fl.compensation == 'last_global':
@@ -424,6 +519,8 @@ class FLSimulator:
             rec = diag.with_allocation(q, p, objective=obj, round_idx=n,
                                        iters=iters,
                                        exit_reason=reason).condensed()
+            if population:
+                rec = rec._replace(cohort_ids=cohort.ids)
             return new_params, gbar2, z2, st2, rec, jnp.mean(losses)
 
         return round_core
@@ -541,7 +638,9 @@ class FLSimulator:
                 hist.alloc_iters.append(row['alloc_iters'])
                 hist.alloc_exit_reason.append(row['alloc_exit_reason'])
                 hist.retransmissions.append(row['retransmissions'])
-                if fl.dropout_rate > 0.0:
+                if fl.dropout_rate > 0.0 or (
+                        self._population
+                        and fl.cohort_sampler == 'availability'):
                     hist.participation_frac.append(
                         row['participation_frac'])
                 if fl.screen:
@@ -588,14 +687,18 @@ class FLSimulator:
             raise ValueError("compute_bound=True requires "
                              "allocation_backend='numpy'")
         # per-round block-fading gains (seeded off the run seed, so a
-        # fixed-seed run is reproducible end to end)
+        # fixed-seed run is reproducible end to end); population mode
+        # evolves shadowing lazily per cohort instead (pop.shadow_at)
         traj = None
-        if fl.allocation_cadence == 'per_round':
+        if fl.allocation_cadence == 'per_round' and not self._population:
             traj = channel.block_fading_trajectory(
                 jax.random.fold_in(jax.random.PRNGKey(self._seed), 0x0FAD),
                 jnp.asarray(self.gains, jnp.float32), n_rounds)
         gains_j = jnp.asarray(self.gains, jnp.float32)
         p_w_j = jnp.asarray(self.p_w, jnp.float32)
+        pop_mode = self._population
+        ragged = pop_mode and fl.cohort_sampler == 'availability'
+        n_shards = self.client_x.shape[0]
 
         # --- telemetry plumbing (repro.obs): per-round records accumulate
         # in an on-device ring and cross to the host only at flush, so a
@@ -629,7 +732,9 @@ class FLSimulator:
                 hist.alloc_iters.append(row['alloc_iters'])
                 hist.alloc_exit_reason.append(row['alloc_exit_reason'])
                 hist.retransmissions.append(row['retransmissions'])
-                if fl.dropout_rate > 0.0:
+                if fl.dropout_rate > 0.0 or (
+                        self._population
+                        and fl.cohort_sampler == 'availability'):
                     hist.participation_frac.append(
                         row['participation_frac'])
                 if fl.screen:
@@ -641,31 +746,53 @@ class FLSimulator:
         for n in range(n_rounds):
             t0 = time.time()
             self.key, kr = jax.random.split(self.key)
+            if pop_mode:
+                # same per-round key the fused body uses, so all three
+                # dispatch modes sample bit-identical cohorts
+                cohort = pop.sample_cohort(kr, self._pop_key, fl)
+                shards = pop.shard_ids(cohort.ids, n_shards)
+                xs = jnp.take(self.client_x, shards, axis=0)
+                ys = jnp.take(self.client_y, shards, axis=0)
+                present = cohort.present if ragged else None
+                byz_n = (pop.byzantine_ids(self._pop_key, cohort.ids,
+                                           fl.attack_frac)
+                         if fl.attack != 'none' else None)
+            else:
+                cohort, present, byz_n = None, None, None
+                xs, ys = self.client_x, self.client_y
             # straggler chain: same fold of the same round key as the
             # fused body, so host-loop and scanned rounds drop the same
             # clients bit-for-bit
             if fl.dropout_rate > 0.0:
-                self._straggler, active = adversary.straggler_step(
+                self._straggler, s_active = adversary.straggler_step(
                     jax.random.fold_in(kr, adversary.STRAGGLER_FOLD),
                     self._straggler, fl.dropout_rate,
                     fl.straggler_stickiness)
             else:
-                active = None
-            losses, grads = self._per_client_grads(
-                self.params, self.client_x, self.client_y)
+                s_active = None
+            active = pop.combine_active(present, s_active)
+            losses, grads = self._per_client_grads(self.params, xs, ys)
 
             ta = time.time()
             alloc_obj = alloc_iters = alloc_reason = None
             with self.trace.span('alloc_solve'):
                 if kind in ('spfl', 'spfl_retx'):
-                    gains_n = gains_j if traj is None else traj[n]
+                    if pop_mode:
+                        gains_n = pop.cohort_gains(
+                            self._pop_key, cohort.ids,
+                            jnp.uint32(self._round), fl,
+                            shadowing=fl.allocation_cadence == 'per_round')
+                        p_w_n = cohort.p_w
+                    else:
+                        gains_n = gains_j if traj is None else traj[n]
+                        p_w_n = p_w_j
                     if fl.allocation_backend == 'jax':
                         # one on-device dispatch, no host round-trip (the
                         # x64 re-entry keeps the jit cache key stable)
                         with enable_x64():
                             (q, p, _, _, alloc_obj, alloc_iters,
                              alloc_reason) = self._alloc_jax(
-                                grads, self.gbar, gains_n, p_w_j)
+                                grads, self.gbar, gains_n, p_w_n)
                         sol, stats = None, None
                     else:
                         grads_np = np.asarray(grads, np.float64)
@@ -689,7 +816,7 @@ class FLSimulator:
 
             ghat, diag = self._run_transport(
                 kind, grads, self.gbar, q, p, kr,
-                jnp.uint32(self._round), active)
+                jnp.uint32(self._round), active, byz_n)
 
             if compute_bound and sol is not None:
                 gsum = np.asarray(convergence.g_value_from_probs(
@@ -724,6 +851,8 @@ class FLSimulator:
                 q, p, objective=alloc_obj,
                 round_idx=jnp.uint32(self._round - 1),
                 iters=alloc_iters, exit_reason=alloc_reason).condensed()
+            if pop_mode:
+                rec = rec._replace(cohort_ids=cohort.ids)
             if ring is None:
                 ring = obs_ring.ring_init(rec, flush_every)
             ring = obs_ring.push(ring, rec)
@@ -759,10 +888,14 @@ def build_simulator(fl: FLConfig, per_device: int = 500,
     )
     seed = fl.seed if seed is None else seed
     (x, y), (tx, ty) = load_image_dataset(seed=seed)
+    # population mode materializes S data SHARDS, not N device datasets:
+    # virtual device d reads shard d mod S (population.shard_ids) under
+    # the partitioners' with-replacement contract (data/partition.py)
+    k = fl.population_shards if fl.population_n > 0 else fl.n_devices
     if iid:
-        parts = iid_partition(y, fl.n_devices, per_device, seed)
+        parts = iid_partition(y, k, per_device, seed)
     else:
-        parts = dirichlet_partition(y, fl.n_devices, per_device,
+        parts = dirichlet_partition(y, k, per_device,
                                     fl.dirichlet_alpha, seed)
     cx, cy = stack_client_data(x, y, parts)
     return FLSimulator(fl, cx, cy, tx[:n_test], ty[:n_test], seed=seed)

@@ -102,6 +102,51 @@ def test_property_probs_valid(alpha, beta, pow_dbm, bits):
 
 
 # ---------------------------------------------------------------------------
+# uniform-in-annulus placement (the ISSUE 10 bias fix)
+# ---------------------------------------------------------------------------
+
+def test_annulus_radial_cdf():
+    """Statistical regression pin for the placement fix: the radial
+    ECDF must match F(r) = (r^2 - min^2) / (R^2 - min^2).  Checked in
+    two regimes — the paper geometry (10 m / 500 m), and a fat annulus
+    (100 m / 500 m) where the old ``min + (R - min) sqrt(u)`` sampler's
+    worst-case CDF gap is 0.083 (vs 0.0098 at the paper geometry), far
+    above the ~1/sqrt(n) KS noise floor the fixed sampler sits at."""
+    n = 20000
+    for r_min, r_max, tol in ((10.0, 500.0, 0.012), (100.0, 500.0, 0.012)):
+        d = np.sort(CH.sample_distances(jax.random.PRNGKey(0), n, r_max,
+                                        min_m=r_min))
+        assert d[0] >= r_min and d[-1] <= r_max
+        analytic = (d ** 2 - r_min ** 2) / (r_max ** 2 - r_min ** 2)
+        ecdf = (np.arange(n) + 0.5) / n
+        ks = np.max(np.abs(ecdf - analytic))
+        assert ks < tol, f'radial CDF off by {ks:.4f} — placement biased'
+        # mean radius of the uniform annulus: (2/3)(R^3-min^3)/(R^2-min^2)
+        mean_ref = (2.0 / 3.0) * (r_max ** 3 - r_min ** 3) / (
+            r_max ** 2 - r_min ** 2)
+        assert abs(d.mean() - mean_ref) < 3.0
+    # the same KS statistic convicts the pre-fix sampler in the fat
+    # annulus: its density ~ (r - min) vanishes at the exclusion radius
+    # (under-representing near-PS devices -> gains biased DOWN)
+    u = np.asarray(jax.random.uniform(jax.random.PRNGKey(0), (n,)))
+    d_old = np.sort(100.0 + (500.0 - 100.0) * np.sqrt(u))
+    old_cdf = (d_old ** 2 - 100.0 ** 2) / (500.0 ** 2 - 100.0 ** 2)
+    ks_old = np.max(np.abs((np.arange(n) + 0.5) / n - old_cdf))
+    assert ks_old > 0.06, 'regression test lost its power'
+
+
+def test_annulus_radius_inverse_cdf_exact():
+    """annulus_radius is the exact inverse of the radial CDF, and
+    degenerates to the disk form R sqrt(u) at min_m = 0."""
+    u = np.linspace(0.0, 1.0, 11)
+    r = np.asarray(CH.annulus_radius(u, 500.0, 10.0))
+    back = (r ** 2 - 10.0 ** 2) / (500.0 ** 2 - 10.0 ** 2)
+    np.testing.assert_allclose(back, u, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(CH.annulus_radius(u, 500.0, 0.0)),
+                               500.0 * np.sqrt(u), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
 # seeded block-fading gain process (allocation_cadence='per_round')
 # ---------------------------------------------------------------------------
 

@@ -111,16 +111,26 @@ def test_scan_matches_eager_adversarial():
 
 
 def test_benign_screen_bit_exact_through_training():
-    """A full screened run with no attack reproduces the unscreened
-    run bit for bit — the gate is exactly 1.0 (kernels/ops.py
-    screening contract), so arming the defense costs nothing when
-    nobody misbehaves."""
-    h0 = _run(_fl(wire='packed', round_fusion='scan'), n_rounds=4)
-    h1 = _run(_fl(wire='packed', round_fusion='scan', screen=True),
+    """A benign screened run reproduces the unscreened run — bit for
+    bit through the host loop (the gate is exactly 1.0, kernels/ops.py
+    screening contract, and each round is its own dispatch), and within
+    a few compounding ulp under round fusion: arming the screen adds
+    suspect/suspicion to the round's output pytree, so the whole-round
+    XLA graph differs and fusion/FMA choices elsewhere in the round
+    (CNN grads, optimizer) can wobble the f32 stream — same contract as
+    the documented scan-vs-eager drift.  Either way the defense must
+    flag nobody."""
+    h0 = _run(_fl(wire='packed', round_fusion='none'), n_rounds=4)
+    h1 = _run(_fl(wire='packed', round_fusion='none', screen=True),
               n_rounds=4)
-    assert h0.loss == h1.loss
+    assert h0.loss == h1.loss                    # bit-exact per dispatch
     assert h0.test_acc == h1.test_acc
     assert all(f == 0.0 for f in h1.suspect_frac)
+    hs0 = _run(_fl(wire='packed', round_fusion='scan'), n_rounds=4)
+    hs1 = _run(_fl(wire='packed', round_fusion='scan', screen=True),
+               n_rounds=4)
+    np.testing.assert_allclose(hs0.loss, hs1.loss, rtol=1e-5)
+    assert all(f == 0.0 for f in hs1.suspect_frac)
 
 
 # ---------------------------------------------------------------------------

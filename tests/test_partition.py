@@ -60,3 +60,42 @@ def test_iid_and_stack_shapes():
     parts = iid_partition(labels, k=4, per_device=50, seed=0)
     cx, cy = stack_client_data(x, labels, parts)
     assert cx.shape == (4, 50, 8, 8, 3) and cy.shape == (4, 50)
+
+
+def test_iid_wraparound_fresh_permutation():
+    """ISSUE 10 satellite: with len(labels)=120, per_device=60, k=6 the
+    old implementation tiled ONE permutation, making shards 0/2/4 (and
+    1/3/5) element-wise identical.  Each wraparound pass must be a
+    fresh seeded permutation instead."""
+    labels = np.arange(120) % 10
+    parts = iid_partition(labels, k=6, per_device=60, seed=0)
+    assert all(len(p) == 60 for p in parts)
+    for i in range(6):
+        for j in range(i + 1, 6):
+            assert not np.array_equal(parts[i], parts[j]), (i, j)
+    # every index is still valid and each pass covers the dataset, so
+    # any two consecutive shards exhaust one permutation together
+    flat = np.concatenate(parts)
+    assert flat.min() >= 0 and flat.max() < 120
+    assert sorted(np.concatenate(parts[0:2]).tolist()) == list(range(120))
+    # determinism
+    again = iid_partition(labels, k=6, per_device=60, seed=0)
+    for a, b in zip(parts, again):
+        assert np.array_equal(a, b)
+
+
+def test_partition_population_regime_with_replacement():
+    """The population layer maps N virtual devices onto k shards and
+    relies on the with-replacement contract: k may exceed
+    len(labels)/per_device freely, every shard is exactly per_device
+    valid indices, and no two shards are identical copies."""
+    labels = np.random.RandomState(7).randint(0, 10, size=300)
+    for fn, kw in ((iid_partition, {}),
+                   (dirichlet_partition, {'alpha': 0.5})):
+        parts = fn(labels, k=64, per_device=50, seed=0, **kw)
+        assert len(parts) == 64
+        for p in parts:
+            assert len(p) == 50
+            assert p.min() >= 0 and p.max() < 300
+        as_tuples = {tuple(p.tolist()) for p in parts}
+        assert len(as_tuples) == 64      # no duplicated shards

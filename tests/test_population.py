@@ -1,0 +1,341 @@
+"""Population-scale cohort sampling (ISSUE 10, repro.population).
+
+Contracts pinned here:
+
+* the per-round cohort is a seeded O(K) draw — same seed reproduces the
+  same cohort sequence, ids within a round are distinct, every device
+  in [0, N) is reachable, and the implicit Feistel permutation is an
+  exact bijection on [0, N);
+* per-device state is lazily materialized from (population key, device
+  id): placement lands in the annulus, power classes are the declared
+  dB offsets, and the AR(1)-style shadowing track of a device is
+  bit-reproducible at any (id, round) whether or not the device was
+  sampled in between — with unit marginal variance and lag-1
+  correlation ~ rho;
+* the availability sampler thins by per-device arrival draws (more
+  available devices are sampled more) and degrades to ragged
+  present=False slots, which ride the transport's zero-weight padding;
+* the training loop at N = 10^6 stays O(cohort): a whole fused-scan
+  segment runs under ``jax.transfer_guard('disallow')`` with zero host
+  solver calls, and scan == eager bit-identically on the integer
+  telemetry with partial participation on.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import population as pop
+from repro.configs.base import FLConfig
+from repro.training.fl_loop import FLSimulator, build_simulator
+
+INT_KEYS = ('payload_bits', 'retransmissions', 'sign_ok_frac',
+            'mod_ok_frac')
+
+
+def _fl(**kw):
+    base = dict(n_devices=4, allocator='barrier', seed=0,
+                population_n=1000, cohort_size=4, population_shards=6,
+                allocation_backend='jax', telemetry_flush_every=2)
+    base.update(kw)
+    return FLConfig(**base)
+
+
+def _run(fl, n_rounds=5):
+    sim = build_simulator(fl, per_device=40, n_test=60)
+    return sim.run(n_rounds), sim
+
+
+# ---------------------------------------------------------------------------
+# the implicit permutation (O(K) uniform sampling without replacement)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize('n_pop', [7, 37, 64, 1000])
+def test_permuted_ids_is_a_bijection(n_pop):
+    for seed in range(3):
+        key = jax.random.PRNGKey(seed)
+        ids = np.asarray(pop.permuted_ids(
+            key, jnp.arange(n_pop, dtype=jnp.uint32), n_pop))
+        assert sorted(ids.tolist()) == list(range(n_pop))
+
+
+def test_permuted_ids_keyed():
+    ids1 = np.asarray(pop.permuted_ids(
+        jax.random.PRNGKey(0), jnp.arange(16, dtype=jnp.uint32), 1000))
+    ids2 = np.asarray(pop.permuted_ids(
+        jax.random.PRNGKey(1), jnp.arange(16, dtype=jnp.uint32), 1000))
+    assert not np.array_equal(ids1, ids2)
+
+
+def test_permuted_ids_lazy_at_two_billion():
+    """O(positions) evaluation at the 2^31 domain cap — materializing
+    anything O(N) here would be ~8 GiB and fail loudly."""
+    ids = np.asarray(pop.permuted_ids(
+        jax.random.PRNGKey(3), jnp.arange(64, dtype=jnp.uint32),
+        2 ** 31))
+    assert len(set(ids.tolist())) == 64
+    assert ids.max() < 2 ** 31
+
+
+# ---------------------------------------------------------------------------
+# cohort sampler contracts
+# ---------------------------------------------------------------------------
+
+def test_cohort_sampler_deterministic_and_distinct():
+    fl = _fl(cohort_size=16)
+    base = pop.population_key(0)
+    seq1, seq2 = [], []
+    for n in range(6):
+        kr = jax.random.fold_in(jax.random.PRNGKey(9), n)
+        seq1.append(np.asarray(pop.sample_cohort(kr, base, fl).ids))
+        seq2.append(np.asarray(pop.sample_cohort(kr, base, fl).ids))
+    for a, b in zip(seq1, seq2):
+        assert np.array_equal(a, b)              # same seed -> same cohort
+        assert len(set(a.tolist())) == 16        # without replacement
+    # consecutive rounds draw different cohorts (fresh permutation key)
+    assert not np.array_equal(seq1[0], seq1[1])
+
+
+@pytest.mark.parametrize('sampler', ['uniform', 'availability'])
+def test_every_device_reachable(sampler):
+    fl = _fl(population_n=50, cohort_size=10, cohort_sampler=sampler)
+    base = pop.population_key(0)
+    seen = set()
+    for n in range(120):
+        kr = jax.random.fold_in(jax.random.PRNGKey(4), n)
+        c = pop.sample_cohort(kr, base, fl)
+        present = np.asarray(c.present)
+        seen.update(np.asarray(c.ids)[present].tolist())
+        if len(seen) == 50:
+            break
+    assert seen == set(range(50))
+
+
+def test_availability_sampler_is_importance_weighted():
+    """Devices with a higher static availability class must appear more
+    often — the sampler's implicit importance weighting."""
+    fl = _fl(population_n=40, cohort_size=8,
+             cohort_sampler='availability', availability_min=0.05)
+    base = pop.population_key(0)
+    counts = np.zeros(40)
+    for n in range(300):
+        kr = jax.random.fold_in(jax.random.PRNGKey(7), n)
+        c = pop.sample_cohort(kr, base, fl)
+        ids = np.asarray(c.ids)[np.asarray(c.present)]
+        counts[ids] += 1
+    avail = np.asarray(pop.device_availability(
+        base, jnp.arange(40, dtype=jnp.uint32), 0.05))
+    lo = counts[avail < np.median(avail)].mean()
+    hi = counts[avail >= np.median(avail)].mean()
+    assert hi > 1.3 * lo
+
+
+def test_availability_shortfall_degrades_to_ragged():
+    """When arrivals cannot fill K slots, the tail is backfilled with
+    present=False rows — never fewer than K slots, never a crash."""
+    fl = _fl(population_n=40, cohort_size=32,
+             cohort_sampler='availability', availability_min=0.0)
+    base = pop.population_key(1)
+    saw_ragged = False
+    for n in range(40):
+        kr = jax.random.fold_in(jax.random.PRNGKey(2), n)
+        c = pop.sample_cohort(kr, base, fl)
+        assert c.ids.shape == (32,) and c.present.shape == (32,)
+        assert len(set(np.asarray(c.ids).tolist())) == 32
+        pr = np.asarray(c.present)
+        # arrivals are packed first: present is monotone non-increasing
+        assert not np.any(~pr[:-1] & pr[1:])
+        saw_ragged |= not pr.all()
+    assert saw_ragged
+
+
+def test_unknown_sampler_raises():
+    fl = _fl()
+    fl = dataclasses.replace(fl, cohort_sampler='typo')
+    with pytest.raises(ValueError, match='cohort_sampler'):
+        pop.sample_cohort(jax.random.PRNGKey(0), pop.population_key(0),
+                          fl)
+
+
+# ---------------------------------------------------------------------------
+# lazily materialized per-device state
+# ---------------------------------------------------------------------------
+
+def test_device_state_deterministic_and_in_range():
+    base = pop.population_key(3)
+    ids = jnp.asarray([0, 17, 999_983], jnp.uint32)
+    d1 = np.asarray(pop.device_distances(base, ids, 500.0))
+    d2 = np.asarray(pop.device_distances(base, ids, 500.0))
+    assert np.array_equal(d1, d2)
+    assert np.all((d1 >= 10.0) & (d1 <= 500.0))
+    p_w = np.asarray(pop.device_power_w(base, ids, 1e-3))
+    classes = np.asarray([1e-3 * 10 ** (db / 10.0)
+                          for db in pop.POWER_CLASS_DB])
+    for v in p_w:
+        assert np.min(np.abs(classes - v)) < 1e-9
+    a = np.asarray(pop.device_availability(base, ids, 0.3))
+    assert np.all((a >= 0.3) & (a <= 1.0))
+
+
+def test_byzantine_ids_static_and_bernoulli():
+    base = pop.population_key(0)
+    ids = jnp.arange(4000, dtype=jnp.uint32)
+    m1 = np.asarray(pop.byzantine_ids(base, ids, 0.25))
+    m2 = np.asarray(pop.byzantine_ids(base, ids, 0.25))
+    assert np.array_equal(m1, m2)                # static membership
+    assert abs(m1.mean() - 0.25) < 0.03          # Bernoulli(frac)
+    assert not np.asarray(pop.byzantine_ids(base, ids, 0.0)).any()
+
+
+def test_shadow_reproducible_nonconsecutive_rounds():
+    """A device sampled at rounds 3 and 17 lands on the same shadowing
+    track values a continuously-tracked device would — random access by
+    (id, round), no carried state."""
+    base = pop.population_key(5)
+    ids = jnp.asarray([42, 7, 123456], jnp.uint32)
+    z3a = np.asarray(pop.shadow_at(base, ids, 3))
+    z17a = np.asarray(pop.shadow_at(base, ids, 17))
+    # different evaluation order / batch composition / traced round
+    z17b = np.asarray(pop.shadow_at(base, ids[::-1], jnp.uint32(17)))[::-1]
+    z3b = np.asarray(pop.shadow_at(base, ids[:1], 3))
+    # same batch shape -> bit-exact regardless of slot order
+    assert np.array_equal(z17a, z17b)
+    # different batch shape -> XLA may re-fuse the window reduction;
+    # the track is still the same realization to float rounding
+    np.testing.assert_allclose(z3a[0], z3b[0], rtol=2e-6)
+    assert not np.array_equal(z3a, z17a)
+
+
+def test_shadow_statistics():
+    """Exact unit marginal variance (renormalized window), lag-1
+    correlation ~ rho — the windowed-MA evaluation of the stationary
+    AR(1) shadowing model."""
+    base = pop.population_key(0)
+    ids = jnp.arange(200, dtype=jnp.uint32)
+    rounds = np.arange(64, 164)
+    z = np.stack([np.asarray(pop.shadow_at(base, ids, int(n)))
+                  for n in rounds])               # (100 rounds, 200 ids)
+    assert abs(z.mean()) < 0.05
+    assert abs(z.std() - 1.0) < 0.05
+    r1 = np.mean([np.corrcoef(z[:-1, i], z[1:, i])[0, 1]
+                  for i in range(200)])
+    assert 0.82 < r1 < 0.95                       # rho = 0.9
+
+
+def test_cohort_gains_match_fixed_sampler_geometry():
+    """Lazy placement runs through the same corrected annulus inverse
+    CDF as channel.sample_distances — gains are d^-zeta of in-annulus
+    distances."""
+    fl = _fl()
+    base = pop.population_key(0)
+    ids = jnp.arange(64, dtype=jnp.uint32)
+    g = np.asarray(pop.cohort_gains(base, ids, 0, fl))
+    d = np.asarray(pop.device_distances(base, ids, fl.cell_radius_m))
+    np.testing.assert_allclose(g, d ** -fl.path_loss_exp, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# training-loop integration
+# ---------------------------------------------------------------------------
+
+def test_population_scan_matches_eager_partial_participation():
+    """Integer telemetry bit-identity of scan vs eager with cohorts,
+    ragged arrivals AND the Gilbert straggler chain on — the
+    participation series composes both processes."""
+    kw = dict(wire='packed', cohort_sampler='availability',
+              availability_min=0.2, dropout_rate=0.25)
+    he, _ = _run(_fl(round_fusion='eager', **kw))
+    hs, _ = _run(_fl(round_fusion='scan', **kw))
+    for k in INT_KEYS + ('participation_frac',):
+        assert getattr(he, k) == getattr(hs, k), k   # bit-exact
+    assert len(hs.participation_frac) == 5
+    assert all(np.isfinite(hs.loss))
+    # determinism: the same seeded config reproduces the exact series
+    hs2, _ = _run(_fl(round_fusion='scan', **kw))
+    assert hs.participation_frac == hs2.participation_frac
+
+
+def test_population_host_loop_matches_fused():
+    """All three dispatch modes sample the SAME cohorts (the cohort is
+    keyed off the per-round key every mode derives identically)."""
+    h0, s0 = _run(_fl(round_fusion='none'), n_rounds=3)
+    h1, s1 = _run(_fl(round_fusion='eager'), n_rounds=3)
+    for k in INT_KEYS:
+        assert getattr(h0, k) == getattr(h1, k), k
+
+
+def test_population_cohort_ids_in_telemetry(tmp_path):
+    import json
+    path = str(tmp_path / 't.jsonl')
+    fl = _fl(round_fusion='scan', telemetry_path=path)
+    _run(fl, n_rounds=4)
+    rows = [json.loads(line) for line in open(path)]
+    rounds = [r for r in rows if r.get('type') == 'round']
+    assert len(rounds) == 4
+    for r in rounds:
+        ids = r['cohort_ids']
+        assert len(ids) == 4
+        assert all(0 <= i < 1000 for i in ids)
+    # seeded cohorts differ across rounds
+    assert rounds[0]['cohort_ids'] != rounds[1]['cohort_ids']
+
+
+def test_population_million_devices_zero_sync_segment():
+    """Acceptance criterion: N = 10^6, cohort 16, multi-round fused
+    scan — the whole segment runs under transfer_guard('disallow'),
+    zero host eq. (28) solves, and per-round state is O(cohort)."""
+    fl = _fl(population_n=10 ** 6, cohort_size=16, round_fusion='scan',
+             allocation_cadence='per_round')
+    sim = build_simulator(fl, per_device=40, n_test=60)
+    body = sim._fused_round_body()
+    seg = jax.jit(lambda c, ns: jax.lax.scan(body, c, ns))
+    carry = sim._fused_init_carry(4)
+    ns0 = jnp.arange(0, 4, dtype=jnp.uint32)
+    ns1 = jnp.arange(4, 8, dtype=jnp.uint32)     # device-resident
+    carry, _ = seg(carry, ns0)
+    jax.block_until_ready(carry)                 # compile outside guard
+    with jax.transfer_guard('disallow'):
+        carry, losses = seg(carry, ns1)
+        jax.block_until_ready((carry, losses))
+    assert bool(np.all(np.isfinite(np.asarray(losses))))
+    assert sim.host_solver_calls == 0
+    # O(cohort) state: nothing in the carry scales with N
+    for leaf in jax.tree.leaves(carry):
+        assert leaf.size < 10 ** 6
+
+
+def test_population_byzantine_screen_runs():
+    kw = dict(wire='packed', attack='signflip', attack_frac=0.3,
+              screen=True, round_fusion='scan')
+    h, _ = _run(_fl(cohort_size=8, **kw), n_rounds=4)
+    assert all(np.isfinite(h.loss))
+    assert len(h.suspect_frac) == 4
+
+
+# ---------------------------------------------------------------------------
+# guard rails
+# ---------------------------------------------------------------------------
+
+def _sim_args(fl):
+    rng = np.random.RandomState(0)
+    s = fl.population_shards
+    return (fl, rng.randn(s, 2, 32, 32, 3).astype('f4'),
+            rng.randint(0, 10, (s, 2)),
+            rng.randn(4, 32, 32, 3).astype('f4'),
+            rng.randint(0, 10, 4))
+
+
+@pytest.mark.parametrize('kw,match', [
+    (dict(cohort_size=2000), 'cohort_size'),
+    (dict(transport='dds'), 'transport|spfl'),
+    (dict(allocation_backend='numpy'), 'jax'),
+    (dict(compensation='last_local'), 'last_local'),
+    (dict(attack='labelflip'), 'labelflip'),
+    (dict(cohort_sampler='availability', transport='error_free'),
+     'ragged'),
+])
+def test_population_validation(kw, match):
+    with pytest.raises(ValueError, match=match):
+        FLSimulator(*_sim_args(_fl(**kw)))
